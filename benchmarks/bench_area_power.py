@@ -1,0 +1,25 @@
+"""Paper Fig. 4: B-AES vs T-AES area/power scaling with bandwidth."""
+
+from __future__ import annotations
+
+import time
+
+from repro.sim.area_power import scaling_table
+
+
+def run() -> list:
+    rows = []
+    t0 = time.perf_counter()
+    table = scaling_table(16)
+    dt = (time.perf_counter() - t0) * 1e6
+    for r in table:
+        rows.append({
+            "name": f"fig4_bw_x{r['bandwidth_multiple']}",
+            "us_per_call": dt / len(table),
+            "derived": (f"t_aes_area={r['t_aes_area_mm2']}mm2 "
+                        f"b_aes_area={r['b_aes_area_mm2']}mm2 "
+                        f"t_aes_power={r['t_aes_power_mw']}mW "
+                        f"b_aes_power={r['b_aes_power_mw']}mW "
+                        f"area_saving={r['area_saving']:.1%}"),
+        })
+    return rows

@@ -1,0 +1,52 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_area_power, bench_crypt_kernels,
+                        bench_memory_traffic, bench_performance,
+                        bench_secure_step, bench_table3)
+
+SUITES = {
+    "fig4_area_power": bench_area_power,
+    "fig5_memory_traffic": bench_memory_traffic,
+    "fig6_performance": bench_performance,
+    "table3_schemes": bench_table3,
+    "crypt_kernels": bench_crypt_kernels,
+    "secure_step": bench_secure_step,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on suite name")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for suite_name, mod in SUITES.items():
+        if args.only and args.only not in suite_name:
+            continue
+        try:
+            for row in mod.run():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed.append(suite_name)
+            traceback.print_exc()
+            print(f"{suite_name},ERROR,{type(e).__name__}: {e}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

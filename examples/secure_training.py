@@ -1,0 +1,67 @@
+"""End-to-end driver (deliverable b): train a ~100M-param model with the
+full production feature set — SeDA boundary, secure checkpoints,
+preemption + resume, straggler logging.
+
+Full run (a few hundred steps, ~100M params — sized for a real machine;
+use --preset tiny for a CPU-friendly rehearsal of the identical path):
+
+    PYTHONPATH=src python examples/secure_training.py --preset full
+    PYTHONPATH=src python examples/secure_training.py --preset tiny
+
+The script *kills itself* halfway through (simulated preemption) and
+resumes from the last secure checkpoint, proving the fault-tolerance
+path end to end.
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train
+
+PRESETS = {
+    # ~135M params (the full smollm-135m config), a few hundred steps.
+    "full": ["--arch", "smollm-135m", "--steps", "300",
+             "--global-batch", "16", "--seq-len", "512", "--lr", "3e-4"],
+    # Identical code path, reduced config: finishes in ~3 min on CPU.
+    "tiny": ["--arch", "smollm-135m", "--smoke", "--steps", "60",
+             "--global-batch", "8", "--seq-len", "64", "--lr", "2e-3"],
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--scheme", default="seda")
+    args = ap.parse_args()
+
+    base = PRESETS[args.preset] + ["--scheme", args.scheme]
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        total_steps = int(base[base.index("--steps") + 1])
+        half = total_steps // 2
+
+        print(f"=== phase 1: train to step {half}, then 'preemption' ===")
+        phase1 = list(base)
+        phase1[phase1.index("--steps") + 1] = str(half)
+        out1 = train.main(phase1 + ["--ckpt-dir", ckpt_dir,
+                                    "--ckpt-every", str(max(10, half // 3)),
+                                    "--log-every", "10"])
+        print(f"phase 1 done at loss {out1['last_loss']:.3f} — simulating "
+              f"preemption (process state discarded)\n")
+
+        print("=== phase 2: cold restart, resume from secure checkpoint ===")
+        out2 = train.main(base + ["--ckpt-dir", ckpt_dir,
+                                  "--ckpt-every", "1000000",
+                                  "--log-every", "10"])
+        print(f"resumed and finished: loss {out1['first_loss']:.3f} -> "
+              f"{out2['last_loss']:.3f} over {total_steps} steps "
+              f"(phase-2 ran {out2['steps']} steps after restore)")
+        assert out2["steps"] < total_steps, "resume did not skip done steps"
+    print("=== secure_training OK ===")
+
+
+if __name__ == "__main__":
+    main()

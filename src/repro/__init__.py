@@ -1,0 +1,21 @@
+"""repro — SeDA (Secure and Efficient DNN Accelerators) as a multi-pod
+JAX/Pallas framework.
+
+Public API surface:
+
+    from repro import configs            # the 10 assigned architectures
+    from repro.core import SecureExecutor, SecureKeys, protect, unprotect
+    from repro.checkpoint.secure_ckpt import save_checkpoint, load_checkpoint
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.cells import build_cell
+
+Entry points:
+
+    python -m repro.launch.train     # training driver (--arch ... --scheme seda)
+    python -m repro.launch.serve     # serving driver
+    python -m repro.launch.dryrun    # multi-pod dry-run sweep
+    python -m repro.launch.roofline  # roofline report
+    python -m repro.launch.hillclimb # §Perf variant measurement
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,50 @@
+"""Architecture registry: the 10 assigned archs as selectable configs.
+
+``get_arch(name)`` / ``ARCHS`` are the public entry points used by the
+launcher (``--arch <id>``), the dry-run, and the smoke tests.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import SHAPES, ArchDef, Shape  # noqa: F401
+from repro.configs.deepseek_v3_671b import ARCH as _deepseek_v3
+from repro.configs.granite_34b import ARCH as _granite
+from repro.configs.jamba_v01_52b import ARCH as _jamba
+from repro.configs.mamba2_780m import ARCH as _mamba2
+from repro.configs.minitron_4b import ARCH as _minitron4
+from repro.configs.minitron_8b import ARCH as _minitron8
+from repro.configs.olmoe_1b_7b import ARCH as _olmoe
+from repro.configs.pixtral_12b import ARCH as _pixtral
+from repro.configs.seamless_m4t_large_v2 import ARCH as _seamless
+from repro.configs.smollm_135m import ARCH as _smollm
+
+ARCHS: dict[str, ArchDef] = {a.name: a for a in (
+    _minitron4, _minitron8, _granite, _smollm, _mamba2,
+    _pixtral, _seamless, _jamba, _olmoe, _deepseek_v3,
+)}
+
+# Optimizer-state dtype overrides: the largest configs keep Adam moments
+# in bf16 so the 512-chip multi-pod training cell fits v5e HBM.
+OPT_DTYPE_OVERRIDES = {
+    "deepseek-v3-671b": "bfloat16",
+    "jamba-v0.1-52b": "bfloat16",
+    "granite-34b": "bfloat16",
+}
+
+
+def get_arch(name: str) -> ArchDef:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def cells(include_skips: bool = False):
+    """All (arch, shape) dry-run cells, honoring the documented skips."""
+    out = []
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            if arch.supports(shape):
+                out.append((arch, shape))
+            elif include_skips:
+                out.append((arch, shape))
+    return out

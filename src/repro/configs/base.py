@@ -1,0 +1,69 @@
+"""Shared config machinery: shapes, arch definitions, sharding rules."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+__all__ = ["Shape", "SHAPES", "ArchDef", "DEFAULT_RULES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+# The assigned input-shape set (same four for every LM-family arch).
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+# Logical-axis -> mesh-axis sharding rules (MaxText-style).  The
+# planner (launch/sharding.py) checks divisibility per tensor dim and
+# falls back to replication when a rule does not divide.
+DEFAULT_RULES = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",     # EP over the model axis
+    "experts_r": None,      # router output dim: replicated
+    "embed": "data",        # FSDP: shard d_model over the data axis
+    "lora": None,
+    "head_dim": None,
+    "layers": None,
+    "conv_k": None,
+    "vision": None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    """One assigned architecture: exact config + reduced smoke config."""
+
+    name: str
+    family: str                      # dense | ssm | vlm | audio | hybrid | moe
+    kind: str                        # lm | encdec
+    make_config: Callable[[], Any]
+    make_smoke_config: Callable[[], Any]
+    source: str                      # provenance note from the assignment
+    rules: dict = dataclasses.field(default_factory=dict)  # rule overrides
+    # Shape applicability:
+    sub_quadratic: bool = False      # runs long_500k
+    notes: str = ""
+
+    def supports(self, shape: Shape) -> bool:
+        if shape.name == "long_500k" and not self.sub_quadratic:
+            return False  # full-attention archs skip (DESIGN.md §5)
+        return True
+
+    def sharding_rules(self) -> dict:
+        rules = dict(DEFAULT_RULES)
+        rules.update(self.rules)
+        return rules

@@ -1,0 +1,57 @@
+"""deepseek-v3-671b — MLA + 256-expert MoE [arXiv:2412.19437; hf].
+
+[moe] 61L d_model=7168 128H d_ff=2048 (per routed expert) vocab=129280,
+MoE: 1 shared + 256 routed experts top-8, first 3 layers dense
+(d_ff 18432).  MLA: q_lora 1536, kv_lora 512, nope 128, rope 64, v 128.
+The MTP head is omitted (not exercised by the assigned shapes;
+recorded in DESIGN.md §5).
+"""
+
+from repro.configs.base import ArchDef
+from repro.models.lm import LMConfig
+from repro.models.mla import MLAConfig
+from repro.models.moe import MoEConfig
+
+DENSE_PREFIX_FF = 18432  # d_ff of the 3 dense prefix layers (DSv3 report)
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="deepseek-v3-671b",
+        n_layers=61, d_model=7168, n_heads=128, n_kv=128, head_dim=128,
+        d_ff=DENSE_PREFIX_FF, vocab=129280,
+        mixer="mla", ffn="moe", moe_every=1, moe_start_layer=3,
+        tie_embeddings=False,
+        mla=MLAConfig(d_model=7168, n_heads=128, q_lora_rank=1536,
+                      kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+                      v_head_dim=128),
+        moe=MoEConfig(n_experts=256, top_k=8, d_model=7168, d_ff=2048,
+                      n_shared=1, shared_d_ff=2048, capacity_factor=1.25),
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="deepseek-v3-671b-smoke",
+        n_layers=4, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=128, vocab=256, dtype="float32",
+        mixer="mla", ffn="moe", moe_every=1, moe_start_layer=1,
+        tie_embeddings=False,
+        q_block=16, kv_block=16, remat="none",
+        mla=MLAConfig(d_model=64, n_heads=4, q_lora_rank=32, kv_lora_rank=16,
+                      qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
+        moe=MoEConfig(n_experts=8, top_k=2, d_model=64, d_ff=32, n_shared=1,
+                      shared_d_ff=32, capacity_factor=2.0),
+    )
+
+
+ARCH = ArchDef(
+    name="deepseek-v3-671b", family="moe", kind="lm",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    source="arXiv:2412.19437; hf",
+    rules={"heads": "model"},  # 128 heads / 16 = 8 per shard
+    notes="MLA compressed KV cache (c_kv 512 + k_pe 64 per token) is the "
+          "decode-cell boundary tensor.  256 routed experts EP-shard "
+          "over model=16; optimizer state in bf16 so the multi-pod cell "
+          "fits v5e HBM (see configs/__init__.OPT_DTYPE_OVERRIDES).",
+)

@@ -1,0 +1,37 @@
+"""granite-34b — llama-arch code model [arXiv:2405.04324; hf].
+
+[dense] 88L d_model=6144 48H (GQA kv=1, i.e. MQA) d_ff=24576 vocab=49152.
+"""
+
+from repro.configs.base import ArchDef
+from repro.models.lm import LMConfig
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="granite-34b",
+        n_layers=88, d_model=6144, n_heads=48, n_kv=1, head_dim=128,
+        d_ff=24576, vocab=49152,
+        mixer="attn", ffn="dense", gated_ffn=False,  # GPT-BigCode plain MLP
+        tie_embeddings=True,
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="granite-34b-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv=1, head_dim=16,
+        d_ff=128, vocab=256, dtype="float32",
+        mixer="attn", ffn="dense", gated_ffn=False,
+        q_block=16, kv_block=16, remat="none",
+    )
+
+
+ARCH = ArchDef(
+    name="granite-34b", family="dense", kind="lm",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    source="arXiv:2405.04324; hf",
+    rules={"kv_heads": None},  # MQA: the single KV head replicates
+    notes="MQA (kv=1): KV projections/cache replicate over the model "
+          "axis; q heads TP-shard 48/16.",
+)

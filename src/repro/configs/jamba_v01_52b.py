@@ -1,0 +1,52 @@
+"""jamba-v0.1-52b — Mamba+attention 1:7 interleave, MoE [arXiv:2403.19887; hf].
+
+[hybrid] 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536,
+MoE 16 experts top-2.  Period-8 blocks: attention at in-block index 3,
+mamba elsewhere; MoE FFN on every 2nd layer.  (Jamba v0.1 uses Mamba-1
+mixers; we instantiate the SSD/Mamba-2 block — the state-space mixer of
+this framework — with Jamba's state size 16.  Recorded in DESIGN.md.)
+"""
+
+from repro.configs.base import ArchDef
+from repro.models.lm import LMConfig
+from repro.models.mamba2 import Mamba2Config
+from repro.models.moe import MoEConfig
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="jamba-v0.1-52b",
+        n_layers=32, d_model=4096, n_heads=32, n_kv=8, head_dim=128,
+        d_ff=14336, vocab=65536,
+        mixer="mamba", attn_every=8, attn_offset=3,
+        ffn="moe", moe_every=2, moe_offset=1, tie_embeddings=True,
+        mamba=Mamba2Config(d_model=4096, d_inner=8192, head_dim=128,
+                           d_state=16, n_groups=1, d_conv=4),
+        moe=MoEConfig(n_experts=16, top_k=2, d_model=4096, d_ff=14336,
+                      capacity_factor=1.25),
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="jamba-v0.1-52b-smoke",
+        n_layers=8, d_model=32, n_heads=4, n_kv=2, head_dim=8,
+        d_ff=64, vocab=256, dtype="float32",
+        mixer="mamba", attn_every=8, attn_offset=3,
+        ffn="moe", moe_every=2, moe_offset=1,
+        q_block=16, kv_block=16, ssd_chunk=8, remat="none",
+        mamba=Mamba2Config(d_model=32, d_inner=64, head_dim=16, d_state=8,
+                           n_groups=1, d_conv=4),
+        moe=MoEConfig(n_experts=4, top_k=2, d_model=32, d_ff=64,
+                      capacity_factor=2.0),
+    )
+
+
+ARCH = ArchDef(
+    name="jamba-v0.1-52b", family="hybrid", kind="lm",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    source="arXiv:2403.19887; hf",
+    sub_quadratic=True,  # only 4/32 layers hold KV: runs long_500k
+    notes="1:7 attn:mamba, MoE every 2nd layer.  long_500k KV cache "
+          "exists only for the 4 attention layers.",
+)

@@ -1,0 +1,43 @@
+"""mamba2-780m — SSD (state-space duality) [arXiv:2405.21060; unverified].
+
+[ssm] 48L d_model=1536 (attn-free) vocab=50280, ssm_state=128.
+d_inner = 2*d_model = 3072, head_dim 64 -> 48 SSD heads, conv width 4.
+"""
+
+from repro.configs.base import ArchDef
+from repro.models.lm import LMConfig
+from repro.models.mamba2 import Mamba2Config
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="mamba2-780m",
+        n_layers=48, d_model=1536, n_heads=0, n_kv=0, head_dim=1,
+        d_ff=0, vocab=50280,
+        mixer="mamba", ffn="none", tie_embeddings=True,
+        ssd_chunk=512,  # hillclimbed: -6%% memory term vs 256 (EXPERIMENTS.md)
+        mamba=Mamba2Config(d_model=1536, d_inner=3072, head_dim=64,
+                           d_state=128, n_groups=1, d_conv=4),
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="mamba2-780m-smoke",
+        n_layers=2, d_model=32, n_heads=0, n_kv=0, head_dim=1,
+        d_ff=0, vocab=256, dtype="float32",
+        mixer="mamba", ffn="none", ssd_chunk=16, remat="none",
+        mamba=Mamba2Config(d_model=32, d_inner=64, head_dim=16, d_state=8,
+                           n_groups=1, d_conv=4),
+    )
+
+
+ARCH = ArchDef(
+    name="mamba2-780m", family="ssm", kind="lm",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    source="arXiv:2405.21060; unverified",
+    sub_quadratic=True,  # O(1) decode state: runs long_500k
+    notes="Attention-free: SeDA's layer MACs cover the SSD block "
+          "projections; the SSM state never crosses the untrusted "
+          "boundary (stays on-chip).",
+)

@@ -1,0 +1,34 @@
+"""minitron-4b — pruned Nemotron [arXiv:2407.14679; hf].
+
+[dense] 32L d_model=3072 24H (GQA kv=8) d_ff=9216 vocab=256000.
+"""
+
+from repro.configs.base import ArchDef
+from repro.models.lm import LMConfig
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="minitron-4b",
+        n_layers=32, d_model=3072, n_heads=24, n_kv=8, head_dim=128,
+        d_ff=9216, vocab=256000,
+        mixer="attn", ffn="dense", tie_embeddings=True,
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="minitron-4b-smoke",
+        n_layers=2, d_model=96, n_heads=6, n_kv=2, head_dim=16,
+        d_ff=192, vocab=256, dtype="float32",
+        mixer="attn", ffn="dense", q_block=16, kv_block=16, remat="none",
+    )
+
+
+ARCH = ArchDef(
+    name="minitron-4b", family="dense", kind="lm",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    source="arXiv:2407.14679; hf",
+    notes="24 heads not divisible by model=16: attention heads replicate "
+          "over the model axis; ffn/vocab TP-shard (planner fallback).",
+)

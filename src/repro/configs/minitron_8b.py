@@ -1,0 +1,32 @@
+"""minitron-8b — pruned Nemotron [arXiv:2407.14679; hf].
+
+[dense] 32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+"""
+
+from repro.configs.base import ArchDef
+from repro.models.lm import LMConfig
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="minitron-8b",
+        n_layers=32, d_model=4096, n_heads=32, n_kv=8, head_dim=128,
+        d_ff=16384, vocab=256000,
+        mixer="attn", ffn="dense", tie_embeddings=True,
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="minitron-8b-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=128, vocab=256, dtype="float32",
+        mixer="attn", ffn="dense", q_block=16, kv_block=16, remat="none",
+    )
+
+
+ARCH = ArchDef(
+    name="minitron-8b", family="dense", kind="lm",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    source="arXiv:2407.14679; hf",
+)

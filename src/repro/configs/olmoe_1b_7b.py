@@ -1,0 +1,40 @@
+"""olmoe-1b-7b — 64 experts top-8 [arXiv:2409.02060; hf].
+
+[moe] 16L d_model=2048 16H (GQA kv=16 = MHA) d_ff=1024 (per expert)
+vocab=50304, MoE 64e top-8 on every layer.
+"""
+
+from repro.configs.base import ArchDef
+from repro.models.lm import LMConfig
+from repro.models.moe import MoEConfig
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="olmoe-1b-7b",
+        n_layers=16, d_model=2048, n_heads=16, n_kv=16, head_dim=128,
+        d_ff=1024, vocab=50304,
+        mixer="attn", ffn="moe", moe_every=1, tie_embeddings=True,
+        moe=MoEConfig(n_experts=64, top_k=8, d_model=2048, d_ff=1024,
+                      capacity_factor=1.25),
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="olmoe-1b-7b-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=32, vocab=256, dtype="float32",
+        mixer="attn", ffn="moe", moe_every=1,
+        q_block=16, kv_block=16, remat="none",
+        moe=MoEConfig(n_experts=8, top_k=2, d_model=64, d_ff=32,
+                      capacity_factor=2.0),
+    )
+
+
+ARCH = ArchDef(
+    name="olmoe-1b-7b", family="moe", kind="lm",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    source="arXiv:2409.02060; hf",
+    notes="64 experts EP-shard over model=16 (4/shard).",
+)

@@ -1,0 +1,43 @@
+"""pixtral-12b — pixtral-ViT + mistral-nemo decoder
+[hf:mistralai/Pixtral-12B-2409; unverified].
+
+[vlm] 40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072.
+The vision frontend is a STUB: input_specs() provides precomputed patch
+embeddings (B, 256, d_vision=1024); a learned projector maps them into
+the decoder's embedding space.
+"""
+
+from repro.configs.base import ArchDef
+from repro.models.lm import LMConfig
+
+N_PATCHES = 256
+D_VISION = 1024
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="pixtral-12b",
+        n_layers=40, d_model=5120, n_heads=32, n_kv=8, head_dim=128,
+        d_ff=14336, vocab=131072,
+        mixer="attn", ffn="dense", tie_embeddings=True,
+        n_image_patches=N_PATCHES, d_vision=D_VISION,
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="pixtral-12b-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=128, vocab=256, dtype="float32",
+        mixer="attn", ffn="dense", q_block=16, kv_block=16, remat="none",
+        n_image_patches=8, d_vision=32,
+    )
+
+
+ARCH = ArchDef(
+    name="pixtral-12b", family="vlm", kind="lm",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    source="hf:mistralai/Pixtral-12B-2409; unverified",
+    notes="Backbone only per the assignment; modality frontend stubbed "
+          "to precomputed patch embeddings.  Loss masks image positions.",
+)

@@ -1,0 +1,38 @@
+"""seamless-m4t-large-v2 — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+[audio] 24L d_model=1024 16H (GQA kv=16 = MHA) d_ff=8192 vocab=256206.
+24 encoder + 24 decoder layers; the speech frontend (w2v-BERT) is a
+STUB: input_specs() provides precomputed frame embeddings.
+"""
+
+from repro.configs.base import ArchDef
+from repro.models.encdec import EncDecConfig
+
+DECODE_SRC_LEN = 1024  # encoder frames cached for decode cells
+
+
+def make_config() -> EncDecConfig:
+    return EncDecConfig(
+        name="seamless-m4t-large-v2",
+        enc_layers=24, dec_layers=24, d_model=1024, n_heads=16, n_kv=16,
+        head_dim=64, d_ff=8192, vocab=256206,
+    )
+
+
+def make_smoke_config() -> EncDecConfig:
+    return EncDecConfig(
+        name="seamless-m4t-large-v2-smoke",
+        enc_layers=2, dec_layers=2, d_model=64, n_heads=4, n_kv=4,
+        head_dim=16, d_ff=128, vocab=256, dtype="float32",
+        q_block=16, kv_block=16, remat="none",
+    )
+
+
+ARCH = ArchDef(
+    name="seamless-m4t-large-v2", family="audio", kind="encdec",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    source="arXiv:2308.11596; hf",
+    notes="Enc-dec: decode cells run the text decoder (self-KV cache of "
+          "seq_len + cached cross K/V over 1024 encoder frames).  Audio "
+          "frontend stubbed to frame embeddings per the assignment.",
+)

@@ -1,0 +1,37 @@
+"""smollm-135m — llama-arch small [hf:HuggingFaceTB/SmolLM-135M; hf].
+
+[dense] 30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152.
+"""
+
+from repro.configs.base import ArchDef
+from repro.models.lm import LMConfig
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="smollm-135m",
+        n_layers=30, d_model=576, n_heads=9, n_kv=3, head_dim=64,
+        d_ff=1536, vocab=49152,
+        mixer="attn", ffn="dense", tie_embeddings=True,
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="smollm-135m-smoke",
+        n_layers=2, d_model=48, n_heads=3, n_kv=1, head_dim=16,
+        d_ff=96, vocab=256, dtype="float32",
+        mixer="attn", ffn="dense", q_block=16, kv_block=16, remat="none",
+    )
+
+
+ARCH = ArchDef(
+    name="smollm-135m", family="dense", kind="lm",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    source="hf:HuggingFaceTB/SmolLM-135M; hf",
+    rules={"heads": None, "kv_heads": None},  # 9 and 3 don't divide 16
+    notes="9 q-heads / 3 kv-heads not divisible by model=16: attention "
+          "replicates over the model axis; d_ff=1536 (96/shard) and "
+          "vocab TP-shard normally; d_model=576 not divisible by "
+          "data=16, so FSDP falls back to replication (planner).",
+)

@@ -1,0 +1,22 @@
+"""SeDA core: the paper's contribution as composable JAX modules.
+
+- :mod:`repro.core.aes`       — FIPS-197 AES-128 + KeyExpansion
+- :mod:`repro.core.ctr`       — AES-CTR with PA||VN counters (T-AES path)
+- :mod:`repro.core.baes`      — bandwidth-aware encryption (B-AES, §III-B)
+- :mod:`repro.core.mac`       — optBlk/layer/model MACs + XOR-MAC (§III-C)
+- :mod:`repro.core.vn`        — MGX-style on-chip version numbers
+- :mod:`repro.core.attacks`   — SECA / RePA reference attacks
+- :mod:`repro.core.secure_memory` — protect/unprotect pytrees
+- :mod:`repro.core.secure_exec`   — SecureExecutor step wrapper
+"""
+
+from repro.core import aes, attacks, baes, ctr, mac, multilevel, vn  # noqa: F401
+from repro.core.secure_exec import SCHEMES, SecureExecutor  # noqa: F401
+from repro.core.secure_memory import (  # noqa: F401
+    RegionSpec,
+    SecureKeys,
+    SecureState,
+    make_region_spec,
+    protect,
+    unprotect,
+)

@@ -1,0 +1,197 @@
+"""Pure-JAX AES-128 (FIPS-197).
+
+This is the reference "AES engine" of SeDA (paper Fig. 2(b)): SubBytes,
+ShiftRows, MixColumns, AddRoundKey, plus the KeyExpansion module whose
+round keys the bandwidth-aware encryption mechanism (B-AES, paper
+Alg. 1 defense) reuses as XOR diversifiers.
+
+State layout: a block is a ``(16,)`` uint8 vector in FIPS column-major
+order (byte ``i`` is row ``i % 4``, column ``i // 4``).  All functions
+are batched over a leading axis and jit-compatible; the S-box is a
+constant 256-entry table applied with ``jnp.take``.
+
+Validated against FIPS-197 Appendix B/C and NIST SP 800-38A vectors in
+``tests/test_aes.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SBOX",
+    "INV_SBOX",
+    "RCON",
+    "key_expansion",
+    "key_expansion_np",
+    "aes128_encrypt_block",
+    "aes128_encrypt",
+    "sub_bytes",
+    "shift_rows",
+    "mix_columns",
+    "add_round_key",
+]
+
+# ---------------------------------------------------------------------------
+# Constant tables (computed once with numpy at import time).
+# ---------------------------------------------------------------------------
+
+
+def _build_sbox() -> np.ndarray:
+    """Build the AES S-box from GF(2^8) inversion + affine transform."""
+    # Multiplicative inverse table via exp/log tables over generator 3.
+    exp = np.zeros(512, dtype=np.uint8)
+    log = np.zeros(256, dtype=np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        # multiply x by generator 0x03 = x ^ (x<<1) with reduction
+        x ^= (x << 1) ^ (0x1B if x & 0x80 else 0)
+        x &= 0xFF
+    for i in range(255, 512):
+        exp[i] = exp[i - 255]
+
+    sbox = np.zeros(256, dtype=np.uint8)
+    for v in range(256):
+        inv = 0 if v == 0 else int(exp[255 - log[v]])
+        # Affine transform: b ^ rot(b,1..4) ^ 0x63.
+        b = inv
+        res = 0x63
+        for shift in range(5):
+            res ^= ((b << shift) | (b >> (8 - shift))) & 0xFF
+        sbox[v] = res
+    return sbox
+
+
+_SBOX_NP = _build_sbox()
+_INV_SBOX_NP = np.zeros(256, dtype=np.uint8)
+_INV_SBOX_NP[_SBOX_NP] = np.arange(256, dtype=np.uint8)
+
+# Round constants for key expansion (first byte of rcon word).
+_RCON_NP = np.array([0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40, 0x80, 0x1B, 0x36],
+                    dtype=np.uint8)
+
+SBOX = jnp.asarray(_SBOX_NP)
+INV_SBOX = jnp.asarray(_INV_SBOX_NP)
+RCON = jnp.asarray(_RCON_NP)
+
+# ShiftRows permutation on the 16-byte column-major state:
+# new[r + 4c] = old[r + 4((c + r) % 4)].
+_SHIFT_ROWS_PERM_NP = np.array(
+    [(r + 4 * ((c + r) % 4)) for c in range(4) for r in range(4)], dtype=np.int32
+)
+_SHIFT_ROWS_PERM = jnp.asarray(_SHIFT_ROWS_PERM_NP)
+
+
+# ---------------------------------------------------------------------------
+# GF(2^8) helpers (uint8 arrays, promoted internally to avoid overflow UB).
+# ---------------------------------------------------------------------------
+
+
+def _xtime(x: jax.Array) -> jax.Array:
+    """Multiply by 2 in GF(2^8) with the AES reduction polynomial."""
+    x16 = x.astype(jnp.uint16)
+    doubled = (x16 << 1) ^ jnp.where(x16 & 0x80, jnp.uint16(0x1B), jnp.uint16(0))
+    return (doubled & 0xFF).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Round transforms.  All operate on (..., 16) uint8 states.
+# ---------------------------------------------------------------------------
+
+
+def sub_bytes(state: jax.Array) -> jax.Array:
+    return jnp.take(SBOX, state.astype(jnp.int32), axis=0)
+
+
+def shift_rows(state: jax.Array) -> jax.Array:
+    return jnp.take(state, _SHIFT_ROWS_PERM, axis=-1)
+
+
+def mix_columns(state: jax.Array) -> jax.Array:
+    s = state.reshape(state.shape[:-1] + (4, 4))  # (..., col, row)
+    a0, a1, a2, a3 = s[..., 0], s[..., 1], s[..., 2], s[..., 3]
+    x0, x1, x2, x3 = _xtime(a0), _xtime(a1), _xtime(a2), _xtime(a3)
+    b0 = x0 ^ (x1 ^ a1) ^ a2 ^ a3
+    b1 = a0 ^ x1 ^ (x2 ^ a2) ^ a3
+    b2 = a0 ^ a1 ^ x2 ^ (x3 ^ a3)
+    b3 = (x0 ^ a0) ^ a1 ^ a2 ^ x3
+    out = jnp.stack([b0, b1, b2, b3], axis=-1)
+    return out.reshape(state.shape)
+
+
+def add_round_key(state: jax.Array, round_key: jax.Array) -> jax.Array:
+    return state ^ round_key
+
+
+# ---------------------------------------------------------------------------
+# Key expansion.
+# ---------------------------------------------------------------------------
+
+
+def key_expansion_np(key: np.ndarray) -> np.ndarray:
+    """FIPS-197 key expansion in numpy: (16,) uint8 -> (11, 16) uint8.
+
+    Returned round keys are in the same flat byte order as the input key
+    (word-major: bytes 4i..4i+3 are word i).
+    """
+    key = np.asarray(key, dtype=np.uint8).reshape(16)
+    words = [key[4 * i: 4 * i + 4].copy() for i in range(4)]
+    for i in range(4, 44):
+        temp = words[i - 1].copy()
+        if i % 4 == 0:
+            temp = np.roll(temp, -1)  # RotWord
+            temp = _SBOX_NP[temp]     # SubWord
+            temp[0] ^= _RCON_NP[i // 4 - 1]
+        words.append(words[i - 4] ^ temp)
+    return np.stack([np.concatenate(words[4 * r: 4 * r + 4]) for r in range(11)])
+
+
+def key_expansion(key: jax.Array) -> jax.Array:
+    """Traceable key expansion: (16,) uint8 -> (11, 16) uint8.
+
+    Used when the key is a traced value (e.g. re-seeded per block with
+    ``key ^ (PA || VN)`` for B-AES wide-diversification mode).
+    """
+    key = key.reshape(16).astype(jnp.uint8)
+    words = [key[4 * i: 4 * i + 4] for i in range(4)]
+    for i in range(4, 44):
+        temp = words[i - 1]
+        if i % 4 == 0:
+            temp = jnp.roll(temp, -1)
+            temp = jnp.take(SBOX, temp.astype(jnp.int32), axis=0)
+            temp = temp.at[0].set(temp[0] ^ RCON[i // 4 - 1])
+        words.append(words[i - 4] ^ temp)
+    return jnp.stack([jnp.concatenate(words[4 * r: 4 * r + 4]) for r in range(11)])
+
+
+# ---------------------------------------------------------------------------
+# Block encryption.
+# ---------------------------------------------------------------------------
+
+
+def aes128_encrypt_block(block: jax.Array, round_keys: jax.Array) -> jax.Array:
+    """Encrypt ``(..., 16)`` uint8 blocks with ``(11, 16)`` round keys."""
+    state = add_round_key(block, round_keys[0])
+
+    def round_fn(i, state):
+        state = sub_bytes(state)
+        state = shift_rows(state)
+        state = mix_columns(state)
+        return add_round_key(state, round_keys[i])
+
+    state = jax.lax.fori_loop(1, 10, round_fn, state)
+    state = sub_bytes(state)
+    state = shift_rows(state)
+    return add_round_key(state, round_keys[10])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def aes128_encrypt(blocks: jax.Array, round_keys: jax.Array) -> jax.Array:
+    """Jitted batched AES-128 encryption of ``(n, 16)`` uint8 blocks."""
+    return aes128_encrypt_block(blocks, round_keys)

@@ -1,0 +1,67 @@
+"""Reference implementations of the paper's two attacks.
+
+* SECA — Single-Element Collision Attack (Algorithm 1, lines 1-4):
+  against a wide block whose 16B segments share one OTP, the most
+  frequent ciphertext segment reveals the pad (because the most
+  frequent plaintext segment is guessable, e.g. all-zeros from ReLU
+  sparsity / zero padding), and then the whole block decrypts.
+
+* RePA — Re-Permutation Attack (Algorithm 2, lines 1-6): against a
+  layer MAC formed by XORing per-block MACs that are NOT bound to
+  block positions, any permutation of the ciphertext blocks passes
+  verification while corrupting the model.
+
+Both attacks run on the host (numpy) — the attacker sits on the memory
+bus and manipulates raw bytes; they are used by tests/examples to show
+they *succeed* against the strawman schemes and *fail* against SeDA's
+defenses.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+__all__ = ["seca_recover_block", "SecaResult", "repa_shuffle"]
+
+
+class SecaResult(NamedTuple):
+    recovered_otp: np.ndarray      # (16,) uint8 candidate pad
+    recovered_plain: np.ndarray    # (n_segments, 16) uint8
+    collision_count: int           # multiplicity of the modal ciphertext
+
+
+def seca_recover_block(cipher_block: np.ndarray,
+                       most_value_p: np.ndarray | None = None) -> SecaResult:
+    """Run SECA on one wide block: (block_bytes,) uint8 ciphertext.
+
+    ``most_value_p`` is the attacker's guess for the most common
+    plaintext segment (default: all zeros — the dominant value in
+    padded / sparse DNN tensors).
+    """
+    segs = cipher_block.reshape(-1, 16)
+    if most_value_p is None:
+        most_value_p = np.zeros(16, np.uint8)
+    # CALCFREQVALUE: modal ciphertext segment.
+    uniq, counts = np.unique(segs, axis=0, return_counts=True)
+    modal = uniq[np.argmax(counts)]
+    otp = modal ^ most_value_p                       # line 2
+    plain = segs ^ otp[None, :]                      # lines 3-4
+    return SecaResult(otp.astype(np.uint8), plain.astype(np.uint8),
+                      int(counts.max()))
+
+
+def repa_shuffle(cipher_blocks: np.ndarray, *, seed: int = 0) -> np.ndarray:
+    """RePA: permute the ciphertext blocks of a layer (SHUFFLEORDER).
+
+    Returns the shuffled blocks; with a position-free XOR-MAC the layer
+    MAC is unchanged (XOR commutes), so verification passes while the
+    layer decrypts to garbage in the wrong positions.
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(cipher_blocks.shape[0])
+    # Ensure it is an actual derangement of at least two positions.
+    if (perm == np.arange(len(perm))).all() and len(perm) > 1:
+        perm[0], perm[1] = perm[1], perm[0]
+    return cipher_blocks[perm]

@@ -1,0 +1,135 @@
+"""Bandwidth-aware encryption (B-AES) — the paper's §III-B mechanism.
+
+A *wide block* of ``block_bytes`` (e.g. 64B like Securator, or larger)
+is encrypted with a SINGLE AES invocation:
+
+  1. base OTP  = AES-CTR_{Ke}(PA || VN)                      (Alg. 1, l.5)
+  2. OTP_i     = base OTP ^ key_i   for segment i             (Alg. 1, l.6-7)
+
+where ``key_i`` are the round keys from KeyExpansion.  Each 128-bit
+segment of the wide block therefore sees a *distinct* pad, defeating
+the Single-Element Collision Attack (SECA) while spending 1/N of the
+AES work of the traditional multi-engine path (T-AES).
+
+When a wide block has more segments than available round keys, the
+paper re-seeds KeyExpansion with ``key ^ (PA || VN)`` to mint more
+diversifiers ("wide mode").  We implement that by deriving additional
+key schedules from perturbed keys; schedules are generated inside the
+traced computation so PA/VN may be traced values.
+
+Security remark (faithful-reproduction note): XORing round keys into
+pads means a hypothetical attacker who recovered two segment pads of
+the same block would learn ``key_i ^ key_j``.  The paper asserts the
+expanded keys are "inherently secure" and we reproduce that design
+decision; the tests demonstrate the SECA defense the paper claims.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aes, ctr
+
+__all__ = [
+    "n_diversifiers",
+    "diversifiers",
+    "baes_otps",
+    "baes_encrypt",
+    "baes_decrypt",
+    "shared_otp_encrypt",
+]
+
+# Round keys 1..10 are used as diversifiers for segments 1..; segment 0
+# keeps the base OTP.  key_0 (the raw cipher key) is never XORed into a
+# pad so that a recovered pad can not be combined with the base OTP to
+# reveal the key itself.
+_DIVERSIFIERS_PER_SCHEDULE = 10
+
+
+def n_diversifiers(n_segments: int) -> int:
+    """Number of extra key schedules needed for ``n_segments`` segments."""
+    extra = max(0, n_segments - 1 - _DIVERSIFIERS_PER_SCHEDULE)
+    return (extra + _DIVERSIFIERS_PER_SCHEDULE - 1) // _DIVERSIFIERS_PER_SCHEDULE
+
+
+def diversifiers(round_keys: jax.Array, n_segments: int,
+                 counter_words: jax.Array | None = None,
+                 key: jax.Array | None = None) -> jax.Array:
+    """Per-segment XOR diversifiers, shape (n_segments, 16) uint8.
+
+    Segment 0 gets the zero diversifier (base OTP used as-is); segments
+    1..10 get round keys 1..10; beyond that, wide mode derives extra
+    schedules from ``key ^ (PA || VN ^ j)``.
+    """
+    divs = [jnp.zeros((16,), jnp.uint8)]
+    divs.extend(round_keys[1 + (i % _DIVERSIFIERS_PER_SCHEDULE)]
+                for i in range(min(n_segments - 1, _DIVERSIFIERS_PER_SCHEDULE)))
+    if n_segments - 1 > _DIVERSIFIERS_PER_SCHEDULE:
+        if key is None or counter_words is None:
+            raise ValueError("wide-mode B-AES needs the raw key and counter words")
+        ctr_bytes = ctr.counter_blocks(counter_words.reshape(4))
+        remaining = n_segments - 1 - _DIVERSIFIERS_PER_SCHEDULE
+        for j in range(n_diversifiers(n_segments)):
+            seed = key ^ ctr_bytes ^ jnp.uint8(j + 1)
+            extra = aes.key_expansion(seed)
+            take = min(remaining, _DIVERSIFIERS_PER_SCHEDULE)
+            divs.extend(extra[1 + r] for r in range(take))
+            remaining -= take
+    return jnp.stack(divs[:n_segments])
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments",))
+def baes_otps(round_keys: jax.Array, counter_words: jax.Array, *,
+              n_segments: int, key: jax.Array | None = None) -> jax.Array:
+    """OTPs for every segment of every wide block.
+
+    Args:
+      round_keys: (11, 16) uint8 key schedule.
+      counter_words: (n_blocks, 4) uint32 — PA||VN per wide block.
+      n_segments: 16B segments per wide block (block_bytes // 16).
+      key: raw 16B key, only needed for wide mode (n_segments > 11).
+
+    Returns: (n_blocks, n_segments, 16) uint8 pads.
+    """
+    base = ctr.ctr_keystream(round_keys, counter_words)  # (n_blocks, 16)
+    if n_segments - 1 > _DIVERSIFIERS_PER_SCHEDULE:
+        # Wide mode: diversifiers depend on each block's counter.
+        def per_block(counter, base_otp):
+            div = diversifiers(round_keys, n_segments, counter, key)
+            return base_otp[None, :] ^ div
+
+        return jax.vmap(per_block)(counter_words, base)
+    div = diversifiers(round_keys, n_segments)  # (n_segments, 16)
+    return base[:, None, :] ^ div[None, :, :]
+
+
+def baes_encrypt(plaintext: jax.Array, round_keys: jax.Array,
+                 counter_words: jax.Array, *, block_bytes: int,
+                 key: jax.Array | None = None) -> jax.Array:
+    """Encrypt a flat uint8 buffer (len % block_bytes == 0) with B-AES.
+
+    ``counter_words`` holds one (PA||VN) per wide block: (n_blocks, 4).
+    """
+    n_segments = block_bytes // 16
+    blocks = plaintext.reshape(-1, n_segments, 16)
+    otps = baes_otps(round_keys, counter_words, n_segments=n_segments, key=key)
+    return (blocks ^ otps).reshape(plaintext.shape)
+
+
+# XOR stream cipher: decryption == encryption.
+baes_decrypt = baes_encrypt
+
+
+def shared_otp_encrypt(plaintext: jax.Array, round_keys: jax.Array,
+                       counter_words: jax.Array, *, block_bytes: int) -> jax.Array:
+    """The INSECURE strawman (paper §III-B challenge 2): every 16B segment
+    of a wide block reuses the same OTP.  Exists so tests/examples can
+    demonstrate the SECA attack succeeding against it.
+    """
+    n_segments = block_bytes // 16
+    blocks = plaintext.reshape(-1, n_segments, 16)
+    base = ctr.ctr_keystream(round_keys, counter_words)  # (n_blocks, 16)
+    return (blocks ^ base[:, None, :]).reshape(plaintext.shape)

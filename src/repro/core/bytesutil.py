@@ -1,0 +1,79 @@
+"""Byte-view utilities for the secure-memory layer.
+
+Every tensor that crosses the untrusted boundary is (de)serialized to a
+flat uint8 buffer, padded to the encryption-block granularity.  All
+conversions are jit-compatible bitcasts (no host round-trips).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TensorSpec",
+    "tensor_to_bytes",
+    "bytes_to_tensor",
+    "pad_to_multiple",
+    "bytes_to_u32",
+    "u32_to_bytes",
+]
+
+
+class TensorSpec(NamedTuple):
+    """Static metadata needed to reconstruct a tensor from its bytes."""
+
+    shape: tuple
+    dtype: str
+    nbytes: int  # unpadded payload size
+
+    @staticmethod
+    def of(x: jax.Array | jax.ShapeDtypeStruct) -> "TensorSpec":
+        nbytes = int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        return TensorSpec(tuple(x.shape), jnp.dtype(x.dtype).name, nbytes)
+
+
+def pad_to_multiple(buf: jax.Array, multiple: int) -> jax.Array:
+    """Zero-pad a flat uint8 buffer to a length multiple (static shapes)."""
+    n = buf.shape[0]
+    padded = (n + multiple - 1) // multiple * multiple
+    if padded == n:
+        return buf
+    return jnp.concatenate([buf, jnp.zeros((padded - n,), dtype=jnp.uint8)])
+
+
+def tensor_to_bytes(x: jax.Array, *, multiple: int = 16) -> jax.Array:
+    """Bitcast any tensor to a flat, padded uint8 buffer."""
+    if x.dtype == jnp.uint8:
+        flat = x.reshape(-1)
+    else:
+        # bitcast_convert_type to a smaller dtype appends a trailing axis
+        # of size itemsize.
+        as_u8 = jax.lax.bitcast_convert_type(x, jnp.uint8)
+        flat = as_u8.reshape(-1)
+    return pad_to_multiple(flat, multiple)
+
+
+def bytes_to_tensor(buf: jax.Array, spec: TensorSpec) -> jax.Array:
+    """Inverse of :func:`tensor_to_bytes` given the static spec."""
+    dtype = jnp.dtype(spec.dtype)
+    payload = buf[: spec.nbytes]
+    if dtype == jnp.uint8:
+        return payload.reshape(spec.shape)
+    itemsize = dtype.itemsize
+    grouped = payload.reshape(-1, itemsize)
+    out = jax.lax.bitcast_convert_type(grouped, dtype)
+    return out.reshape(spec.shape)
+
+
+def bytes_to_u32(buf: jax.Array) -> jax.Array:
+    """View a flat uint8 buffer (len % 4 == 0) as little-endian uint32 lanes."""
+    return jax.lax.bitcast_convert_type(buf.reshape(-1, 4), jnp.uint32).reshape(-1)
+
+
+def u32_to_bytes(lanes: jax.Array) -> jax.Array:
+    """Inverse of :func:`bytes_to_u32`."""
+    return jax.lax.bitcast_convert_type(lanes.reshape(-1, 1), jnp.uint8).reshape(-1)

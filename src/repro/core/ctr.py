@@ -1,0 +1,98 @@
+"""AES-CTR mode with SeDA counter construction (paper Eq. 1/2, Fig. 2(a)).
+
+The counter of a 128-bit segment concatenates the physical address (PA)
+of the segment and the version number (VN) of the enclosing data block:
+
+    counter = PA (64b) || VN (64b)
+
+PA/VN are carried as pairs of uint32 words (JAX default x64-off).  The
+counter block byte layout is big-endian per word:
+
+    [pa_hi, pa_lo, vn_hi, vn_lo]  ->  16 bytes
+
+``ctr_encrypt``/``ctr_decrypt`` implement the *traditional* (T-AES)
+path: one AES invocation per 128-bit segment, counters advancing with
+the segment PA.  The bandwidth-aware path (one AES invocation per wide
+block) lives in :mod:`repro.core.baes`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aes
+
+__all__ = [
+    "pack_counter_words",
+    "counter_blocks",
+    "ctr_keystream",
+    "ctr_encrypt",
+    "ctr_decrypt",
+    "split_addr",
+]
+
+
+def split_addr(addr) -> tuple[jax.Array, jax.Array]:
+    """Split a python int (or uint32 array) address into (hi, lo) words."""
+    if isinstance(addr, (int,)):
+        return (jnp.uint32((addr >> 32) & 0xFFFFFFFF), jnp.uint32(addr & 0xFFFFFFFF))
+    addr = jnp.asarray(addr, dtype=jnp.uint32)
+    return jnp.zeros_like(addr), addr
+
+
+def pack_counter_words(pa_hi, pa_lo, vn_hi, vn_lo) -> jax.Array:
+    """Pack four uint32 words into (..., 4) uint32 counter words."""
+    return jnp.stack(
+        jnp.broadcast_arrays(
+            jnp.asarray(pa_hi, jnp.uint32),
+            jnp.asarray(pa_lo, jnp.uint32),
+            jnp.asarray(vn_hi, jnp.uint32),
+            jnp.asarray(vn_lo, jnp.uint32),
+        ),
+        axis=-1,
+    )
+
+
+def counter_blocks(words: jax.Array) -> jax.Array:
+    """(..., 4) uint32 counter words -> (..., 16) uint8 counter blocks.
+
+    Each word is serialized big-endian so that incrementing ``pa_lo``
+    increments the counter block like a big integer.
+    """
+    w = words.astype(jnp.uint32)
+    shifts = jnp.asarray([24, 16, 8, 0], dtype=jnp.uint32)
+    bytes_per_word = (w[..., :, None] >> shifts) & jnp.uint32(0xFF)
+    return bytes_per_word.astype(jnp.uint8).reshape(words.shape[:-1] + (16,))
+
+
+def ctr_keystream(round_keys: jax.Array, counter_words: jax.Array) -> jax.Array:
+    """OTP = AES-CTR_{Ke}(PA || VN): (..., 4) u32 counters -> (..., 16) u8."""
+    return aes.aes128_encrypt_block(counter_blocks(counter_words), round_keys)
+
+
+def _segment_counters(n_segments: int, pa_hi, pa_lo, vn_hi, vn_lo) -> jax.Array:
+    """Counters for consecutive 16B segments starting at (pa_hi, pa_lo)."""
+    idx = jnp.arange(n_segments, dtype=jnp.uint32)
+    lo = jnp.asarray(pa_lo, jnp.uint32) + idx
+    carry = (lo < jnp.asarray(pa_lo, jnp.uint32)).astype(jnp.uint32)
+    hi = jnp.asarray(pa_hi, jnp.uint32) + carry
+    return pack_counter_words(hi, lo, jnp.broadcast_to(jnp.asarray(vn_hi, jnp.uint32), idx.shape),
+                              jnp.broadcast_to(jnp.asarray(vn_lo, jnp.uint32), idx.shape))
+
+
+def ctr_encrypt(plaintext: jax.Array, round_keys: jax.Array, pa_hi, pa_lo,
+                vn_hi, vn_lo) -> jax.Array:
+    """T-AES encryption: one AES call per 16B segment.
+
+    ``plaintext`` is a flat uint8 buffer with ``len % 16 == 0``; the
+    segment at byte offset ``16*i`` uses counter ``(PA + i) || VN``.
+    """
+    segs = plaintext.reshape(-1, 16)
+    counters = _segment_counters(segs.shape[0], pa_hi, pa_lo, vn_hi, vn_lo)
+    otp = ctr_keystream(round_keys, counters)
+    return (segs ^ otp).reshape(plaintext.shape)
+
+
+# CTR decryption is the same operation (Eq. 2).
+ctr_decrypt = ctr_encrypt

@@ -1,0 +1,83 @@
+"""Physical-address assignment for pytrees crossing the untrusted boundary.
+
+The AES-CTR counter and every MAC binding need a stable *physical
+address* per protected block.  We model the accelerator's DMA address
+map: leaves of a pytree are laid out in deterministic
+``jax.tree_util`` order, each aligned to the protection block size.
+
+Addresses are byte addresses in units of 16B segments (so PA increments
+by ``block_bytes // 16`` between consecutive wide blocks, matching the
+per-segment counter advance of T-AES).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core.bytesutil import TensorSpec
+
+__all__ = ["LeafLayout", "AddressMap", "build_address_map"]
+
+SEGMENT_BYTES = 16
+
+
+class LeafLayout(NamedTuple):
+    path: str
+    spec: TensorSpec
+    pa_base: int          # in 16B-segment units
+    padded_bytes: int     # layout footprint (aligned to block_bytes)
+    layer_id: int         # paper's layer_id binding
+    fmap_idx: int         # index of the tensor within its layer
+
+
+class AddressMap(NamedTuple):
+    leaves: tuple
+    total_bytes: int
+    block_bytes: int
+
+    def by_path(self) -> dict:
+        return {l.path: l for l in self.leaves}
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def build_address_map(tree: Any, *, block_bytes: int = 64,
+                      layer_of=None) -> AddressMap:
+    """Assign PAs to every leaf of ``tree``.
+
+    Args:
+      tree: pytree of arrays or ShapeDtypeStructs.
+      block_bytes: protection granularity (optBlk size).
+      layer_of: optional ``path_str -> layer_id`` mapping function; by
+        default each top-level key of the tree is a "layer" (matching
+        the paper's per-DNN-layer MAC grouping).
+
+    Returns an AddressMap with deterministic, stable ordering.
+    """
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    if layer_of is None:
+        top_keys: dict[str, int] = {}
+
+        def layer_of(path_str: str) -> int:  # noqa: F811 - intentional default
+            top = path_str.split("]")[0] + "]" if "]" in path_str else path_str
+            return top_keys.setdefault(top, len(top_keys))
+
+    layouts = []
+    cursor = 0
+    fmap_counters: dict[int, int] = {}
+    for path, leaf in leaves_with_paths:
+        spec = TensorSpec.of(leaf)
+        padded = (spec.nbytes + block_bytes - 1) // block_bytes * block_bytes
+        path_s = _path_str(path)
+        lid = int(layer_of(path_s))
+        fmap = fmap_counters.get(lid, 0)
+        fmap_counters[lid] = fmap + 1
+        layouts.append(LeafLayout(path_s, spec, cursor // SEGMENT_BYTES,
+                                  padded, lid, fmap))
+        cursor += padded
+    return AddressMap(tuple(layouts), cursor, block_bytes)

@@ -1,0 +1,256 @@
+"""Integrity MACs for SeDA (paper §III-C, Alg. 2).
+
+Per-optBlk MAC, XOR-aggregated layer MAC, and model MAC.
+
+Two MAC engines are provided:
+
+* ``nh``  (default): UMAC-style — an NH universal hash compresses the
+  optBlk payload to 64 bits (multiply-accumulate over uint32 lanes with
+  emulated 64-bit accumulation — MXU/VPU-friendly on TPU), then a
+  single AES-128 invocation over ``NH || binding`` acts as the PRF
+  finalizer.  One AES call per optBlk regardless of its size.
+* ``cbc``: AES-CBC-MAC over ``binding-block ‖ payload segments`` — pure
+  AES, one call per 16B segment; the bit-exact conservative choice.
+
+RePA defense: the *binding tuple* ``(PA, VN, layer_id, fmap_idx,
+blk_idx)`` is mixed into every block MAC (Alg. 2 lines 7-8), so XOR
+aggregation is order-sensitive in content: shuffling ciphertext blocks
+changes every constituent MAC and the XOR no longer verifies.
+
+The RePA-*vulnerable* strawman (hash of ciphertext only, as in
+Securator's layer check) is exposed as ``engine="naive"`` for the
+attack demonstration in tests/examples.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aes
+from repro.core.bytesutil import bytes_to_u32
+
+__all__ = [
+    "Binding",
+    "block_macs",
+    "xor_aggregate",
+    "layer_mac",
+    "model_mac",
+    "verify_layer",
+    "MAC_BYTES",
+]
+
+MAC_BYTES = 8  # 64-bit MACs, as in the paper's 8B-MAC-per-64B-block example.
+
+
+class Binding(NamedTuple):
+    """Location details bound into each optBlk MAC (Alg. 2, line 8).
+
+    All fields are uint32 arrays broadcastable to (n_blocks,).
+    """
+
+    pa: jax.Array         # physical address of the block
+    vn: jax.Array         # version number
+    layer_id: jax.Array
+    fmap_idx: jax.Array
+    blk_idx: jax.Array
+
+    @staticmethod
+    def make(pa, vn, layer_id, fmap_idx, blk_idx) -> "Binding":
+        as_u32 = lambda v: jnp.asarray(v, dtype=jnp.uint32)
+        return Binding(as_u32(pa), as_u32(vn), as_u32(layer_id),
+                       as_u32(fmap_idx), as_u32(blk_idx))
+
+    def words(self, n_blocks: int) -> jax.Array:
+        """(n_blocks, 8) uint32: binding serialized as two 16B segments
+        worth of words (padded), for mixing into hash inputs."""
+        cols = [jnp.broadcast_to(f, (n_blocks,)) for f in self]
+        cols += [jnp.zeros((n_blocks,), jnp.uint32)] * (8 - len(cols))
+        return jnp.stack(cols, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Emulated 64-bit accumulation on uint32 pairs.
+# ---------------------------------------------------------------------------
+
+
+def _mul32x32(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Full 64-bit product of uint32 operands -> (hi, lo) uint32."""
+    a_lo, a_hi = a & 0xFFFF, a >> 16
+    b_lo, b_hi = b & 0xFFFF, b >> 16
+    ll = a_lo * b_lo
+    lh = a_lo * b_hi
+    hl = a_hi * b_lo
+    hh = a_hi * b_hi
+    # lo = ll + ((lh + hl) << 16)   with carries into hi
+    mid = lh + hl  # uint32 wraparound; carry recovered below
+    mid_carry = (mid < lh).astype(jnp.uint32)  # carry out of 32-bit mid sum
+    lo = ll + (mid << 16)  # uint32 wraparound
+    lo_carry = (lo < ll).astype(jnp.uint32)
+    hi = hh + (mid >> 16) + (mid_carry << 16) + lo_carry
+    return hi, lo
+
+
+def _add64(hi1, lo1, hi2, lo2) -> tuple[jax.Array, jax.Array]:
+    lo = lo1 + lo2
+    carry = (lo < lo1).astype(jnp.uint32)
+    return hi1 + hi2 + carry, lo
+
+
+def nh_hash(lanes_u32: jax.Array, key_u32: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """NH hash over the last axis: (..., 2L) u32 data, (2L,) u32 key.
+
+    NH(m, k) = sum_i (m_{2i} + k_{2i}) * (m_{2i+1} + k_{2i+1})  mod 2^64.
+
+    Returns (hi, lo) uint32 arrays of shape (...,).
+    """
+    m = lanes_u32.astype(jnp.uint32)
+    k = key_u32.astype(jnp.uint32)
+    a = (m[..., 0::2] + k[..., 0::2]).astype(jnp.uint32)
+    b = (m[..., 1::2] + k[..., 1::2]).astype(jnp.uint32)
+    hi, lo = _mul32x32(a, b)
+    # Reduce along the last axis: sum the lo words tracking carries into hi.
+    zeros = jnp.zeros(m.shape[:-1], jnp.uint32)
+
+    def body(i, state):
+        lo_sum, hi_sum = state
+        new_lo = lo_sum + lo[..., i]
+        carry = (new_lo < lo_sum).astype(jnp.uint32)
+        return new_lo, hi_sum + hi[..., i] + carry
+
+    lo_sum, hi_sum = jax.lax.fori_loop(0, lo.shape[-1], body, (zeros, zeros))
+    return hi_sum, lo_sum
+
+
+# ---------------------------------------------------------------------------
+# Block MAC engines.
+# ---------------------------------------------------------------------------
+
+
+def nh_payload(blocks_u8: jax.Array, binding: Binding) -> jax.Array:
+    """Build the NH input lanes: data lanes ‖ binding words, even length."""
+    n_blocks, block_bytes = blocks_u8.shape
+    lanes = jax.lax.bitcast_convert_type(
+        blocks_u8.reshape(n_blocks, block_bytes // 4, 4), jnp.uint32)
+    bind_words = binding.words(n_blocks)  # (n_blocks, 8)
+    payload = jnp.concatenate([lanes, bind_words], axis=-1)  # (n, L+8)
+    if payload.shape[-1] % 2:
+        payload = jnp.pad(payload, ((0, 0), (0, 1)))
+    return payload
+
+
+def finalize_words(hi: jax.Array, lo: jax.Array, binding: Binding) -> jax.Array:
+    """Counter words for the AES PRF finalization of an NH hash."""
+    return jnp.stack(
+        [hi, lo,
+         jnp.broadcast_to(binding.pa, hi.shape) ^ jnp.broadcast_to(binding.layer_id, hi.shape),
+         jnp.broadcast_to(binding.vn, hi.shape)
+         ^ (jnp.broadcast_to(binding.fmap_idx, hi.shape) << 16)
+         ^ jnp.broadcast_to(binding.blk_idx, hi.shape)],
+        axis=-1)  # (n_blocks, 4) u32
+
+
+def finalize_macs(hi: jax.Array, lo: jax.Array, binding: Binding,
+                  round_keys: jax.Array) -> jax.Array:
+    """AES(K, hash64 ‖ binding) -> truncated (n, MAC_BYTES) u8 MACs."""
+    from repro.core import ctr as _ctr  # local import to avoid cycle
+    fin = finalize_words(hi, lo, binding)
+    blockpads = aes.aes128_encrypt_block(_ctr.counter_blocks(fin), round_keys)
+    return blockpads[:, :MAC_BYTES]
+
+
+def _nh_block_macs(blocks_u8: jax.Array, binding: Binding,
+                   hash_key_u32: jax.Array, round_keys: jax.Array) -> jax.Array:
+    """(n_blocks, block_bytes) u8 -> (n_blocks, 8) u8 MACs via NH + AES."""
+    payload = nh_payload(blocks_u8, binding)
+    if hash_key_u32.shape[-1] < payload.shape[-1]:
+        raise ValueError(
+            f"NH key too short: {hash_key_u32.shape[-1]} lanes for "
+            f"{payload.shape[-1]}-lane payload (optBlk too large)")
+    key = hash_key_u32[: payload.shape[-1]]
+    hi, lo = nh_hash(payload, key)
+    return finalize_macs(hi, lo, binding, round_keys)
+
+
+def _cbc_block_macs(blocks_u8: jax.Array, binding: Binding,
+                    round_keys: jax.Array) -> jax.Array:
+    """AES-CBC-MAC over binding-block ‖ payload segments -> (n, 8) u8."""
+    n_blocks, block_bytes = blocks_u8.shape
+    n_segments = block_bytes // 16
+    from repro.core import ctr as _ctr
+    bind_words = binding.words(n_blocks)[:, :4]  # (n, 4) u32
+    state = aes.aes128_encrypt_block(_ctr.counter_blocks(bind_words), round_keys)
+    segs = blocks_u8.reshape(n_blocks, n_segments, 16)
+
+    def body(i, state):
+        return aes.aes128_encrypt_block(state ^ segs[:, i], round_keys)
+
+    state = jax.lax.fori_loop(0, n_segments, body, state)
+    return state[:, :MAC_BYTES]
+
+
+def _naive_block_macs(blocks_u8: jax.Array, round_keys: jax.Array) -> jax.Array:
+    """RePA-VULNERABLE strawman: MAC depends on ciphertext only (no
+    binding).  Securator-style layer check target for Alg. 2's attack."""
+    n_blocks, block_bytes = blocks_u8.shape
+    n_segments = block_bytes // 16
+    segs = blocks_u8.reshape(n_blocks, n_segments, 16)
+    state = jnp.zeros((n_blocks, 16), jnp.uint8)
+
+    def body(i, state):
+        return aes.aes128_encrypt_block(state ^ segs[:, i], round_keys)
+
+    state = jax.lax.fori_loop(0, n_segments, body, state)
+    return state[:, :MAC_BYTES]
+
+
+@functools.partial(jax.jit, static_argnames=("engine",))
+def block_macs(blocks_u8: jax.Array, binding: Binding, *,
+               hash_key_u32: jax.Array, round_keys: jax.Array,
+               engine: str = "nh") -> jax.Array:
+    """Per-optBlk MACs: (n_blocks, block_bytes) u8 -> (n_blocks, 8) u8."""
+    if engine == "nh":
+        return _nh_block_macs(blocks_u8, binding, hash_key_u32, round_keys)
+    if engine == "cbc":
+        return _cbc_block_macs(blocks_u8, binding, round_keys)
+    if engine == "naive":
+        return _naive_block_macs(blocks_u8, round_keys)
+    raise ValueError(f"unknown MAC engine: {engine}")
+
+
+# ---------------------------------------------------------------------------
+# Multi-level aggregation.
+# ---------------------------------------------------------------------------
+
+
+def xor_aggregate(macs_u8: jax.Array, axis: int = 0) -> jax.Array:
+    """XOR-MAC aggregation (Bellare et al.): XOR of all block MACs."""
+    lanes = jax.lax.bitcast_convert_type(
+        macs_u8.reshape(macs_u8.shape[:-1] + (MAC_BYTES // 4, 4)), jnp.uint32)
+    agg = jax.lax.reduce(lanes, jnp.uint32(0), jax.lax.bitwise_xor, (axis,))
+    return jax.lax.bitcast_convert_type(agg[..., None], jnp.uint8).reshape(
+        agg.shape[:-1] + (MAC_BYTES,))
+
+
+def layer_mac(blocks_u8: jax.Array, binding: Binding, *, hash_key_u32,
+              round_keys, engine: str = "nh") -> jax.Array:
+    """Layer MAC = XOR of all optBlk MACs within the layer -> (8,) u8."""
+    return xor_aggregate(
+        block_macs(blocks_u8, binding, hash_key_u32=hash_key_u32,
+                   round_keys=round_keys, engine=engine))
+
+
+def model_mac(layer_macs_u8: jax.Array) -> jax.Array:
+    """Model MAC: single MAC representing all layer MACs -> (8,) u8."""
+    return xor_aggregate(layer_macs_u8)
+
+
+def verify_layer(blocks_u8: jax.Array, binding: Binding, expected_mac: jax.Array,
+                 *, hash_key_u32, round_keys, engine: str = "nh") -> jax.Array:
+    """Recompute a layer MAC and compare: returns a scalar bool array."""
+    got = layer_mac(blocks_u8, binding, hash_key_u32=hash_key_u32,
+                    round_keys=round_keys, engine=engine)
+    return jnp.all(got == expected_mac)

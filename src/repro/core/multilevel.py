@@ -1,0 +1,82 @@
+"""Multi-level integrity verification policy (paper §III-C, Table I).
+
+Three granularities:
+
+  optBlk MAC — off-chip, flexible, avoids redundant re-auth of tile
+               overlaps (granularity from the SecureLoop-style search);
+  layer MAC  — XOR of a layer's optBlk MACs; small enough for on-chip
+               SRAM (or off-chip "for fairness", as the paper's eval
+               does) => near-zero metadata traffic;
+  model MAC  — one MAC for all weights, verified at end of inference.
+
+``VerifyPolicy`` selects which level gates a read (block/layer) and
+which is deferred (model).  The policy also records *where* each level
+resides (on-chip vs off-chip) — the `sim/` package uses the same enum
+to charge DRAM traffic for off-chip metadata.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+__all__ = ["Level", "Residency", "VerifyPolicy", "SEDA_DEFAULT", "SGX_LIKE", "MGX_LIKE"]
+
+
+class Level(enum.IntEnum):
+    OPTBLK = 0
+    LAYER = 1
+    MODEL = 2
+
+
+class Residency(enum.IntEnum):
+    ONCHIP = 0
+    OFFCHIP = 1
+
+
+class VerifyPolicy(NamedTuple):
+    """Which MAC levels exist, where they live, and which gates reads."""
+
+    gate_level: Level              # verification required before data is used
+    deferred_model_mac: bool       # model MAC checked at end of inference
+    layer_residency: Residency     # paper stores layer MACs off-chip "for fairness"
+    optblk_residency: Residency
+    has_integrity_tree: bool       # SGX-style VN/MT traffic (sim only)
+    per_block_vn_offchip: bool     # SGX stores VNs off-chip; MGX/SeDA derive on-chip
+
+    @property
+    def name(self) -> str:
+        return f"gate={self.gate_level.name.lower()}"
+
+
+# SeDA: layer MAC gates reads; optBlk MACs never leave the chip during
+# steady-state (they are recomputed and XOR-folded on the fly); model
+# MAC deferred.
+SEDA_DEFAULT = VerifyPolicy(
+    gate_level=Level.LAYER,
+    deferred_model_mac=True,
+    layer_residency=Residency.ONCHIP,
+    optblk_residency=Residency.ONCHIP,
+    has_integrity_tree=False,
+    per_block_vn_offchip=False,
+)
+
+# SGX-like: per-block MAC + off-chip VN + integrity tree.
+SGX_LIKE = VerifyPolicy(
+    gate_level=Level.OPTBLK,
+    deferred_model_mac=False,
+    layer_residency=Residency.OFFCHIP,
+    optblk_residency=Residency.OFFCHIP,
+    has_integrity_tree=True,
+    per_block_vn_offchip=True,
+)
+
+# MGX-like: per-block MAC off-chip, VNs derived on-chip, no tree.
+MGX_LIKE = VerifyPolicy(
+    gate_level=Level.OPTBLK,
+    deferred_model_mac=False,
+    layer_residency=Residency.OFFCHIP,
+    optblk_residency=Residency.OFFCHIP,
+    has_integrity_tree=False,
+    per_block_vn_offchip=False,
+)

@@ -1,0 +1,53 @@
+"""MGX/TNPU-style on-chip version-number generation (paper §II-C, Tab. III).
+
+Secure accelerators classically store one VN per protected block
+off-chip (and a Merkle tree over the VNs).  MGX's observation — which
+SeDA inherits — is that DNN memory access patterns are *deterministic
+in the schedule*: the VN of any tensor crossing the boundary can be
+derived on-chip from (tensor role, layer id, step counter), so no VN
+ever needs to be stored or fetched.
+
+For MoE models the routed expert *activations* are data-dependent, but
+the schedule slot (step, layer, expert-slot) is not; using the slot as
+the VN keeps generation on-chip (DESIGN.md §5 note).
+
+``vn_for`` is pure and traceable; roles are small static ints.
+"""
+
+from __future__ import annotations
+
+from enum import IntEnum
+
+import jax.numpy as jnp
+
+__all__ = ["Role", "vn_for", "vn_words"]
+
+
+class Role(IntEnum):
+    WEIGHT = 0       # model weights: VN bumps on checkpoint/update epoch
+    ACTIVATION = 1   # per-step intermediate fmaps
+    KVCACHE = 2      # serving caches: VN bumps per decode step
+    OPT_STATE = 3    # optimizer state (training)
+    GRADIENT = 4
+    DATA = 5         # input batches
+
+
+def vn_for(role: Role | int, *, layer_id=0, step=0, slot=0) -> jnp.ndarray:
+    """Deterministic 32-bit VN: role (3b) | layer (9b) | slot (8b) | step (12b).
+
+    The bit budget is a policy choice, not a security parameter: the
+    full counter fed to AES-CTR also contains the 64-bit PA, and the
+    (role, layer, slot, step) tuple is unique per write within a
+    training/serving session, which is what CTR requires.
+    """
+    role_u = jnp.uint32(int(role) & 0x7)
+    layer_u = jnp.asarray(layer_id, jnp.uint32) & jnp.uint32(0x1FF)
+    slot_u = jnp.asarray(slot, jnp.uint32) & jnp.uint32(0xFF)
+    step_u = jnp.asarray(step, jnp.uint32) & jnp.uint32(0xFFF)
+    return (role_u << 29) | (layer_u << 20) | (slot_u << 12) | step_u
+
+
+def vn_words(role: Role | int, *, layer_id=0, step=0, slot=0):
+    """(vn_hi, vn_lo) uint32 pair for counter construction."""
+    lo = vn_for(role, layer_id=layer_id, step=step, slot=slot)
+    return jnp.zeros_like(lo), lo

@@ -1,0 +1,100 @@
+"""Deterministic, resumable synthetic token pipeline.
+
+Production framing: every batch is derived purely from (seed, step), so
+(a) any worker can regenerate any batch — preemption-safe restarts need
+only the step counter from the checkpoint manifest, and (b) elastic
+re-scaling replays the exact token stream on a different host count.
+
+Optionally each batch is authenticated at ingest with the SeDA MAC
+(the data pipeline crosses the untrusted boundary too).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticLM", "make_batch"]
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    kind: str = "lm"            # lm | vlm | encdec
+    n_image_patches: int = 0
+    d_vision: int = 0
+    d_model: int = 0            # encdec frame-embedding dim
+    src_len: int = 0
+
+
+def _tokens_for_step(cfg: DataConfig, step: int) -> np.ndarray:
+    """Markov-ish synthetic tokens: deterministic in (seed, step)."""
+    rng = np.random.default_rng(np.uint64(cfg.seed * 1_000_003 + step))
+    base = rng.integers(0, cfg.vocab, size=(cfg.global_batch, cfg.seq_len + 1),
+                        dtype=np.int64)
+    # Inject learnable structure: every even position repeats its
+    # predecessor with p=0.5 (so tiny models show loss decreasing).
+    repeat = rng.random((cfg.global_batch, cfg.seq_len + 1)) < 0.5
+    repeat[:, 0] = False
+    out = base.copy()
+    for _ in range(1):
+        shifted = np.roll(out, 1, axis=1)
+        out = np.where(repeat, shifted, out)
+    return out.astype(np.int32)
+
+
+def make_batch(cfg: DataConfig, step: int) -> dict:
+    """Batch for ``step`` (pure function of config + step)."""
+    toks = _tokens_for_step(cfg, step)
+    batch = {
+        "tokens": jnp.asarray(toks[:, :-1]),
+        "labels": jnp.asarray(toks[:, 1:]),
+    }
+    if cfg.kind == "vlm":
+        rng = np.random.default_rng(np.uint64(cfg.seed * 7_000_003 + step))
+        batch["image_embeds"] = jnp.asarray(
+            rng.standard_normal((cfg.global_batch, cfg.n_image_patches,
+                                 cfg.d_vision), dtype=np.float32))
+        # Labels cover text positions only (image prefix handled in loss).
+    if cfg.kind == "encdec":
+        rng = np.random.default_rng(np.uint64(cfg.seed * 9_000_003 + step))
+        batch = {
+            "src_embeds": jnp.asarray(rng.standard_normal(
+                (cfg.global_batch, cfg.src_len, cfg.d_model),
+                dtype=np.float32)),
+            "tgt_tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+    return batch
+
+
+class SyntheticLM:
+    """Stateful iterator facade with O(1) checkpoint/restore."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0):
+        self.cfg = cfg
+        self.step = start_step
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        batch = make_batch(self.cfg, self.step)
+        self.step += 1
+        return batch
+
+    # -- checkpoint integration ------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    def load_state_dict(self, state: dict) -> None:
+        assert state["seed"] == self.cfg.seed, "data seed mismatch on resume"
+        self.step = int(state["step"])

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for SeDA's perf-critical compute.
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd public wrappers) and ref.py (pure-jnp oracle).
+All are validated in interpret mode against their oracles, which chain
+back to FIPS-197 test vectors for everything AES-derived.
+
+- aes_ctr        — AES-128-CTR keystream ("AES Engine"); SubBytes via
+                   table gather or MXU one-hot matmul
+- otp_xor        — fused B-AES diversify + data XOR ("Crypt Engine")
+- xormac         — NH universal hash for optBlk MACs ("Integ Engine")
+- fused_crypt_mac — beyond-paper single-pass decrypt + hash
+"""

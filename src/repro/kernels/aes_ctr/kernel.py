@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: batched AES-128-CTR keystream generation.
+
+This is SeDA's "AES Engine" (paper Fig. 2(b)) mapped to a TPU core.
+One grid program produces the OTPs for ``TILE_N`` counter blocks from
+VMEM-resident state:
+
+  HBM -> VMEM: counter words (TILE_N, 4) u32, round keys (11,16), S-box
+  VMEM compute: 10 unrolled AES rounds over a (TILE_N, 16) int32 state
+               (one byte per int32 lane — VPU-native shifts/xors)
+  VMEM -> HBM: OTP lanes (TILE_N, 4) u32
+
+TPU adaptation of SubBytes (the only non-affine step):
+
+* ``subbytes="take"``   — 256-entry table gather (works everywhere;
+  gathers are serviced by the scalar/vector load units on TPU).
+* ``subbytes="onehot"`` — one-hot(state) @ sbox matmul: a (TILE_N*16,
+  256) f32 one-hot times a (256, 1) table runs on the MXU.  This is the
+  TPU-native analogue of "adding AES engines": bandwidth scales with
+  MXU throughput instead of gather throughput.  Exact because all
+  values are small integers in f32.
+
+Both paths are validated against the FIPS-chained oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.aes import _RCON_NP, _SBOX_NP, _SHIFT_ROWS_PERM_NP  # noqa: F401
+from repro.kernels.common import cdiv, default_interpret
+
+__all__ = ["aes_ctr_keystream"]
+
+def _iota(n: int, dtype=jnp.int32) -> jax.Array:
+    """1D iota built in-kernel (Pallas forbids captured array constants)."""
+    return jax.lax.broadcasted_iota(dtype, (n,), 0)
+
+
+def _unpack_counter_bytes(words_u32: jax.Array) -> jax.Array:
+    """(T, 4) u32 -> (T, 16) i32 byte state (big-endian per word)."""
+    w = words_u32.astype(jnp.uint32)
+    shifts = ((3 - _iota(4)) * 8).astype(jnp.uint32)  # [24, 16, 8, 0]
+    b = w[:, :, None] >> shifts[None, None, :]
+    return (b & jnp.uint32(0xFF)).astype(jnp.int32).reshape(w.shape[0], 16)
+
+
+def _pack_lanes_le(state_i32: jax.Array) -> jax.Array:
+    """(T, 16) i32 byte state -> (T, 4) u32 little-endian lanes."""
+    s = state_i32.astype(jnp.uint32).reshape(state_i32.shape[0], 4, 4)
+    shifts = (_iota(4) * 8).astype(jnp.uint32)  # [0, 8, 16, 24]
+    return jnp.sum(s << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def _xtime(x: jax.Array) -> jax.Array:
+    """GF(2^8) doubling on int32 byte lanes."""
+    doubled = (x << 1) ^ jnp.where(x & 0x80, 0x1B, 0)
+    return doubled & 0xFF
+
+
+def _mix_columns(state: jax.Array) -> jax.Array:
+    s = state.reshape(state.shape[0], 4, 4)  # (T, col, row)
+    a0, a1, a2, a3 = s[:, :, 0], s[:, :, 1], s[:, :, 2], s[:, :, 3]
+    x0, x1, x2, x3 = _xtime(a0), _xtime(a1), _xtime(a2), _xtime(a3)
+    b0 = x0 ^ (x1 ^ a1) ^ a2 ^ a3
+    b1 = a0 ^ x1 ^ (x2 ^ a2) ^ a3
+    b2 = a0 ^ a1 ^ x2 ^ (x3 ^ a3)
+    b3 = (x0 ^ a0) ^ a1 ^ a2 ^ x3
+    return jnp.stack([b0, b1, b2, b3], axis=-1).reshape(state.shape)
+
+
+def _sub_bytes_take(state: jax.Array, sbox: jax.Array) -> jax.Array:
+    return jnp.take(sbox, state, axis=0)
+
+
+def _sub_bytes_onehot(state: jax.Array, sbox_f32: jax.Array) -> jax.Array:
+    """SubBytes on the MXU: one-hot(state) @ sbox."""
+    flat = state.reshape(-1)
+    onehot = jax.nn.one_hot(flat, 256, dtype=jnp.float32)
+    looked = onehot @ sbox_f32  # (T*16,)
+    return looked.astype(jnp.int32).reshape(state.shape)
+
+
+def _aes_ctr_kernel(counters_ref, rk_ref, sbox_ref, out_ref, *, subbytes: str):
+    state = _unpack_counter_bytes(counters_ref[...])
+    rk = rk_ref[...].astype(jnp.int32)  # (11, 16)
+    if subbytes == "onehot":
+        sbox = sbox_ref[...].astype(jnp.float32)
+        sub = functools.partial(_sub_bytes_onehot, sbox_f32=sbox)
+    else:
+        sbox = sbox_ref[...].astype(jnp.int32)
+        sub = functools.partial(_sub_bytes_take, sbox=sbox)
+    # ShiftRows permutation, built in-kernel: perm[r+4c] = r + 4((c+r)%4).
+    idx = _iota(16)
+    r, c = idx % 4, idx // 4
+    perm = r + 4 * ((c + r) % 4)
+
+    state = state ^ rk[0][None, :]
+    for rnd in range(1, 10):  # unrolled: round keys static-indexed
+        state = sub(state)
+        state = jnp.take(state, perm, axis=1)  # ShiftRows
+        state = _mix_columns(state)
+        state = state ^ rk[rnd][None, :]
+    state = sub(state)
+    state = jnp.take(state, perm, axis=1)
+    state = state ^ rk[10][None, :]
+    out_ref[...] = _pack_lanes_le(state)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "subbytes", "interpret"))
+def aes_ctr_keystream(counter_words: jax.Array, round_keys: jax.Array, *,
+                      tile_n: int = 256, subbytes: str = "take",
+                      interpret: bool | None = None) -> jax.Array:
+    """(N, 4) u32 counters + (11, 16) u8 schedule -> (N, 4) u32 OTP lanes."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = counter_words.shape[0]
+    tile_n = min(tile_n, max(8, n))
+    n_pad = cdiv(n, tile_n) * tile_n
+    padded = jnp.zeros((n_pad, 4), jnp.uint32).at[:n].set(counter_words)
+    sbox = jnp.asarray(_SBOX_NP, jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_aes_ctr_kernel, subbytes=subbytes),
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, 4), lambda i: (i, 0)),
+            pl.BlockSpec((11, 16), lambda i: (0, 0)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 4), jnp.uint32),
+        interpret=interpret,
+    )(padded, round_keys, sbox)
+    return out[:n]

@@ -1,0 +1,28 @@
+"""Public jit'd wrappers for the AES-CTR keystream kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.aes_ctr.kernel import aes_ctr_keystream
+
+__all__ = ["keystream_lanes", "keystream_bytes"]
+
+
+def keystream_lanes(counter_words: jax.Array, round_keys: jax.Array, *,
+                    subbytes: str = "take",
+                    interpret: bool | None = None) -> jax.Array:
+    """OTPs as (N, 4) uint32 little-endian lanes."""
+    return aes_ctr_keystream(counter_words, round_keys, subbytes=subbytes,
+                             interpret=interpret)
+
+
+def keystream_bytes(counter_words: jax.Array, round_keys: jax.Array, *,
+                    subbytes: str = "take",
+                    interpret: bool | None = None) -> jax.Array:
+    """OTPs as (N, 16) uint8, matching :mod:`repro.core.ctr` layout."""
+    lanes = keystream_lanes(counter_words, round_keys, subbytes=subbytes,
+                            interpret=interpret)
+    return jax.lax.bitcast_convert_type(lanes[..., None], jnp.uint8).reshape(
+        lanes.shape[0], 16)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the AES-CTR keystream kernel.
+
+The oracle reuses the FIPS-validated cipher from :mod:`repro.core.aes`
+(which tests validate against the official vectors), so kernel
+correctness chains back to FIPS-197.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aes, ctr
+
+__all__ = ["aes_ctr_keystream_ref"]
+
+
+def aes_ctr_keystream_ref(counter_words: jax.Array,
+                          round_keys: jax.Array) -> jax.Array:
+    """(N, 4) uint32 counters + (11, 16) uint8 schedule -> (N, 16) uint8 OTPs."""
+    return ctr.ctr_keystream(round_keys, counter_words)
+
+
+def aes_ctr_keystream_lanes_ref(counter_words: jax.Array,
+                                round_keys: jax.Array) -> jax.Array:
+    """Same as above but returning (N, 4) uint32 little-endian lanes,
+    matching the kernel's u32-lane output layout."""
+    otp_u8 = aes_ctr_keystream_ref(counter_words, round_keys)
+    return jax.lax.bitcast_convert_type(
+        otp_u8.reshape(otp_u8.shape[0], 4, 4), jnp.uint32)

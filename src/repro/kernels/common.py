@@ -1,0 +1,20 @@
+"""Shared helpers for the SeDA Pallas TPU kernels."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret", "cdiv"]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: True off-TPU (this container is CPU-only).
+
+    Kernels TARGET TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+    validated in interpret mode, which executes the kernel body on CPU.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

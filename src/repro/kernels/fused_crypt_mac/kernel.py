@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: FUSED decrypt + integrity-hash (beyond-paper).
+
+SeDA's read path touches every protected byte twice: once to XOR the
+pad (Crypt Engine) and once to hash for the optBlk MAC (Integ Engine).
+In hardware those are parallel engines on the same bus; on TPU, running
+them as two kernels costs two HBM reads of the full tensor.  This
+kernel fuses both into ONE VMEM visit per tile:
+
+    HBM -> VMEM: ct tile (TILE_N, S*4), base OTPs, diversifiers,
+                 binding words (TILE_N, 8), NH key (S*4+8,)
+    compute:     pt = ct ^ pad       (crypt engine)
+                 nh = NH(ct ‖ bind)  (integ engine, over ciphertext)
+    VMEM -> HBM: pt tile + (TILE_N, 2) hashes
+
+Memory-term saving vs. unfused: reads drop from 2x data to 1x data
+(hashes/pads are negligible), i.e. ~33% less HBM traffic on the
+read+verify path.  Recorded as a §Perf optimization in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import cdiv, default_interpret
+
+__all__ = ["fused_crypt_mac"]
+
+
+def _fused_kernel(ct_ref, base_ref, div_ref, bind_ref, key_ref,
+                  pt_ref, nh_ref):
+    ct = ct_ref[...]                           # (T, S*4) u32
+    base = base_ref[...]                       # (T, 4) u32
+    div = div_ref[...]                         # (S, 4) u32
+    bind = bind_ref[...]                       # (T, 8) u32
+    k = key_ref[...]                           # (S*4 + 8,) u32
+
+    t, lanes = ct.shape
+    s = div.shape[0]
+
+    # --- Crypt engine: diversified pad XOR ---------------------------------
+    pads = base[:, None, :] ^ div[None, :, :]
+    pt_ref[...] = (ct.reshape(t, s, 4) ^ pads).reshape(t, lanes)
+
+    # --- Integ engine: NH over ciphertext ‖ binding ------------------------
+    m = jnp.concatenate([ct, bind], axis=-1)   # (T, L) with L = lanes + 8
+    a = m[:, 0::2] + k[None, 0::2]
+    b = m[:, 1::2] + k[None, 1::2]
+    mask = jnp.uint32(0xFFFF)
+    a_lo, a_hi = a & mask, a >> 16
+    b_lo, b_hi = b & mask, b >> 16
+    ll = a_lo * b_lo
+    mid = a_lo * b_hi + a_hi * b_lo
+    mid_carry = (mid < a_lo * b_hi).astype(jnp.uint32)
+    lo = ll + (mid << 16)
+    lo_carry = (lo < ll).astype(jnp.uint32)
+    hi = a_hi * b_hi + (mid >> 16) + (mid_carry << 16) + lo_carry
+    s0 = jnp.sum(lo & mask, axis=1, dtype=jnp.uint32)
+    s1 = jnp.sum(lo >> 16, axis=1, dtype=jnp.uint32)
+    tt = (s0 >> 16) + s1
+    lo_sum = (s0 & mask) | ((tt & mask) << 16)
+    hi_sum = jnp.sum(hi, axis=1, dtype=jnp.uint32) + (tt >> 16)
+    nh_ref[...] = jnp.stack([hi_sum, lo_sum], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def fused_crypt_mac(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
+                    div_lanes: jax.Array, bind_words: jax.Array,
+                    key_u32: jax.Array, *, tile_n: int = 256,
+                    interpret: bool | None = None):
+    """Returns (plaintext lanes (N, S*4) u32, NH hashes (N, 2) u32)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, lanes = ct_lanes.shape
+    s = div_lanes.shape[0]
+    assert lanes == 4 * s and key_u32.shape[0] == lanes + 8
+    tile_n = min(tile_n, max(8, n))
+    n_pad = cdiv(n, tile_n) * tile_n
+    ct_p = jnp.zeros((n_pad, lanes), jnp.uint32).at[:n].set(ct_lanes)
+    base_p = jnp.zeros((n_pad, 4), jnp.uint32).at[:n].set(base_otp_lanes)
+    bind_p = jnp.zeros((n_pad, 8), jnp.uint32).at[:n].set(bind_words)
+
+    pt, nh = pl.pallas_call(
+        _fused_kernel,
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 4), lambda i: (i, 0)),
+            pl.BlockSpec((s, 4), lambda i: (0, 0)),
+            pl.BlockSpec((tile_n, 8), lambda i: (i, 0)),
+            pl.BlockSpec((lanes + 8,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_n, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, lanes), jnp.uint32),
+            jax.ShapeDtypeStruct((n_pad, 2), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(ct_p, base_p, div_lanes, bind_p, key_u32)
+    return pt[:n], nh[:n]

@@ -1,0 +1,44 @@
+"""Wrapper: fused secure-read (decrypt + verify hash) for flat buffers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mac
+from repro.core.bytesutil import bytes_to_u32, u32_to_bytes
+from repro.kernels.aes_ctr.ops import keystream_bytes, keystream_lanes
+from repro.kernels.fused_crypt_mac.kernel import fused_crypt_mac
+from repro.kernels.otp_xor.ops import _div_lanes
+
+__all__ = ["secure_read_kernel", "fused_crypt_mac"]
+
+
+def secure_read_kernel(ct_u8: jax.Array, binding: mac.Binding,
+                       round_keys: jax.Array, counter_words: jax.Array,
+                       hash_key_u32: jax.Array, *, block_bytes: int,
+                       subbytes: str = "take",
+                       interpret: bool | None = None):
+    """Kernel-backed secure read: returns (plaintext_u8, block_macs_u8).
+
+    One pass over the ciphertext performs both the B-AES decrypt and
+    the NH compression; the AES finalization of the MACs runs on the
+    tiny hash list.  Bit-identical to the unfused core path.
+    """
+    n_segments = block_bytes // 16
+    if n_segments - 1 > 10:
+        raise ValueError("kernel path supports narrow mode (<= 11 segments)")
+    base = keystream_lanes(counter_words, round_keys, subbytes=subbytes,
+                           interpret=interpret)
+    ct = bytes_to_u32(ct_u8).reshape(-1, n_segments * 4)
+    n = ct.shape[0]
+    div = _div_lanes(round_keys, n_segments)
+    bind_words = binding.words(n)
+    key = hash_key_u32[: ct.shape[1] + 8]
+    pt_lanes, hashes = fused_crypt_mac(ct, base, div, bind_words, key,
+                                       interpret=interpret)
+    fin = mac.finalize_words(hashes[:, 0], hashes[:, 1], binding)
+    pads = keystream_bytes(fin, round_keys, subbytes=subbytes,
+                           interpret=interpret)
+    pt = u32_to_bytes(pt_lanes.reshape(-1)).reshape(ct_u8.shape)
+    return pt, pads[:, : mac.MAC_BYTES]

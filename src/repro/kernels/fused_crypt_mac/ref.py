@@ -1,0 +1,31 @@
+"""Oracle for the fused decrypt+NH kernel: composition of the two refs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mac
+from repro.kernels.otp_xor.ref import otp_xor_ref
+
+__all__ = ["fused_crypt_mac_ref"]
+
+
+def fused_crypt_mac_ref(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
+                        div_lanes: jax.Array, bind_words: jax.Array,
+                        key_u32: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Decrypt wide blocks AND compute their NH hashes (over ciphertext).
+
+    Args:
+      ct_lanes: (N, S*4) u32 ciphertext lanes.
+      base_otp_lanes: (N, 4) u32.
+      div_lanes: (S, 4) u32.
+      bind_words: (N, 8) u32 binding words appended to the NH payload.
+      key_u32: (S*4 + 8,) u32 NH key.
+
+    Returns (plaintext lanes (N, S*4), hashes (N, 2)).
+    """
+    pt = otp_xor_ref(ct_lanes, base_otp_lanes, div_lanes)
+    payload = jnp.concatenate([ct_lanes, bind_words], axis=-1)
+    hi, lo = mac.nh_hash(payload, key_u32)
+    return pt, jnp.stack([hi, lo], axis=-1)

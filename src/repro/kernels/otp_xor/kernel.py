@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused B-AES diversify + XOR ("Crypt Engine", Fig. 3(a)).
+
+The bandwidth-critical half of SeDA's bandwidth-aware encryption: given
+one base OTP per wide block (from the AES kernel) and the per-segment
+diversifiers (round keys), XOR the diversified pads into the data
+stream.  Pure elementwise traffic — the kernel exists to keep this at
+HBM roofline with explicit VMEM tiling instead of materializing the
+(N, S, 16) pad tensor in HBM (which would add 2x write + read traffic).
+
+Layout: data is viewed as (N, S*4) uint32 lanes (S = segments per wide
+block).  For the paper's 512B wide blocks S*4 = 128 — one full TPU lane
+register row, the natural tile width.
+
+    HBM -> VMEM: data tile (TILE_N, S*4), base OTPs (TILE_N, 4),
+                 diversifiers (S, 4)
+    compute:     out[n, 4s+l] = data ^ base[n, l] ^ div[s, l]
+    VMEM -> HBM: ciphertext tile (TILE_N, S*4)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import cdiv, default_interpret
+
+__all__ = ["otp_xor"]
+
+
+def _otp_xor_kernel(data_ref, base_ref, div_ref, out_ref):
+    data = data_ref[...]                       # (T, S*4) u32
+    base = base_ref[...]                       # (T, 4) u32
+    div = div_ref[...]                         # (S, 4) u32
+    t = data.shape[0]
+    s = div.shape[0]
+    d = data.reshape(t, s, 4)
+    pads = base[:, None, :] ^ div[None, :, :]  # (T, S, 4)
+    out_ref[...] = (d ^ pads).reshape(t, s * 4)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def otp_xor(data_lanes: jax.Array, base_otp_lanes: jax.Array,
+            div_lanes: jax.Array, *, tile_n: int = 512,
+            interpret: bool | None = None) -> jax.Array:
+    """(N, S*4) u32 data, (N, 4) u32 base OTPs, (S, 4) u32 diversifiers."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, lanes = data_lanes.shape
+    s = div_lanes.shape[0]
+    assert lanes == 4 * s, (lanes, s)
+    tile_n = min(tile_n, max(8, n))
+    n_pad = cdiv(n, tile_n) * tile_n
+    data_p = jnp.zeros((n_pad, lanes), jnp.uint32).at[:n].set(data_lanes)
+    base_p = jnp.zeros((n_pad, 4), jnp.uint32).at[:n].set(base_otp_lanes)
+
+    out = pl.pallas_call(
+        _otp_xor_kernel,
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 4), lambda i: (i, 0)),
+            pl.BlockSpec((s, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, lanes), jnp.uint32),
+        interpret=interpret,
+    )(data_p, base_p, div_lanes)
+    return out[:n]

@@ -1,0 +1,46 @@
+"""Public wrapper: full B-AES encryption path built from the two kernels.
+
+``baes_encrypt_kernel`` = AES-CTR keystream kernel (1 AES per wide
+block) + fused diversify/XOR kernel — the complete Crypt Engine of
+Fig. 3(a), validated against :func:`repro.core.baes.baes_encrypt`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baes
+from repro.core.bytesutil import bytes_to_u32, u32_to_bytes
+from repro.kernels.aes_ctr.ops import keystream_lanes
+from repro.kernels.otp_xor.kernel import otp_xor
+
+__all__ = ["otp_xor", "baes_encrypt_kernel"]
+
+
+def _div_lanes(round_keys: jax.Array, n_segments: int) -> jax.Array:
+    """Diversifiers as (S, 4) uint32 lanes (row 0 = zeros)."""
+    div_u8 = baes.diversifiers(round_keys, n_segments)  # (S, 16) u8
+    return jax.lax.bitcast_convert_type(
+        div_u8.reshape(n_segments, 4, 4), jnp.uint32)
+
+
+def baes_encrypt_kernel(plaintext_u8: jax.Array, round_keys: jax.Array,
+                        counter_words: jax.Array, *, block_bytes: int,
+                        subbytes: str = "take",
+                        interpret: bool | None = None) -> jax.Array:
+    """Kernel-backed B-AES over a flat uint8 buffer (len % block_bytes == 0).
+
+    Narrow mode only (block_bytes <= 176, i.e. segments <= 11); wide
+    mode derives per-block key schedules and stays on the pure-jnp path.
+    """
+    n_segments = block_bytes // 16
+    if n_segments - 1 > 10:
+        raise ValueError("kernel path supports narrow mode (<= 11 segments); "
+                         "use repro.core.baes for wide mode")
+    base = keystream_lanes(counter_words, round_keys, subbytes=subbytes,
+                           interpret=interpret)            # (N, 4) u32
+    data = bytes_to_u32(plaintext_u8).reshape(-1, n_segments * 4)
+    div = _div_lanes(round_keys, n_segments)
+    ct = otp_xor(data, base, div, interpret=interpret)
+    return u32_to_bytes(ct.reshape(-1)).reshape(plaintext_u8.shape)

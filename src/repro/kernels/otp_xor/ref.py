@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the B-AES diversify+XOR crypt engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["otp_xor_ref"]
+
+
+def otp_xor_ref(data_lanes: jax.Array, base_otp_lanes: jax.Array,
+                div_lanes: jax.Array) -> jax.Array:
+    """Apply per-segment diversified OTPs to wide blocks.
+
+    Args:
+      data_lanes: (N, S*4) uint32 — N wide blocks, S 16B segments each.
+      base_otp_lanes: (N, 4) uint32 — one base OTP per block (AES output).
+      div_lanes: (S, 4) uint32 — per-segment diversifiers (round keys;
+        row 0 is zero so segment 0 keeps the base OTP).
+
+    Returns (N, S*4) uint32 ciphertext lanes:
+      out[n, 4s+l] = data[n, 4s+l] ^ base[n, l] ^ div[s, l]
+    """
+    n, lanes = data_lanes.shape
+    s = div_lanes.shape[0]
+    d = data_lanes.reshape(n, s, 4)
+    pads = base_otp_lanes[:, None, :] ^ div_lanes[None, :, :]
+    return (d ^ pads).reshape(n, lanes)

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: NH universal hash for optBlk MACs ("Integ Engine").
+
+Computes the data-proportional part of the SeDA MAC: the NH hash
+(multiply-accumulate over uint32 lanes, 64-bit accumulation emulated on
+32-bit VPU lanes).  The per-block AES finalization runs on the (tiny)
+hash list via the aes_ctr kernel.
+
+The 64-bit row reduction uses a carry-free decomposition instead of a
+sequential carry chain: the low words are split into 16-bit halves and
+summed exactly in uint32 (exact while pairs-per-block <= 2^16, i.e.
+optBlk <= 512 KiB), then recombined with an explicit carry into the
+high word.  This keeps the whole reduction vectorized on the VPU —
+no fori_loop dependency chain (the in-kernel equivalent of the paper's
+parallelizable XOR-MAC argument).
+
+    HBM -> VMEM: payload tile (TILE_N, L) u32, NH key (L,) u32
+    VMEM -> HBM: hashes (TILE_N, 2) u32
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import cdiv, default_interpret
+
+__all__ = ["nh_hash_kernel_call"]
+
+
+def _nh_kernel(payload_ref, key_ref, out_ref):
+    m = payload_ref[...]                      # (T, L) u32
+    k = key_ref[...]                          # (L,) u32
+    a = m[:, 0::2] + k[None, 0::2]            # (T, L/2) u32 (wraps)
+    b = m[:, 1::2] + k[None, 1::2]
+
+    # 32x32 -> 64-bit products as (hi, lo) u32 pairs.
+    mask = jnp.uint32(0xFFFF)
+    a_lo, a_hi = a & mask, a >> 16
+    b_lo, b_hi = b & mask, b >> 16
+    ll = a_lo * b_lo
+    mid = a_lo * b_hi + a_hi * b_lo           # may wrap: recover carry
+    mid_carry = (mid < a_lo * b_hi).astype(jnp.uint32)
+    lo = ll + (mid << 16)
+    lo_carry = (lo < ll).astype(jnp.uint32)
+    hi = a_hi * b_hi + (mid >> 16) + (mid_carry << 16) + lo_carry
+
+    # Exact vectorized 64-bit row sum: split lo into 16-bit halves.
+    s0 = jnp.sum(lo & mask, axis=1, dtype=jnp.uint32)    # <= 2^16 terms * 2^16
+    s1 = jnp.sum(lo >> 16, axis=1, dtype=jnp.uint32)
+    t = (s0 >> 16) + s1
+    lo_sum = (s0 & mask) | ((t & mask) << 16)
+    carry = t >> 16
+    hi_sum = jnp.sum(hi, axis=1, dtype=jnp.uint32) + carry
+    out_ref[...] = jnp.stack([hi_sum, lo_sum], axis=-1)  # (T, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def nh_hash_kernel_call(payload_u32: jax.Array, key_u32: jax.Array, *,
+                        tile_n: int = 256,
+                        interpret: bool | None = None) -> jax.Array:
+    """(N, L) u32 payload + (L,) u32 key -> (N, 2) u32 NH hashes."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, lanes = payload_u32.shape
+    assert lanes % 2 == 0
+    assert lanes // 2 <= 65536, "optBlk too large for exact vectorized sum"
+    tile_n = min(tile_n, max(8, n))
+    n_pad = cdiv(n, tile_n) * tile_n
+    payload_p = jnp.zeros((n_pad, lanes), jnp.uint32).at[:n].set(payload_u32)
+
+    out = pl.pallas_call(
+        _nh_kernel,
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 2), jnp.uint32),
+        interpret=interpret,
+    )(payload_p, key_u32)
+    return out[:n]

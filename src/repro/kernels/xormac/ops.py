@@ -1,0 +1,42 @@
+"""Kernel-backed optBlk MAC + layer MAC (bit-identical to core.mac "nh")."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import mac
+from repro.kernels.aes_ctr.ops import keystream_bytes
+from repro.kernels.xormac.kernel import nh_hash_kernel_call
+
+__all__ = ["block_macs_kernel", "layer_mac_kernel", "nh_hash_kernel_call"]
+
+
+def block_macs_kernel(blocks_u8: jax.Array, binding: mac.Binding, *,
+                      hash_key_u32: jax.Array, round_keys: jax.Array,
+                      subbytes: str = "take",
+                      interpret: bool | None = None) -> jax.Array:
+    """(n_blocks, block_bytes) u8 -> (n_blocks, 8) u8 MACs.
+
+    NH compression runs in the xormac kernel; the AES PRF finalization
+    reuses the aes_ctr kernel on the (n_blocks, 4) hash words.
+    """
+    payload = mac.nh_payload(blocks_u8, binding)
+    if hash_key_u32.shape[-1] < payload.shape[-1]:
+        raise ValueError("NH key too short for this optBlk size")
+    hashes = nh_hash_kernel_call(payload, hash_key_u32[: payload.shape[-1]],
+                                 interpret=interpret)
+    fin = mac.finalize_words(hashes[:, 0], hashes[:, 1], binding)
+    pads = keystream_bytes(fin, round_keys, subbytes=subbytes,
+                           interpret=interpret)
+    return pads[:, : mac.MAC_BYTES]
+
+
+def layer_mac_kernel(blocks_u8: jax.Array, binding: mac.Binding, *,
+                     hash_key_u32: jax.Array, round_keys: jax.Array,
+                     subbytes: str = "take",
+                     interpret: bool | None = None) -> jax.Array:
+    """Layer MAC = XOR of kernel-computed optBlk MACs -> (8,) u8."""
+    macs = block_macs_kernel(blocks_u8, binding, hash_key_u32=hash_key_u32,
+                             round_keys=round_keys, subbytes=subbytes,
+                             interpret=interpret)
+    return mac.xor_aggregate(macs)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the NH-hash / XOR-MAC kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mac
+
+__all__ = ["nh_hash_ref", "block_macs_ref", "layer_mac_ref"]
+
+
+def nh_hash_ref(payload_u32: jax.Array, key_u32: jax.Array) -> jax.Array:
+    """(N, L) u32 payload + (L,) u32 key -> (N, 2) u32 (hi, lo)."""
+    hi, lo = mac.nh_hash(payload_u32, key_u32)
+    return jnp.stack([hi, lo], axis=-1)
+
+
+def block_macs_ref(blocks_u8, binding, *, hash_key_u32, round_keys):
+    return mac.block_macs(blocks_u8, binding, hash_key_u32=hash_key_u32,
+                          round_keys=round_keys, engine="nh")
+
+
+def layer_mac_ref(blocks_u8, binding, *, hash_key_u32, round_keys):
+    return mac.layer_mac(blocks_u8, binding, hash_key_u32=hash_key_u32,
+                         round_keys=round_keys, engine="nh")

@@ -1,0 +1,325 @@
+"""Loop-aware HLO analysis for the roofline.
+
+``compiled.cost_analysis()`` (and a naive text scan) count a while-loop
+body ONCE — but our models scan over layers, so flops/collective bytes
+must be multiplied by trip counts.  This module parses the post-SPMD
+HLO text into computations, builds the call graph (while bodies x trip
+count, fusions/calls x1), and propagates multiplicities from ENTRY.
+
+Per computation we count:
+  * dot flops: 2 * prod(output shape) * prod(contracting dims) — exact
+    for the matmul-dominated transformer/SSD graphs (elementwise flops
+    are excluded by design; they are roofline-irrelevant);
+  * collective operand bytes by kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute).
+
+Shapes in the post-SPMD module are per-device, so totals are per-chip.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+from repro.launch.hlo_utils import DTYPE_BYTES, collective_bytes
+
+__all__ = ["ModuleStats", "analyze_hlo"]
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_SHAPE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64"
+                    r"|c64|c128)\[([0-9,]*)\]")
+_DOT = re.compile(r"=\s*[a-z0-9]+\[([0-9,]*)\][^=]*\bdot\(")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_WHILE = re.compile(r"\bwhile\(.*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_WHILE_REV = re.compile(r"\bwhile\(.*body=%?([\w.\-]+),\s*condition=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+@dataclass
+class ModuleStats:
+    dot_flops: float = 0.0
+    collectives: dict = field(default_factory=dict)
+    mem_bytes: float = 0.0   # HLO-level operand+output traffic (loop-aware)
+    n_while: int = 0
+    trip_counts: list = field(default_factory=list)
+
+    @property
+    def collective_total(self) -> float:
+        return sum(v for k, v in self.collectives.items()
+                   if k not in ("total", "count"))
+
+
+def _split_computations(text: str) -> dict:
+    comps: dict[str, list] = {}
+    entry = None
+    current = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        is_header = (not line.startswith(" ") and "(" in line
+                     and stripped.endswith("{") and "->" in line)
+        if is_header:
+            m = _COMP_HEADER.match(line)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                if line.startswith("ENTRY"):
+                    entry = current
+                continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(stripped)
+    return comps, entry
+
+
+_DEF = re.compile(r"^%?([\w.\-]+)\s*=")
+_DOT_OPERANDS = re.compile(r"\bdot\(\s*%?([\w.\-]+)")
+
+
+def _symbol_table(lines: list) -> dict:
+    """instruction name -> output dims (first shape literal after '=')."""
+    table = {}
+    for line in lines:
+        d = _DEF.match(line)
+        if not d:
+            continue
+        eq = line.index("=")
+        s = _SHAPE.search(line, eq)
+        if s:
+            table[d.group(1)] = [int(x) for x in s.group(2).split(",") if x]
+    return table
+
+
+def _symbol_bytes(lines: list) -> dict:
+    """instruction name -> output byte size (dtype-aware, tuples summed)."""
+    table = {}
+    for line in lines:
+        d = _DEF.match(line)
+        if not d or "=" not in line:
+            continue
+        table[d.group(1)] = _dtype_bytes_of_line_output(line)
+    return table
+
+
+def _dot_flops_of_line(line: str, symtab: dict) -> float:
+    m = _DOT.search(line)
+    if not m:
+        return 0.0
+    out_elems = 1
+    for d in m.group(1).split(","):
+        if d:
+            out_elems *= int(d)
+    contract_elems = 1
+    cm = _CONTRACT.search(line)
+    om = _DOT_OPERANDS.search(line)
+    if cm and om:
+        lhs = symtab.get(om.group(1))
+        if lhs:
+            for i in (int(x) for x in cm.group(1).split(",") if x):
+                if i < len(lhs):
+                    contract_elems *= lhs[i]
+    return 2.0 * out_elems * contract_elems
+
+
+_REF = re.compile(r"%([\w.\-]+)")
+_ATTR_REFS = re.compile(r"(?:calls|to_apply|condition|body)=%[\w.\-]+")
+_OPCODE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+# Zero-traffic opcodes: layout/tuple/control plumbing (while itself is
+# aliased carry passing; its body's slices are charged separately).
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "iota", "after-all", "partition-id", "replica-id", "while",
+    "conditional", "call", "custom-call",
+}
+
+
+def _opcode_of_line(line: str, region_end: int) -> str:
+    m = _OPCODE.search(line, region_end)
+    return m.group(1) if m else ""
+
+
+def _dtype_bytes_of_line_output(line: str) -> float:
+    """Sum of all output shape bytes printed immediately after '='."""
+    eq = line.index("=")
+    rhs = line[eq + 1:].lstrip()
+    base = len(line) - len(rhs)
+    if rhs.startswith("("):
+        # Tuple output: region is the balanced paren group.
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        region = line[base: base + end + 1]
+    else:
+        op_paren = line.find("(", eq)
+        region = line[eq: op_paren if op_paren != -1 else len(line)]
+    total = 0
+    for dtype, dims in _SHAPE.findall(region):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return float(total)
+
+
+def _output_region_end(line: str) -> int:
+    """Index just past the output type block (start of the op name)."""
+    eq = line.index("=")
+    rhs = line[eq + 1:].lstrip()
+    base = len(line) - len(rhs)
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return base + i + 1
+    m = _SHAPE.search(line, eq)
+    return m.end() if m else eq + 1
+
+
+def _line_traffic(line: str, symtab_bytes: dict) -> float:
+    """operand + output bytes of one instruction."""
+    if "=" not in line:
+        return 0.0
+    region_end = _output_region_end(line)
+    opcode = _opcode_of_line(line, region_end)
+    if opcode in _NO_TRAFFIC_OPS:
+        return 0.0
+    out = _dtype_bytes_of_line_output(line)
+    body = _ATTR_REFS.sub("", line[region_end:])
+    # Strip metadata tail (op names there contain no %refs anyway).
+    meta = body.find("metadata=")
+    if meta != -1:
+        body = body[:meta]
+    operands = 0.0
+    for name in _REF.findall(body):
+        operands += symtab_bytes.get(name, 0.0)
+    return out + operands
+
+
+def _trip_count(cond_lines: list) -> int:
+    """Max plausible loop-bound constant in the condition computation."""
+    best = 1
+    for line in cond_lines:
+        for c in _CONST_INT.findall(line):
+            v = int(c)
+            if 1 < v <= 1_000_000:
+                best = max(best, v)
+    return best
+
+
+def analyze_hlo(text: str) -> ModuleStats:
+    comps, entry = _split_computations(text)
+    if entry is None:
+        # Fallback: treat the whole text as one computation.
+        stats = ModuleStats()
+        lines = [l.strip() for l in text.splitlines()]
+        symtab = _symbol_table(lines)
+        stats.dot_flops = sum(_dot_flops_of_line(l, symtab) for l in lines)
+        stats.mem_bytes = sum(_line_traffic(l, _symbol_bytes(lines))
+                              for l in lines)
+        stats.collectives = collective_bytes(text)
+        return stats
+
+    # Fusion bodies: their internal ops read VMEM/registers, not HBM —
+    # traffic is charged at the fusion call site instead.
+    fusion_bodies: set = set()
+    for lines in comps.values():
+        for line in lines:
+            if " fusion(" in line or "\tfusion(" in line or "= fusion(" in line:
+                cm = _CALLS.search(line)
+                if cm:
+                    fusion_bodies.add(cm.group(1))
+
+    # Per-computation raw stats.
+    raw_flops = {}
+    raw_coll = {}
+    raw_mem = {}
+    edges = defaultdict(list)  # comp -> [(child, multiplier)]
+    n_while = 0
+    trips = []
+    for name, lines in comps.items():
+        symtab = _symbol_table(lines)
+        raw_flops[name] = sum(_dot_flops_of_line(l, symtab) for l in lines)
+        raw_coll[name] = collective_bytes("\n".join(lines))
+        if name in fusion_bodies:
+            raw_mem[name] = 0.0
+        else:
+            sym_bytes = _symbol_bytes(lines)
+            raw_mem[name] = sum(_line_traffic(l, sym_bytes) for l in lines)
+        for line in lines:
+            wm = _WHILE.search(line) or _WHILE_REV.search(line)
+            if wm and "while(" in line:
+                g1, g2 = wm.group(1), wm.group(2)
+                cond, body = (g1, g2) if _WHILE.search(line) else (g2, g1)
+                trip = _trip_count(comps.get(cond, []))
+                n_while += 1
+                trips.append(trip)
+                edges[name].append((body, trip))
+                edges[name].append((cond, trip + 1))
+                continue
+            bm = _BRANCHES.search(line)
+            if bm:
+                for branch in bm.group(1).split(","):
+                    edges[name].append((branch.strip().lstrip("%"), 1))
+                continue
+            cm = _CALLS.search(line)
+            if cm:
+                edges[name].append((cm.group(1), 1))
+
+    # Propagate multiplicities from ENTRY in topological order (the HLO
+    # call graph is a DAG; fusions may be shared by several parents).
+    reachable = {entry}
+    stack = [entry]
+    while stack:
+        c = stack.pop()
+        for child, _ in edges.get(c, []):
+            if child in comps and child not in reachable:
+                reachable.add(child)
+                stack.append(child)
+    indeg: dict[str, int] = defaultdict(int)
+    for c in reachable:
+        for child, _ in edges.get(c, []):
+            if child in reachable:
+                indeg[child] += 1
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    queue = [c for c in reachable if indeg[c] == 0]
+    while queue:
+        c = queue.pop()
+        for child, k in edges.get(c, []):
+            if child not in reachable:
+                continue
+            mult[child] += mult[c] * k
+            indeg[child] -= 1
+            if indeg[child] == 0:
+                queue.append(child)
+
+    stats = ModuleStats(n_while=n_while, trip_counts=trips)
+    coll_total: dict = defaultdict(float)
+    for name in comps:
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        stats.dot_flops += raw_flops[name] * m
+        stats.mem_bytes += raw_mem[name] * m
+        for k, v in raw_coll[name].items():
+            if k in ("total", "count"):
+                continue
+            coll_total[k] += v * m
+    stats.collectives = dict(coll_total)
+    return stats

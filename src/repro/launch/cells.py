@@ -1,0 +1,158 @@
+"""Cell builders: one lowerable program per (arch × shape × mesh).
+
+A *cell* is the unit of the multi-pod dry-run: the jitted step function
+plus ShapeDtypeStruct arguments and planner shardings.  Used by
+launch/dryrun.py and launch/roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import OPT_DTYPE_OVERRIDES, SHAPES, get_arch
+from repro.configs.base import ArchDef, Shape
+from repro.launch import sharding as shp
+from repro.launch.mesh import dp_axes, mesh_axis_size
+from repro.models import encdec as ed
+from repro.models import lm as lm_mod
+from repro.models.layers import shape_structs
+from repro.models.partitioning import activation_context
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.train.optimizer import AdamWConfig, opt_state_specs
+from repro.train.train_step import make_train_step
+
+__all__ = ["Cell", "build_cell", "ENCDEC_DECODE_SRC_LEN"]
+
+ENCDEC_DECODE_SRC_LEN = 1024
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: ArchDef
+    shape: Shape
+    fn: Callable
+    args: tuple                # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any         # pytree or None
+    meta: dict
+
+    def activation_rules(self, mesh) -> dict:
+        """Logical activation axes -> mesh axes for this cell."""
+        b_axis, s_axis = shp.batch_sharding(mesh, self.shape.global_batch)
+        return {"batch": b_axis, "seq": s_axis, "residual": None,
+                "vocab": "model", "experts": "model", "mlp": "model"}
+
+    def lower(self, mesh):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings)
+        with activation_context(mesh, self.activation_rules(mesh)):
+            return jitted.lower(*self.args)
+
+
+def _token_struct(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _batch_structs(arch: ArchDef, cfg, shape: Shape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if arch.kind == "encdec":
+        src = s // 2
+        tgt = s - src
+        return {
+            "src_embeds": jax.ShapeDtypeStruct((b, src, cfg.d_model),
+                                               jnp.dtype(cfg.dtype)),
+            "tgt_tokens": _token_struct(b, tgt),
+            "labels": _token_struct(b, tgt),
+        }
+    batch = {}
+    text = s
+    if cfg.n_image_patches:
+        text = s - cfg.n_image_patches
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_image_patches, cfg.d_vision), jnp.dtype(cfg.dtype))
+    batch["tokens"] = _token_struct(b, text)
+    batch["labels"] = _token_struct(b, text)
+    return batch
+
+
+def _batch_shardings(arch: ArchDef, cfg, shape: Shape, mesh) -> dict:
+    tok = shp.token_sharding(mesh, shape.global_batch, shape.seq_len)
+    b_axis = tok.spec[0] if len(tok.spec) else None
+    if arch.kind == "encdec":
+        return {
+            "src_embeds": NamedSharding(mesh, P(b_axis, None, None)),
+            "tgt_tokens": tok, "labels": tok,
+        }
+    out = {"tokens": tok, "labels": tok}
+    if cfg.n_image_patches:
+        out["image_embeds"] = NamedSharding(mesh, P(b_axis, None, None))
+    return out
+
+
+def _param_specs(arch: ArchDef, cfg):
+    if arch.kind == "encdec":
+        return ed.encdec_specs(cfg)
+    return lm_mod.lm_specs(cfg)
+
+
+def build_cell(arch_name: str, shape_name: str, mesh, *,
+               smoke: bool = False) -> Cell:
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    if not arch.supports(shape):
+        raise ValueError(
+            f"{arch_name} skips {shape_name} (full-attention arch; "
+            f"DESIGN.md §5)")
+    cfg = arch.make_smoke_config() if smoke else arch.make_config()
+    rules = arch.sharding_rules()
+
+    specs = _param_specs(arch, cfg)
+    params_structs = shape_structs(specs)
+    params_shard = shp.param_shardings(specs, rules, mesh)
+    meta = {"arch": arch_name, "shape": shape_name, "kind": shape.kind}
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(
+            state_dtype=OPT_DTYPE_OVERRIDES.get(arch_name, "float32"))
+        opt_specs = opt_state_specs(specs, opt_cfg)
+        opt_structs = shape_structs(opt_specs)
+        opt_shard = shp.param_shardings(opt_specs, rules, mesh)
+        batch = _batch_structs(arch, cfg, shape)
+        batch_shard = _batch_shardings(arch, cfg, shape, mesh)
+        fn = make_train_step(arch, cfg, opt_cfg)
+        return Cell(arch, shape, fn,
+                    (params_structs, opt_structs, batch),
+                    (params_shard, opt_shard, batch_shard),
+                    (params_shard, opt_shard, None), meta)
+
+    if shape.kind == "prefill":
+        batch = _batch_structs(arch, cfg, shape)
+        batch.pop("labels", None)
+        batch_shard = _batch_shardings(arch, cfg, shape, mesh)
+        batch_shard.pop("labels", None)
+        fn = make_prefill_step(arch, cfg, max_len=shape.seq_len)
+        return Cell(arch, shape, fn, (params_structs, batch),
+                    (params_shard, batch_shard), None, meta)
+
+    # decode: one new token against a cache of seq_len.
+    b = shape.global_batch
+    if arch.kind == "encdec":
+        caches = ed.decoder_cache_specs(cfg, b, shape.seq_len,
+                                        ENCDEC_DECODE_SRC_LEN)
+        axes = ed.decoder_cache_axes(cfg)
+    else:
+        caches = lm_mod.cache_specs(cfg, b, shape.seq_len)
+        axes = lm_mod.cache_axes(cfg)
+    cache_shard = shp.cache_shardings(axes, caches, rules, mesh, b)
+    tokens = _token_struct(b, 1)
+    tok_shard = NamedSharding(
+        mesh, P(shp.batch_sharding(mesh, b)[0], None))
+    fn = make_decode_step(arch, cfg)
+    return Cell(arch, shape, fn, (params_structs, tokens, caches),
+                (params_shard, tok_shard, cache_shard),
+                (None, cache_shard), meta)

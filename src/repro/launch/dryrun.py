@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape) cell, ``.lower().compile()`` the
+step program on the production mesh — 16x16 single-pod AND 2x16x16
+multi-pod — and record memory_analysis / cost_analysis / collective
+bytes into artifacts/dryrun/*.json.  A failure here (sharding mismatch,
+OOM at compile, unsupported collective) is a bug in the system.
+
+The XLA_FLAGS line above MUST run before any other import that touches
+jax: jax locks the device count at first init.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b \
+        --shape train_4k --mesh single
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_arch           # noqa: E402
+from repro.launch.analysis import analyze_hlo               # noqa: E402
+from repro.launch.cells import build_cell                   # noqa: E402
+from repro.launch.hlo_utils import collective_bytes         # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+
+def _mem_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        val = getattr(ma, field, None)
+        if val is not None:
+            out[field] = int(val)
+    return out
+
+
+def _cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if not ca:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    keep = {}
+    for k, v in ca.items():
+        if k in ("flops", "bytes accessed", "transcendentals",
+                 "optimal_seconds") or k.startswith("bytes accessed"):
+            keep[k] = float(v)
+    return keep
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             out_dir: str, *, keep_hlo: bool = False) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    record = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(zip(mesh.axis_names,
+                               [mesh.shape[a] for a in mesh.axis_names])),
+        "status": "unknown",
+    }
+    t0 = time.time()
+    try:
+        cell = build_cell(arch_name, shape_name, mesh)
+        lowered = cell.lower(mesh)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+        hlo = compiled.as_text()
+        stats = analyze_hlo(hlo)  # loop-aware per-chip flops + collectives
+        record.update({
+            "status": "ok",
+            "lower_s": round(t_lower - t0, 2),
+            "compile_s": round(t_compile - t_lower, 2),
+            "memory_analysis": _mem_analysis_dict(compiled),
+            "cost_analysis": _cost_analysis_dict(compiled),
+            "collectives_raw": collective_bytes(hlo),
+            "dot_flops_per_chip": stats.dot_flops,
+            "mem_bytes_per_chip": stats.mem_bytes,
+            "collectives_per_chip": stats.collectives,
+            "collective_total_per_chip": stats.collective_total,
+            "while_trip_counts": stats.trip_counts,
+            "hlo_lines": hlo.count("\n"),
+        })
+        print(f"[dryrun] {arch_name} x {shape_name} x {mesh_kind}: OK "
+              f"(lower {record['lower_s']}s, compile {record['compile_s']}s)")
+        print(f"  memory_analysis: {record['memory_analysis']}")
+        print(f"  cost_analysis:   {record['cost_analysis']}")
+        print(f"  dot_flops/chip:  {record['dot_flops_per_chip']:.4g} "
+              f"(trips {record['while_trip_counts']})")
+        print(f"  collectives/chip: {record['collectives_per_chip']}")
+        if keep_hlo:
+            with open(os.path.join(
+                    out_dir, f"{arch_name}_{shape_name}_{mesh_kind}.hlo.txt"),
+                    "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 - record and continue
+        record.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]})
+        print(f"[dryrun] {arch_name} x {shape_name} x {mesh_kind}: FAIL {e}")
+
+    fname = f"{arch_name}_{shape_name}_{mesh_kind}.json"
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACTS))
+    args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    assert n_dev >= 512, f"dry-run needs 512 placeholder devices, got {n_dev}"
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        # Smallest archs first so results stream early.
+        order = ["smollm-135m", "mamba2-780m", "seamless-m4t-large-v2",
+                 "olmoe-1b-7b", "minitron-4b", "minitron-8b", "pixtral-12b",
+                 "jamba-v0.1-52b", "granite-34b", "deepseek-v3-671b"]
+        for a in order:
+            for s in SHAPES:
+                if get_arch(a).supports(SHAPES[s]):
+                    cells.append((a, s))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape))
+
+    results = []
+    for a, s in cells:
+        for m in meshes:
+            fname = os.path.join(args.out, f"{a}_{s}_{m}.json")
+            if args.skip_existing and os.path.exists(fname):
+                with open(fname) as f:
+                    rec = json.load(f)
+                if rec.get("status") == "ok":
+                    print(f"[dryrun] {a} x {s} x {m}: cached OK")
+                    results.append(rec)
+                    continue
+            results.append(run_cell(a, s, m, args.out,
+                                    keep_hlo=args.keep_hlo))
+
+    ok = sum(1 for r in results if r["status"] == "ok")
+    print(f"\n[dryrun] {ok}/{len(results)} cells OK")
+    if ok != len(results):
+        for r in results:
+            if r["status"] != "ok":
+                print(f"  FAIL: {r['arch']} x {r['shape']} x {r['mesh']}: "
+                      f"{r.get('error')}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

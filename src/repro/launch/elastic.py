@@ -1,0 +1,40 @@
+"""Elastic re-scaling: restore a secure checkpoint onto a different mesh.
+
+Checkpoints store arrays unsharded (gathered at save), so scaling a job
+from N to M hosts is: verify + decrypt the checkpoint, build the new
+mesh's planner shardings, and ``jax.device_put`` each leaf.  The data
+pipeline replays deterministically from the step recorded in the
+manifest, so the token stream is unchanged across the re-shard.
+
+    reshard_params(params_or_path, arch_name, new_mesh) -> sharded pytree
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs import get_arch
+from repro.launch import sharding as shp
+from repro.models import encdec as ed
+from repro.models import lm as lm_mod
+
+__all__ = ["plan_for_mesh", "reshard_params"]
+
+
+def plan_for_mesh(arch_name: str, mesh, *, smoke: bool = False):
+    """(specs, shardings) for an arch on a target mesh."""
+    arch = get_arch(arch_name)
+    cfg = arch.make_smoke_config() if smoke else arch.make_config()
+    specs = (ed.encdec_specs(cfg) if arch.kind == "encdec"
+             else lm_mod.lm_specs(cfg))
+    return specs, shp.param_shardings(specs, arch.sharding_rules(), mesh)
+
+
+def reshard_params(params: Any, arch_name: str, new_mesh, *,
+                   smoke: bool = False) -> Any:
+    """Place (restored, unsharded) params onto a new mesh's layout."""
+    _, shardings = plan_for_mesh(arch_name, new_mesh, smoke=smoke)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), params, shardings)

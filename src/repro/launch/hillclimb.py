@@ -1,0 +1,93 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: re-lower one cell with a code variant and
+print the three roofline terms, for hypothesis -> change -> measure
+cycles.  Variants are applied by monkeypatching config knobs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --arch olmoe-1b-7b --shape train_4k --set moe.dispatch=dp
+"""
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+
+from repro.configs import SHAPES, get_arch                 # noqa: E402
+from repro.launch.analysis import analyze_hlo              # noqa: E402
+from repro.launch.cells import build_cell                  # noqa: E402
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: E402
+
+
+def _apply_overrides(cfg, sets):
+    for kv in sets:
+        path, val = kv.split("=", 1)
+        try:
+            val = json.loads(val)
+        except json.JSONDecodeError:
+            pass
+        parts = path.split(".")
+        if len(parts) == 1:
+            cfg = dataclasses.replace(cfg, **{parts[0]: val})
+        else:
+            sub = getattr(cfg, parts[0])
+            sub = sub._replace(**{parts[1]: val})
+            cfg = dataclasses.replace(cfg, **{parts[0]: sub})
+    return cfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override, e.g. moe.dispatch=dp")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding-rule override, e.g. embed=null")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    arch = get_arch(args.arch)
+
+    # Build the cell with overridden config/rules: patch the registry.
+    base_make = arch.make_config
+    rule_overrides = dict(arch.rules)
+    for kv in args.rule:
+        k, v = kv.split("=", 1)
+        rule_overrides[k] = json.loads(v) if v in ("null",) else (
+            tuple(v.split("+")) if "+" in v else v)
+    arch_patched = dataclasses.replace(
+        arch, make_config=lambda: _apply_overrides(base_make(), args.set),
+        rules=rule_overrides)
+    import repro.configs as cfgs
+    cfgs.ARCHS[args.arch] = arch_patched
+
+    t0 = time.time()
+    cell = build_cell(args.arch, args.shape, mesh)
+    compiled = cell.lower(mesh).compile()
+    t1 = time.time()
+    stats = analyze_hlo(compiled.as_text())
+
+    terms = {
+        "compute_s": stats.dot_flops / PEAK_FLOPS,
+        "memory_s": stats.mem_bytes / HBM_BW,
+        "collective_s": stats.collective_total / LINK_BW,
+    }
+    print(f"[hillclimb] {args.arch} x {args.shape} x {args.mesh} "
+          f"overrides={args.set} (compile {t1 - t0:.0f}s)")
+    print(f"  dot_flops/chip = {stats.dot_flops:.4g}")
+    print(f"  mem_bytes/chip = {stats.mem_bytes:.4g}")
+    print(f"  collectives/chip = "
+          f"{ {k: float(f'{v:.4g}') for k, v in stats.collectives.items()} }")
+    for k, v in terms.items():
+        print(f"  {k:14s} = {v:.4g}")
+    print(f"  dominant = {max(terms, key=terms.get)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Post-SPMD HLO analysis: collective-traffic extraction.
+
+``compiled.as_text()`` is the per-device module after the SPMD
+partitioner has materialized collectives.  We sum operand byte sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction; shapes in that module are already
+per-device, so the totals are per-chip collective bytes.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "DTYPE_BYTES", "parse_shape_bytes"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# Start/done pairs appear for async collectives; count each op once.
+_SKIP_SUFFIXES = ("-done",)
+
+
+def parse_shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind operand bytes from a post-SPMD HLO module.
+
+    Returns {kind: bytes, ..., 'total': bytes, 'count': n_ops}.
+    """
+    out: dict = defaultdict(float)
+    count = 0
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        m = re.search(r"=\s*(?:\([^)]*\)\s*)?[a-z0-9\[\],{}\s]*?"
+                      r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start|-done)?\(", line)
+        if not m:
+            continue
+        kind, suffix = m.group(1), m.group(2) or ""
+        if suffix == "-done":
+            continue  # counted at -start
+        # Operand region: everything after the op's opening paren.
+        start = line.index(m.group(0)) + len(m.group(0))
+        operand_text = line[start:]
+        nbytes = parse_shape_bytes(operand_text)
+        if nbytes == 0:
+            # Operands not typed inline: fall back to the output shape
+            # (text before the '=').
+            nbytes = parse_shape_bytes(line[: line.index("=")])
+            if nbytes == 0:
+                # Output tuple printed after '=': scan the full line.
+                nbytes = parse_shape_bytes(line)
+        out[kind] += nbytes
+        count += 1
+    out["total"] = float(sum(v for k, v in out.items() if k in _COLLECTIVES))
+    out["count"] = count
+    return dict(out)

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax
+initialization; tests see the default 1-device CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "dp_axes", "mesh_axis_size"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires >= prod(shape) host devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel mesh axes: ('pod', 'data') when a pod axis exists."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def mesh_axis_size(mesh, axis) -> int:
+    """Size of a mesh axis or tuple of axes (product)."""
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]

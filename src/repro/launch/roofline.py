@@ -1,0 +1,227 @@
+"""Roofline analysis (deliverable g) — reads artifacts/dryrun/*.json.
+
+Per (arch × shape) on the single-pod mesh:
+
+    compute term    = dot_flops_per_chip / 197e12        (bf16 peak)
+    memory term     = HBM bytes per chip / 819e9
+    collective term = collective bytes per chip / 50e9   (per ICI link)
+
+Two memory-byte sources are reported:
+  * hlo   — loop-aware operand+output bytes parsed from the compiled
+            module (XLA's own "bytes accessed" convention).  On the CPU
+            lowering this over-counts attention intermediates that a
+            TPU Pallas flash kernel keeps in VMEM;
+  * model — analytic first-principles traffic: params (fwd+bwd+opt),
+            saved activations under the remat policy, logits, caches.
+            This is the headline number; both appear in EXPERIMENTS.md.
+
+MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference), compared
+against chips × dot_flops_per_chip to expose replication waste.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--json DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+
+from repro.configs import SHAPES, get_arch
+from repro.launch.mesh import make_production_mesh  # noqa: F401 (doc link)
+from repro.models import encdec as ed
+from repro.models import lm as lm_mod
+from repro.models.layers import ParamSpec
+
+PEAK_FLOPS = 197e12       # bf16 per chip (TPU v5e)
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+CHIPS = {"single": 256, "multi": 512}
+
+
+def _iter_leaves(specs):
+    import jax
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    for path, s in flat:
+        yield jax.tree_util.keystr(path), s
+
+
+def _param_bytes(arch, cfg) -> tuple:
+    """(total_bytes, active_bytes) — active scales MoE experts by k/E."""
+    specs = (ed.encdec_specs(cfg) if arch.kind == "encdec"
+             else lm_mod.lm_specs(cfg))
+    total = active = 0.0
+    moe = getattr(cfg, "moe", None)
+    for path, s in _iter_leaves(specs):
+        nbytes = math.prod(s.shape) * (2 if s.dtype == "bfloat16" else 4)
+        total += nbytes
+        frac = 1.0
+        if moe is not None and "moe" in path and "shared" not in path \
+                and "router" not in path:
+            frac = moe.top_k / moe.n_experts
+        active += nbytes * frac
+    return total, active
+
+
+def model_flops(arch, cfg, shape) -> float:
+    """6·N_active·D for train, 2·N_active·D per generated/processed token."""
+    total_b, active_b = _param_bytes(arch, cfg)
+    n_active = active_b / 2  # bf16 params
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch.
+    return 2.0 * n_active * shape.global_batch
+
+
+def analytic_mem_bytes_per_chip(arch, cfg, shape, chips: int) -> float:
+    """First-principles HBM traffic per chip per step (headline model)."""
+    total_b, active_b = _param_bytes(arch, cfg)
+    p_chip = total_b / chips          # fully-sharded across the pod
+    dp = 16                           # data-parallel ways on the 16x16 mesh
+    b_local = max(1, shape.global_batch // dp)
+    d_model = cfg.d_model
+    n_layers = getattr(cfg, "n_layers", None) or (cfg.enc_layers
+                                                  + cfg.dec_layers)
+    act_dtype = 2
+
+    if shape.kind == "train":
+        # params: fwd read + bwd read + recompute read (full remat) = 3x
+        # grads: write + read (2x); opt state f32 m,v r/w (8 or 4 bytes).
+        opt_mult = 4 if arch.name not in ("deepseek-v3-671b",
+                                          "jamba-v0.1-52b",
+                                          "granite-34b") else 2
+        params_traffic = (3 + 2) * p_chip + 2 * 2 * (opt_mult / 2) * p_chip
+        # saved activations: one residual per layer, write + read.
+        acts = 2 * n_layers * b_local * shape.seq_len * d_model * act_dtype
+        # logits in f32: write + read (loss + backward).
+        logits = 2 * b_local * shape.seq_len * cfg.vocab * 4 / 16  # vocab TP
+        return params_traffic + acts + logits
+    if shape.kind == "prefill":
+        acts = 2 * n_layers * b_local * shape.seq_len * d_model * act_dtype
+        caches = n_layers * b_local * shape.seq_len * d_model * act_dtype / 4
+        return p_chip + acts + caches
+    # decode: stream params once + read the whole cache once.
+    cache = _cache_bytes_per_chip(arch, cfg, shape, dp)
+    return p_chip + cache
+
+
+def _cache_bytes_per_chip(arch, cfg, shape, dp) -> float:
+    b_local = max(1, shape.global_batch // dp)
+    if arch.kind == "encdec":
+        per_tok = 2 * cfg.n_kv * cfg.head_dim * 2
+        return cfg.dec_layers * b_local * shape.seq_len * per_tok / 1
+    kinds = lm_mod.layout(cfg)
+    total = 0.0
+    for k in kinds:
+        if k.mixer == "attn":
+            shard = 16 if cfg.n_kv % 16 == 0 else 1  # kv-head TP
+            total += b_local * shape.seq_len * 2 * cfg.n_kv * cfg.head_dim \
+                * 2 / shard
+        elif k.mixer == "mla":
+            total += b_local * shape.seq_len * (cfg.mla.kv_lora_rank
+                                                + cfg.mla.qk_rope_dim) * 2
+        else:  # mamba: O(1) state
+            m = cfg.mamba
+            total += b_local * m.n_heads * m.head_dim * m.d_state * 4 / 16
+    return total
+
+
+def _dominant(terms: dict) -> str:
+    return max(terms, key=terms.get)
+
+
+def _advice(arch, shape, dom, ratio) -> str:
+    if dom == "collective":
+        return ("re-shard to cut cross-device dispatch (MoE all-to-all / "
+                "dispatch all-reduces dominate)" if "moe" in arch.family
+                else "overlap collectives with compute; reduce TP degree")
+    if dom == "memory":
+        if shape.kind == "decode":
+            return "batch more sequences per chip to amortize param streaming"
+        return "fuse attention (Pallas flash kernel) / raise arithmetic intensity"
+    if ratio < 0.25:
+        return ("reduce model-axis replication: attention heads do not "
+                "TP-shard for this arch" if arch.name == "smollm-135m"
+                else "cut remat recompute or replication waste")
+    return "near compute roofline: increase per-chip batch for efficiency"
+
+
+def build_table(json_dir: str, mesh_kind: str = "single") -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(json_dir,
+                                              f"*_{mesh_kind}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        arch = get_arch(rec["arch"])
+        cfg = arch.make_config()
+        shape = SHAPES[rec["shape"]]
+        chips = CHIPS[mesh_kind]
+
+        compute_t = rec["dot_flops_per_chip"] / PEAK_FLOPS
+        mem_hlo_t = rec.get("mem_bytes_per_chip", 0.0) / HBM_BW
+        mem_model = analytic_mem_bytes_per_chip(arch, cfg, shape, chips)
+        mem_model_t = mem_model / HBM_BW
+        coll_t = rec["collective_total_per_chip"] / LINK_BW
+
+        mflops = model_flops(arch, cfg, shape)
+        hlo_total = rec["dot_flops_per_chip"] * chips
+        ratio = mflops / hlo_total if hlo_total else 0.0
+
+        terms = {"compute": compute_t, "memory": mem_model_t,
+                 "collective": coll_t}
+        dom = _dominant(terms)
+        step_t = max(terms.values())
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": mesh_kind,
+            "compute_s": compute_t, "memory_s": mem_model_t,
+            "memory_hlo_s": mem_hlo_t, "collective_s": coll_t,
+            "dominant": dom,
+            "model_flops": mflops, "hlo_flops_total": hlo_total,
+            "useful_ratio": ratio,
+            "roofline_fraction": compute_t / step_t if step_t else 0.0,
+            "advice": _advice(arch, shape, dom, ratio),
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    default_dir = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                               "artifacts", "dryrun")
+    ap.add_argument("--json", default=os.path.abspath(default_dir))
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    rows = build_table(args.json, args.mesh)
+    header = (f"{'arch':24s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+              f"{'mem(hlo)':>9s} {'collect':>9s} {'dominant':>10s} "
+              f"{'useful':>7s} {'roofline':>8s}")
+    print(header)
+    lines = [header]
+    for r in rows:
+        line = (f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:9.3g} "
+                f"{r['memory_s']:9.3g} {r['memory_hlo_s']:9.3g} "
+                f"{r['collective_s']:9.3g} {r['dominant']:>10s} "
+                f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:8.3f}")
+        print(line)
+        lines.append(line)
+    out = args.out or os.path.join(args.json, "..",
+                                   f"roofline_{args.mesh}.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Sharding planner: logical axes -> NamedShardings over the mesh.
+
+Every param carries logical axes in its ParamSpec; ArchDef supplies the
+logical->mesh rules (DEFAULT_RULES + per-arch overrides).  The planner
+enforces two invariants per tensor:
+
+  * divisibility — a rule only applies when the dim size divides the
+    mesh-axis size (else that dim replicates; recorded per arch);
+  * axis uniqueness — one mesh axis shards at most one dim of a tensor
+    (first dim in spec order wins; e.g. expert weights (E, d, ff) give
+    'model' to E, so the 'mlp' rule falls back for ff).
+
+Batch/activation sharding: batch shards over the DP axes (('pod',
+'data') on the multi-pod mesh); when the global batch does not divide
+(long_500k has batch 1), the planner switches to sequence sharding
+(SP) for the long axis instead.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, mesh_axis_size
+from repro.models.layers import ParamSpec
+
+__all__ = ["param_shardings", "batch_sharding", "logical_sharding",
+           "cache_shardings", "replicated", "plan_report"]
+
+
+def _resolve_axes(shape, axes, rules, mesh):
+    out = []
+    used: set = set()
+    for dim, logical in zip(shape, axes):
+        mesh_axis = rules.get(logical)
+        if mesh_axis is None:
+            out.append(None)
+            continue
+        key = tuple(mesh_axis) if isinstance(mesh_axis, (tuple, list)) else mesh_axis
+        names = key if isinstance(key, tuple) else (key,)
+        if any(n not in mesh.axis_names for n in names):
+            out.append(None)
+            continue
+        size = mesh_axis_size(mesh, mesh_axis)
+        if dim % size == 0 and size > 1 and key not in used \
+                and not any(n in used for n in names):
+            out.append(mesh_axis)
+            used.add(key)
+            used.update(names)
+        else:
+            out.append(None)
+    return out
+
+
+def logical_sharding(spec_shape, logical_axes, rules, mesh) -> NamedSharding:
+    axes = _resolve_axes(spec_shape, logical_axes, rules, mesh)
+    return NamedSharding(mesh, P(*axes))
+
+
+def param_shardings(specs: Any, rules: dict, mesh) -> Any:
+    """Spec pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda s: logical_sharding(s.shape, s.axes, rules, mesh),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh, global_batch: int, *, seq_dims: int = 1):
+    """(batch_axes, seq_axis) choice for activations/inputs.
+
+    Returns (batch_pspec_entry, seq_pspec_entry): batch over DP axes
+    when divisible, else replicate batch and shard the sequence dim
+    over 'data' (SP for the batch=1 long-context cells).
+    """
+    dp = dp_axes(mesh)
+    dp_size = mesh_axis_size(mesh, dp)
+    if global_batch % dp_size == 0 and dp_size > 1:
+        return (dp if len(dp) > 1 else dp[0]), None
+    return None, "data"
+
+
+def token_sharding(mesh, global_batch: int, seq_len: int) -> NamedSharding:
+    b_axis, s_axis = batch_sharding(mesh, global_batch)
+    if s_axis is not None and seq_len % mesh_axis_size(mesh, s_axis) != 0:
+        s_axis = None
+    return NamedSharding(mesh, P(b_axis, s_axis))
+
+
+def cache_shardings(cache_axes_tree: Any, cache_struct_tree: Any, rules: dict,
+                    mesh, global_batch: int) -> Any:
+    """Shardings for decode caches.
+
+    ``cache_axes_tree`` mirrors the cache structs with tuples of logical
+    axis names ('layers', 'batch', 'seq', 'kv_heads', 'head_dim', ...).
+    """
+    b_axis, s_axis = batch_sharding(mesh, global_batch)
+    cache_rules = dict(rules)
+    cache_rules.update({"batch": b_axis, "seq": s_axis})
+
+    def one(axes, struct):
+        return logical_sharding(struct.shape, axes, cache_rules, mesh)
+
+    return jax.tree_util.tree_map(
+        one, cache_axes_tree, cache_struct_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+def plan_report(specs: Any, rules: dict, mesh) -> list:
+    """Human-readable plan: [(path, shape, resolved PartitionSpec)]."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    report = []
+    for path, s in flat:
+        axes = _resolve_axes(s.shape, s.axes, rules, mesh)
+        report.append((jax.tree_util.keystr(path), s.shape, tuple(axes)))
+    return report

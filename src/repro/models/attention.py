@@ -1,0 +1,178 @@
+"""GQA/MQA attention: chunked (flash-style) training path + cached decode.
+
+The training/prefill path never materializes the full (L, L) score
+matrix: queries are processed in blocks with an online-softmax scan
+over KV blocks (memory O(L * block) per head) — required for the 32k
+prefill cells and the right roofline shape everywhere else.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rope, spec
+
+__all__ = ["attention_specs", "attention", "decode_attention", "KVCache",
+           "init_kv_cache_specs"]
+
+NEG_INF = -1e30
+
+
+def attention_specs(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                    dtype: str):
+    return {
+        "wq": spec((d_model, n_heads, head_dim), ("embed", "heads", "head_dim"),
+                   dtype),
+        "wk": spec((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim"),
+                   dtype),
+        "wv": spec((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim"),
+                   dtype),
+        "wo": spec((n_heads, head_dim, d_model), ("heads", "head_dim", "embed"),
+                   dtype),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, L_max, n_kv, head_dim)
+    v: jax.Array       # (B, L_max, n_kv, head_dim)
+    length: jax.Array  # scalar int32: tokens currently cached
+
+
+def init_kv_cache_specs(batch: int, max_len: int, n_kv: int, head_dim: int,
+                        dtype: str):
+    return KVCache(
+        k=jax.ShapeDtypeStruct((batch, max_len, n_kv, head_dim), jnp.dtype(dtype)),
+        v=jax.ShapeDtypeStruct((batch, max_len, n_kv, head_dim), jnp.dtype(dtype)),
+        length=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def _qkv(params, x, positions):
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, params["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, params["wv"])
+    q = rope(q, positions)
+    k = rope(k, positions)
+    return q, k, v
+
+
+def _chunked_causal_attention(q, k, v, *, q_block: int, kv_block: int):
+    """Online-softmax blockwise causal attention.
+
+    q: (B, Lq, H, D); k/v: (B, Lk, Hkv, D) with H % Hkv == 0.
+    Assumes Lq == Lk (training/prefill) for the causal structure.
+    """
+    b, lq, h, d = q.shape
+    _, lk, hkv, _ = k.shape
+    groups = h // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    q_block = min(q_block, lq)
+    kv_block = min(kv_block, lk)
+    nq = -(-lq // q_block)
+    nk = -(-lk // kv_block)
+    lq_pad, lk_pad = nq * q_block, nk * kv_block
+    if lq_pad != lq:
+        q = jnp.pad(q, ((0, 0), (0, lq_pad - lq), (0, 0), (0, 0)))
+    if lk_pad != lk:
+        k = jnp.pad(k, ((0, 0), (0, lk_pad - lk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, lk_pad - lk), (0, 0), (0, 0)))
+
+    # (B, nq, qb, H, D) -> scan over nq
+    qb = q.reshape(b, nq, q_block, h, d).transpose(1, 0, 3, 2, 4)  # (nq,B,H,qb,D)
+    kb = k.reshape(b, nk, kv_block, hkv, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, kv_block, hkv, d).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx
+        qif = qi.astype(jnp.float32) * scale
+        # Broadcast kv heads to q heads via reshape (B, Hkv, g, qb, D).
+        qg = qif.reshape(b, hkv, groups, q_block, d)
+
+        def kv_step(carry, kv_and_idx):
+            m, s, o = carry
+            ki, vi, ik = kv_and_idx
+            logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                                ki.astype(jnp.float32))
+            qpos = iq * q_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 0)
+            kpos = ik * kv_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 1)
+            # Mask via small f32 (qb, kvb) tensors — a broadcast boolean
+            # `where` materializes a full (B,H,qb,kvb) pred temp per kv
+            # step once XLA hoists it out of the scan.
+            keep = (kpos <= qpos).astype(jnp.float32)
+            bias = (1.0 - keep) * NEG_INF
+            logits = logits + bias[None, None, None]
+            new_m = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - new_m)
+            # Re-scale after the exp: a fully-masked block would otherwise
+            # contribute exp(NEG_INF - NEG_INF) = 1 per position.
+            p = jnp.exp(logits - new_m[..., None]) * keep[None, None, None]
+            new_s = s * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bhkd->bhgqd", p, vi.astype(jnp.float32))
+            new_o = o * alpha[..., None] + pv
+            return (new_m, new_s, new_o), None
+
+        m0 = jnp.full((b, hkv, groups, q_block), NEG_INF, jnp.float32)
+        s0 = jnp.zeros((b, hkv, groups, q_block), jnp.float32)
+        o0 = jnp.zeros((b, hkv, groups, q_block, d), jnp.float32)
+        ik = jnp.arange(nk)
+        (m, s, o), _ = jax.lax.scan(kv_step, (m0, s0, o0), (kb, vb, ik))
+        out = o / jnp.maximum(s[..., None], 1e-30)
+        return None, out.reshape(b, h, q_block, d)
+
+    iq = jnp.arange(nq)
+    _, outs = jax.lax.scan(q_step, None, (qb, iq))  # (nq, B, H, qb, D)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, lq_pad, h, d)
+    return out[:, :lq].astype(q.dtype)
+
+
+def attention(params, x, positions, *, q_block: int = 512,
+              kv_block: int = 512, return_kv: bool = False):
+    """Causal self-attention for training/prefill.  x: (B, L, d)."""
+    q, k, v = _qkv(params, x, positions)
+    ctx = _chunked_causal_attention(q, k, v, q_block=q_block,
+                                    kv_block=kv_block)
+    out = jnp.einsum("blhk,hkd->bld", ctx, params["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def decode_attention(params, x, cache: KVCache, *, kv_shard_axis=None):
+    """Single-token decode.  x: (B, 1, d); returns (out, new_cache).
+
+    The new token's K/V are written at ``cache.length``; attention runs
+    over the full cache with positions >= length masked out.
+    """
+    b, one, d = x.shape
+    assert one == 1
+    pos = cache.length[None].astype(jnp.int32)  # current position
+    positions = jnp.broadcast_to(pos, (b, 1))
+    q, k_new, v_new = _qkv(params, x, positions)
+
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), cache.length, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), cache.length, axis=1)
+
+    h = q.shape[2]
+    hkv = k.shape[2]
+    groups = h // hkv
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    qg = (q.astype(jnp.float32) * scale).reshape(b, 1, hkv, groups, -1)
+    logits = jnp.einsum("bqhgd,blhd->bhgql", qg, k.astype(jnp.float32))
+    l_max = k.shape[1]
+    mask = jnp.arange(l_max)[None, None, None, None, :] <= cache.length
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhgql,blhd->bqhgd", p, v.astype(jnp.float32))
+    ctx = ctx.reshape(b, 1, h, -1).astype(x.dtype)
+    out = jnp.einsum("blhk,hkd->bld", ctx, params["wo"])
+    new_cache = KVCache(k, v, cache.length + 1)
+    return out, new_cache

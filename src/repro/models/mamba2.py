@@ -1,0 +1,262 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic
+attention-like computation inside fixed-size chunks plus a linear
+inter-chunk state recurrence (lax.scan) — sub-quadratic in sequence
+length, which is what qualifies the mamba2/jamba configs for the
+long_500k cells.  Decode is the O(1) single-step recurrence on the
+(B, H, P, N) state.
+
+``ssd_reference`` is the naive sequential recurrence used as the test
+oracle.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, rms_norm, spec
+from repro.models.partitioning import constrain
+
+__all__ = ["Mamba2Config", "mamba2_specs", "mamba2_forward", "mamba2_decode",
+           "Mamba2State", "init_mamba2_state_specs", "ssd_chunked",
+           "ssd_reference"]
+
+
+class Mamba2Config(NamedTuple):
+    d_model: int
+    d_inner: int          # expand * d_model
+    head_dim: int = 64    # P
+    d_state: int = 128    # N
+    n_groups: int = 1     # G
+    d_conv: int = 4
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def proj_dim(self) -> int:
+        # [z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)]
+        return (2 * self.d_inner + 2 * self.n_groups * self.d_state
+                + self.n_heads)
+
+
+class Mamba2State(NamedTuple):
+    ssm: jax.Array     # (B, H, P, N)
+    conv: jax.Array    # (B, d_conv - 1, conv_dim) rolling window
+    length: jax.Array  # scalar int32
+
+
+def init_mamba2_state_specs(cfg: Mamba2Config, batch: int, dtype: str):
+    return Mamba2State(
+        ssm=jax.ShapeDtypeStruct((batch, cfg.n_heads, cfg.head_dim,
+                                  cfg.d_state), jnp.float32),
+        conv=jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, cfg.conv_dim),
+                                  jnp.dtype(dtype)),
+        length=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def mamba2_specs(cfg: Mamba2Config, dtype: str):
+    return {
+        "in_proj": spec((cfg.d_model, cfg.proj_dim), ("embed", "mlp"), dtype),
+        "conv_w": spec((cfg.d_conv, cfg.conv_dim), ("conv_k", "mlp"), dtype),
+        "conv_b": spec((cfg.conv_dim,), ("mlp",), dtype, init="zeros"),
+        "a_log": spec((cfg.n_heads,), ("heads",), "float32", init="zeros"),
+        "d_skip": spec((cfg.n_heads,), ("heads",), "float32", init="ones"),
+        "dt_bias": spec((cfg.n_heads,), ("heads",), "float32", init="zeros"),
+        "norm": spec((cfg.d_inner,), ("mlp",), "float32", init="ones"),
+        "out_proj": spec((cfg.d_inner, cfg.d_model), ("mlp", "embed"), dtype),
+    }
+
+
+def _split_proj(cfg: Mamba2Config, zxbcdt):
+    di, gn, h = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv over (B, L, C) with kernel (K, C)."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + conv_b[None, None, :])
+
+
+def _ssm_inputs(cfg: Mamba2Config, params, xbc_conv, dt_raw):
+    """Split conv output and compute per-step decay/inputs."""
+    b, l, _ = xbc_conv.shape
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    x = xbc_conv[..., :di].reshape(b, l, cfg.n_heads, cfg.head_dim)
+    bb = xbc_conv[..., di: di + gn].reshape(b, l, cfg.n_groups, cfg.d_state)
+    cc = xbc_conv[..., di + gn:].reshape(b, l, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])      # (B,L,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))             # (H,) < 0
+    log_decay = dt * a[None, None, :]                             # (B,L,H)
+    return x, bb, cc, dt, log_decay
+
+
+def ssd_chunked(x, bb, cc, dt, log_decay, *, chunk: int = 256):
+    """Chunked SSD scan.
+
+    x: (B,L,H,P) f32; bb/cc: (B,L,G,N) f32; dt/log_decay: (B,L,H) f32.
+    Returns y: (B,L,H,P) f32 and the final state (B,H,P,N).
+    """
+    b, l, h, p = x.shape
+    g, n = bb.shape[2], bb.shape[3]
+    heads_per_group = h // g
+    chunk = min(chunk, l)
+    nc = -(-l // chunk)
+    lp = nc * chunk
+    if lp != l:
+        padw = ((0, 0), (0, lp - l), (0, 0), (0, 0))
+        x = jnp.pad(x, padw)
+        bb = jnp.pad(bb, padw)
+        cc = jnp.pad(cc, padw)
+        dt = jnp.pad(dt, ((0, 0), (0, lp - l), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, lp - l), (0, 0)))
+
+    # Broadcast groups to heads.
+    def g2h(t):  # (B,L,G,N) -> (B,L,H,N)
+        return jnp.repeat(t, heads_per_group, axis=2)
+
+    bbh, cch = g2h(bb), g2h(cc)
+    xd = x * dt[..., None]  # dt-weighted inputs
+
+    # Reshape to chunks: (nc, B, chunk, ...)
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, bc, ccc = to_chunks(xd), to_chunks(bbh), to_chunks(cch)
+    ldc = to_chunks(log_decay)  # (nc, B, chunk, H)
+
+    def chunk_step(h_prev, inputs):
+        xi, bi, ci, ld = inputs           # (B,Q,H,P), (B,Q,H,N), ..., (B,Q,H)
+        cum = jnp.cumsum(ld, axis=1)      # (B,Q,H) log prod a_1..a_i
+        total = cum[:, -1]                # (B,H)
+        # Intra-chunk (attention-like with decay kernel):
+        # L[i,j] = exp(cum_i - cum_j) for i >= j.
+        li = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Q,Q,H)
+        iq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        ik = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        causal = (ik <= iq)[None, :, :, None]
+        lmat = jnp.where(causal, jnp.exp(li), 0.0)
+        scores = jnp.einsum("bqhn,bkhn->bqkh", ci, bi) * lmat
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", scores, xi)
+        # Inter-chunk: contribution of the carried state.
+        decay_in = jnp.exp(cum)                               # (B,Q,H)
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", ci * decay_in[..., None],
+                             h_prev)
+        # State update: S = sum_j exp(total - cum_j) B_j x_j^T.
+        decay_out = jnp.exp(total[:, None, :] - cum)          # (B,Q,H)
+        s_new = jnp.einsum("bqhn,bqhp->bhpn", bi * decay_out[..., None], xi)
+        h_next = jnp.exp(total)[..., None, None] * h_prev + s_new
+        return h_next, y_intra + y_inter
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xc, bc, ccc, ldc))
+    y = ys.swapaxes(0, 1).reshape(b, lp, h, p)[:, :l]
+    return y, h_final
+
+
+def ssd_reference(x, bb, cc, dt, log_decay):
+    """Naive sequential recurrence (test oracle): O(L) python loop."""
+    b, l, h, p = x.shape
+    g, n = bb.shape[2], bb.shape[3]
+    hpg = h // g
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(l):
+        a_t = jnp.exp(log_decay[:, t])                        # (B,H)
+        bt = jnp.repeat(bb[:, t], hpg, axis=1)                # (B,H,N)
+        ct = jnp.repeat(cc[:, t], hpg, axis=1)
+        xt = x[:, t] * dt[:, t][..., None]                    # (B,H,P)
+        state = (a_t[..., None, None] * state
+                 + jnp.einsum("bhn,bhp->bhpn", bt, xt))
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, ct))
+    return jnp.stack(ys, axis=1), state
+
+
+def mamba2_forward(cfg: Mamba2Config, params, x, *, chunk: int = 256,
+                   return_state: bool = False):
+    """Full block: x (B, L, d_model) -> (B, L, d_model).
+
+    The fused [z|x|B|C|dt] projection is applied as per-stream weight
+    slices (static) instead of slicing the activation: activation
+    splits at non-shard-aligned channel offsets forced SPMD to reshard
+    each piece — 84 GB/chip/step of collective-permute on the 48L
+    config (§Perf hillclimb, EXPERIMENTS.md).  Depthwise conv commutes
+    with the channel split, so the math is unchanged.
+    """
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    w = params["in_proj"]
+    cw, cb = params["conv_w"], params["conv_b"]
+    z = dense(x, w[:, :di])
+    xp = dense(x, w[:, di: 2 * di])
+    bp = dense(x, w[:, 2 * di: 2 * di + gn])
+    cp = dense(x, w[:, 2 * di + gn: 2 * di + 2 * gn])
+    dt_raw = dense(x, w[:, 2 * di + 2 * gn:])
+    xp = constrain(xp, "batch", None, "mlp")
+    xp = _causal_conv(xp, cw[:, :di], cb[:di])
+    bp = _causal_conv(bp, cw[:, di: di + gn], cb[di: di + gn])
+    cp = _causal_conv(cp, cw[:, di + gn:], cb[di + gn:])
+    b_, l_ = x.shape[:2]
+    xi = xp.reshape(b_, l_, cfg.n_heads, cfg.head_dim)
+    bb = bp.reshape(b_, l_, cfg.n_groups, cfg.d_state)
+    cc = cp.reshape(b_, l_, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    ld = dt * a[None, None, :]
+    y, state = ssd_chunked(xi.astype(jnp.float32), bb.astype(jnp.float32),
+                           cc.astype(jnp.float32), dt, ld, chunk=chunk)
+    y = y + params["d_skip"][None, None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(x.shape[0], x.shape[1], cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = dense(y, params["out_proj"])
+    if return_state:
+        return out, state
+    return out
+
+
+def mamba2_decode(cfg: Mamba2Config, params, x, state: Mamba2State):
+    """Single-token decode: x (B, 1, d_model) -> (out, new_state)."""
+    b = x.shape[0]
+    zxbcdt = dense(x, params["in_proj"])
+    z, xbc_new, dt_raw = _split_proj(cfg, zxbcdt)
+
+    # Rolling causal conv window.
+    window = jnp.concatenate([state.conv, xbc_new.astype(state.conv.dtype)],
+                             axis=1)                     # (B, d_conv, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+    xbc = jax.nn.silu(conv_out + params["conv_b"][None, :])[:, None, :]
+    new_conv = window[:, 1:, :]
+
+    xi, bb, cc, dt, ld = _ssm_inputs(cfg, params, xbc, dt_raw)
+    a_t = jnp.exp(ld[:, 0])                              # (B,H)
+    hpg = cfg.n_heads // cfg.n_groups
+    bt = jnp.repeat(bb[:, 0], hpg, axis=1).astype(jnp.float32)
+    ct = jnp.repeat(cc[:, 0], hpg, axis=1).astype(jnp.float32)
+    xt = (xi[:, 0] * dt[:, 0][..., None]).astype(jnp.float32)
+    new_ssm = (a_t[..., None, None] * state.ssm
+               + jnp.einsum("bhn,bhp->bhpn", bt, xt))
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, ct)
+    y = y + params["d_skip"][None, :, None] * xi[:, 0].astype(jnp.float32)
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = dense(y, params["out_proj"])
+    return out, Mamba2State(new_ssm, new_conv, state.length + 1)

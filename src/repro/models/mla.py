@@ -1,0 +1,133 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are low-rank compressed; only the compressed
+KV latent ``c_kv`` (kv_lora_rank) plus the shared RoPE key (rope dim)
+are cached for decode — the architecture's memory saving, and exactly
+the tensor SeDA protects when the cache crosses the untrusted boundary.
+
+Dims follow the DeepSeek-V3 report: q_lora_rank 1536, kv_lora_rank 512,
+qk_nope_head_dim 128, qk_rope_head_dim 64, v_head_dim 128.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, rms_norm, rope, spec
+
+__all__ = ["MLAConfig", "mla_specs", "mla_attention", "mla_decode",
+           "MLACache", "init_mla_cache_specs"]
+
+NEG_INF = -1e30
+
+
+class MLAConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, L_max, kv_lora_rank)
+    k_pe: jax.Array    # (B, L_max, qk_rope_dim)
+    length: jax.Array
+
+
+def init_mla_cache_specs(cfg: MLAConfig, batch: int, max_len: int, dtype: str):
+    return MLACache(
+        c_kv=jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank),
+                                  jnp.dtype(dtype)),
+        k_pe=jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_dim),
+                                  jnp.dtype(dtype)),
+        length=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def mla_specs(cfg: MLAConfig, dtype: str):
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": spec((cfg.d_model, cfg.q_lora_rank), ("embed", "lora"), dtype),
+        "q_norm": spec((cfg.q_lora_rank,), ("lora",), "float32", init="ones"),
+        "wq_b": spec((cfg.q_lora_rank, h, dn + dr), ("lora", "heads", "head_dim"),
+                     dtype),
+        "wkv_a": spec((cfg.d_model, cfg.kv_lora_rank + dr), ("embed", "lora"),
+                      dtype),
+        "kv_norm": spec((cfg.kv_lora_rank,), ("lora",), "float32", init="ones"),
+        "wkv_b": spec((cfg.kv_lora_rank, h, dn + dv), ("lora", "heads", "head_dim"),
+                      dtype),
+        "wo": spec((h, dv, cfg.d_model), ("heads", "head_dim", "embed"), dtype),
+    }
+
+
+def _project_q(cfg: MLAConfig, params, x, positions):
+    cq = rms_norm(dense(x, params["wq_a"]), params["q_norm"])
+    q = jnp.einsum("blr,rhk->blhk", cq, params["wq_b"])
+    q_nope, q_pe = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_pe = rope(q_pe, positions)
+    return jnp.concatenate([q_nope, q_pe], axis=-1)
+
+
+def _project_kv_latent(cfg: MLAConfig, params, x, positions):
+    kv = dense(x, params["wkv_a"])  # (B, L, rank + dr)
+    c_kv = rms_norm(kv[..., : cfg.kv_lora_rank], params["kv_norm"])
+    k_pe = rope(kv[..., None, cfg.kv_lora_rank:], positions)[..., 0, :]
+    return c_kv, k_pe
+
+
+def _expand_kv(cfg: MLAConfig, params, c_kv, k_pe):
+    kv = jnp.einsum("blr,rhk->blhk", c_kv, params["wkv_b"])
+    k_nope = kv[..., : cfg.qk_nope_dim]
+    v = kv[..., cfg.qk_nope_dim:]
+    k_pe_b = jnp.broadcast_to(k_pe[:, :, None, :],
+                              k_pe.shape[:2] + (cfg.n_heads, cfg.qk_rope_dim))
+    k = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+    return k, v
+
+
+def mla_attention(cfg: MLAConfig, params, x, positions, *,
+                  q_block: int = 512, kv_block: int = 512):
+    """Causal MLA for training/prefill.  x: (B, L, d)."""
+    from repro.models.attention import _chunked_causal_attention
+    q = _project_q(cfg, params, x, positions)
+    c_kv, k_pe = _project_kv_latent(cfg, params, x, positions)
+    k, v = _expand_kv(cfg, params, c_kv, k_pe)
+    # Pad V to the QK head dim so the flash kernel sees equal dims.
+    dq = q.shape[-1]
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dq - v.shape[-1])))
+    ctx = _chunked_causal_attention(q, k, v_pad, q_block=q_block,
+                                    kv_block=kv_block)
+    ctx = ctx[..., : cfg.v_head_dim]
+    return jnp.einsum("blhk,hkd->bld", ctx, params["wo"])
+
+
+def mla_decode(cfg: MLAConfig, params, x, cache: MLACache):
+    """Single-token decode with the compressed cache.  x: (B, 1, d)."""
+    b = x.shape[0]
+    positions = jnp.broadcast_to(cache.length[None].astype(jnp.int32), (b, 1))
+    q = _project_q(cfg, params, x, positions)                 # (B,1,H,dn+dr)
+    c_new, kpe_new = _project_kv_latent(cfg, params, x, positions)
+
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), cache.length, axis=1)
+    k_pe = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_pe, kpe_new.astype(cache.k_pe.dtype), cache.length, axis=1)
+
+    k, v = _expand_kv(cfg, params, c_kv, k_pe)                # (B,L,H,*)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhk,blhk->bhql", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    l_max = k.shape[1]
+    mask = jnp.arange(l_max)[None, None, None, :] <= cache.length
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhql,blhd->bqhd", p, v.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("blhk,hkd->bld", ctx, params["wo"])
+    return out, MLACache(c_kv, k_pe, cache.length + 1)

@@ -1,0 +1,64 @@
+"""Logical sharding constraints for activations (MaxText-style).
+
+Model code calls ``constrain(x, 'batch', 'seq', None)`` with *logical*
+axis names; when a partitioning context is active (set by the launcher
+/ dry-run around trace time), this resolves to
+``jax.lax.with_sharding_constraint`` over the production mesh.  With no
+context (unit tests, single-device smoke runs) it is the identity.
+
+Without these anchors XLA's SPMD propagation can lose the batch
+sharding through gather ops (token embedding lookups) and silently
+replicate the whole forward pass — 16x the flops and catastrophic temp
+memory on the 16x16 mesh.  (Found via the loop-aware HLO analysis;
+recorded in EXPERIMENTS.md §Perf as baseline-fix #1.)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["activation_context", "constrain"]
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def activation_context(mesh, rules: dict):
+    """rules: logical activation axis -> mesh axis (or None)."""
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    entries = []
+    used: set = set()
+    for dim, name in zip(x.shape, logical_axes):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            entries.append(None)
+            continue
+        names = axis if isinstance(axis, tuple) else (axis,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        if dim % size or any(n in used for n in names):
+            entries.append(None)
+        else:
+            entries.append(axis)
+            used.update(names)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

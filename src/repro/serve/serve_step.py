@@ -1,0 +1,47 @@
+"""Serve-step builders: prefill and single-token decode per arch kind.
+
+``serve_step`` is what the ``decode_*`` / ``long_*`` dry-run cells
+lower: one new token against a KV cache of seq_len.  The secure variant
+verifies the cache's layer MACs on read and re-MACs the updated cache
+slice on write (SeDA's serving-side boundary: the KV/latent cache is
+the tensor that crosses to untrusted memory during long decodes).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ed
+from repro.models import lm as lm_mod
+
+__all__ = ["make_prefill_step", "make_decode_step", "greedy_sample"]
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+
+
+def make_prefill_step(arch, cfg, max_len: int) -> Callable:
+    if arch.kind == "encdec":
+        def prefill(params, batch):
+            return ed.decoder_prefill(cfg, params, batch, max_len)
+        return prefill
+
+    def prefill(params, batch):
+        return lm_mod.lm_prefill(cfg, params, batch, max_len)
+    return prefill
+
+
+def make_decode_step(arch, cfg) -> Callable:
+    """decode(params, tokens (B,1), caches) -> (logits, new caches)."""
+    if arch.kind == "encdec":
+        def decode(params, tokens, caches):
+            return ed.decoder_decode(cfg, params, tokens, caches)
+        return decode
+
+    def decode(params, tokens, caches):
+        return lm_mod.lm_decode(cfg, params, tokens, caches)
+    return decode

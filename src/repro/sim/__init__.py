@@ -1,0 +1,14 @@
+"""Paper-evaluation substrate: the SCALE-Sim2 + security + Ramulator2
+stack of §IV, reimplemented analytically.
+
+- :mod:`repro.sim.workloads`   — the 13 benchmark DNNs as layer tables
+- :mod:`repro.sim.scalesim`    — systolic-array cycles + DRAM streams
+- :mod:`repro.sim.memprot`     — SGX/MGX/SeDA metadata + overfetch overlay
+- :mod:`repro.sim.secureloop`  — optBlk granularity search
+- :mod:`repro.sim.dram`        — Ramulator-lite timing / performance
+- :mod:`repro.sim.caches`      — LRU metadata caches (trace mode)
+- :mod:`repro.sim.area_power`  — B-AES vs T-AES 28nm scaling (Fig. 4)
+"""
+
+from repro.sim.npu_configs import EDGE_NPU, NPUS, SERVER_NPU  # noqa: F401
+from repro.sim.workloads import WORKLOADS  # noqa: F401

@@ -1,0 +1,70 @@
+"""B-AES vs T-AES area/power scaling model (paper Fig. 4, 28nm).
+
+T-AES meets an N-fold bandwidth requirement by stacking N AES engines;
+B-AES uses ONE engine plus per-segment 128-bit XOR/mux banks fed by the
+KeyExpansion round keys (paper §III-B).
+
+Constants are derived from the round-based AES-128 implementations in
+Banerjee's thesis [22] scaled to 28nm: a full engine (datapath + on-the-
+fly KeyExpansion) is ~15.5 kGE; a 128-bit XOR diversification bank
+(XOR + mux + pipeline register) is ~0.7 kGE.  Absolute numbers are
+model estimates; the paper's claim under test is the *scaling shape*
+(linear for T-AES, near-flat for B-AES).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["AESCost", "t_aes_cost", "b_aes_cost", "scaling_table"]
+
+# 28nm technology constants.
+GE_UM2 = 0.49                 # NAND2-equivalent gate area, um^2
+AES_ENGINE_KGE = 12.5         # AES-128 round-based datapath
+KEYEXP_KGE = 3.0              # on-the-fly KeyExpansion
+XOR_BANK_KGE = 0.7            # 128b XOR + mux + pipeline reg per extra segment
+
+AES_ENGINE_MW_GHZ = 4.4       # dynamic power per engine at 1 GHz
+KEYEXP_MW_GHZ = 0.9
+XOR_BANK_MW_GHZ = 0.055
+
+
+@dataclass(frozen=True)
+class AESCost:
+    name: str
+    bandwidth_multiple: int   # x the bandwidth of a single AES engine
+    area_mm2: float
+    power_mw: float           # at 1 GHz
+
+
+def t_aes_cost(bandwidth_multiple: int) -> AESCost:
+    """Traditional scaling: one full engine per bandwidth unit."""
+    n = max(1, bandwidth_multiple)
+    kge = n * (AES_ENGINE_KGE + KEYEXP_KGE)
+    power = n * (AES_ENGINE_MW_GHZ + KEYEXP_MW_GHZ)
+    return AESCost("t_aes", n, kge * 1e3 * GE_UM2 / 1e6, power)
+
+
+def b_aes_cost(bandwidth_multiple: int) -> AESCost:
+    """SeDA scaling: one engine + (n-1) XOR diversification banks."""
+    n = max(1, bandwidth_multiple)
+    kge = AES_ENGINE_KGE + KEYEXP_KGE + (n - 1) * XOR_BANK_KGE
+    power = AES_ENGINE_MW_GHZ + KEYEXP_MW_GHZ + (n - 1) * XOR_BANK_MW_GHZ
+    return AESCost("b_aes", n, kge * 1e3 * GE_UM2 / 1e6, power)
+
+
+def scaling_table(max_multiple: int = 16) -> list:
+    """Fig. 4 data: (multiple, T-AES area/power, B-AES area/power)."""
+    rows = []
+    for n in range(1, max_multiple + 1):
+        t, b = t_aes_cost(n), b_aes_cost(n)
+        rows.append({
+            "bandwidth_multiple": n,
+            "t_aes_area_mm2": round(t.area_mm2, 5),
+            "b_aes_area_mm2": round(b.area_mm2, 5),
+            "t_aes_power_mw": round(t.power_mw, 3),
+            "b_aes_power_mw": round(b.power_mw, 3),
+            "area_saving": round(1 - b.area_mm2 / t.area_mm2, 4),
+            "power_saving": round(1 - b.power_mw / t.power_mw, 4),
+        })
+    return rows

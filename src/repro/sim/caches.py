@@ -1,0 +1,56 @@
+"""Metadata caches (VN / MAC) — LRU, write-back, write-allocate (§IV-A)."""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+__all__ = ["LRUCache", "CacheStats"]
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    writebacks: int = 0
+
+    @property
+    def accesses(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def miss_rate(self) -> float:
+        return self.misses / self.accesses if self.accesses else 0.0
+
+
+class LRUCache:
+    """Line-granular LRU cache used for trace-mode metadata simulation."""
+
+    def __init__(self, capacity_bytes: int, line_bytes: int = 64):
+        self.capacity_lines = max(1, capacity_bytes // line_bytes)
+        self.line_bytes = line_bytes
+        self._lines: OrderedDict[int, bool] = OrderedDict()  # addr -> dirty
+        self.stats = CacheStats()
+
+    def access(self, byte_addr: int, *, write: bool = False) -> bool:
+        """Touch the line containing ``byte_addr``; returns True on hit."""
+        line = byte_addr // self.line_bytes
+        if line in self._lines:
+            self._lines.move_to_end(line)
+            self._lines[line] = self._lines[line] or write
+            self.stats.hits += 1
+            return True
+        self.stats.misses += 1
+        if len(self._lines) >= self.capacity_lines:
+            _, dirty = self._lines.popitem(last=False)
+            if dirty:
+                self.stats.writebacks += 1
+        self._lines[line] = write
+        return False
+
+    def flush(self) -> int:
+        """Write back all dirty lines; returns count."""
+        dirty = sum(1 for d in self._lines.values() if d)
+        self.stats.writebacks += dirty
+        self._lines.clear()
+        return dirty

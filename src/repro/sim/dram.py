@@ -1,0 +1,78 @@
+"""Ramulator-lite: off-chip memory timing + end-to-end performance model.
+
+Per layer: time = max(compute cycles, DRAM cycles) — the systolic array
+double-buffers, so compute and DRAM streaming overlap and the slower
+side wins.  Security adds (a) extra DRAM bytes (metadata/overfetch) and
+(b) a per-layer verification drain that cannot overlap the next layer
+when the scheme gates on it.
+
+The DRAM efficiency factor models channel/bank scheduling losses
+(Ramulator's achievable vs. peak bandwidth for streaming DNN traces).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.sim.memprot import SCHEME_MODELS, WorkloadSecurityResult
+from repro.sim.npu_configs import NPUConfig
+from repro.sim.scalesim import WorkloadTrace
+
+__all__ = ["DramModel", "PerfResult", "performance"]
+
+DRAM_EFFICIENCY = 0.75      # achievable fraction of peak streaming BW
+DRAM_LATENCY_CYCLES = 100   # first-access latency (per layer drain)
+TREE_WALK_LATENCY = 4 * DRAM_LATENCY_CYCLES  # serial tree-level walks
+
+
+@dataclass(frozen=True)
+class DramModel:
+    npu: NPUConfig
+
+    def cycles_for(self, n_bytes: float) -> float:
+        eff_bw = self.npu.bytes_per_cycle * DRAM_EFFICIENCY
+        return n_bytes / max(eff_bw, 1e-9)
+
+
+@dataclass(frozen=True)
+class PerfResult:
+    scheme: str
+    cycles: float
+    baseline_cycles: float
+
+    @property
+    def slowdown(self) -> float:
+        return self.cycles / self.baseline_cycles - 1.0
+
+    @property
+    def normalized_performance(self) -> float:
+        return self.baseline_cycles / self.cycles
+
+
+def performance(trace: WorkloadTrace, security: WorkloadSecurityResult,
+                npu: NPUConfig) -> PerfResult:
+    dram = DramModel(npu)
+    scheme = SCHEME_MODELS[security.scheme]
+
+    baseline_cycles = 0.0
+    protected_cycles = 0.0
+    for layer_trace, sec in zip(trace.layers, security.layers):
+        base_bytes = layer_trace.total_bytes
+        base = max(layer_trace.compute_cycles, dram.cycles_for(base_bytes))
+        baseline_cycles += base + DRAM_LATENCY_CYCLES
+
+        prot = max(layer_trace.compute_cycles, dram.cycles_for(sec.total))
+        # Verification drain: per-block-gated schemes stall on the tree
+        # walk / MAC fetch for the first accesses of the layer; SeDA's
+        # layer-MAC check is one XOR compare folded into the layer end.
+        if scheme.integrity_tree:
+            drain = TREE_WALK_LATENCY
+        elif scheme.mac_offchip:
+            drain = 2 * DRAM_LATENCY_CYCLES
+        elif scheme.layer_mac_offchip:
+            drain = DRAM_LATENCY_CYCLES + 1
+        else:
+            drain = DRAM_LATENCY_CYCLES
+        protected_cycles += prot + drain
+
+    return PerfResult(security.scheme, protected_cycles, baseline_cycles)

@@ -1,0 +1,178 @@
+"""Memory-protection scheme overlay (paper §IV, Table III).
+
+Given a workload's ``LayerTrace``, compute each protection scheme's
+off-chip traffic:
+
+  * data moved at the scheme's protection granularity (over-fetch vs.
+    the 64B-burst baseline when protection blocks exceed / misalign
+    with the accelerator's tile chunks — the paper's intra/inter-layer
+    tiling argument against coarse blocks),
+  * metadata: MACs at protection granularity; VNs (SGX keeps its native
+    64B-line counter granularity) read on loads and read-modify-written
+    on stores; integrity-tree levels streamed when too large for the
+    on-chip VN cache,
+  * SeDA: optBlk granularity from the SecureLoop-style search (aligned
+    with chunks ⇒ no over-fetch), optBlk MACs folded on-chip into layer
+    MACs, layer MACs charged off-chip ("for fairness", §IV-A).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.sim.npu_configs import NPUConfig
+from repro.sim.scalesim import (BURST_BYTES, LayerTrace, WorkloadTrace,
+                                rounded_bytes)
+from repro.sim.secureloop import optimal_block_for_streams
+
+__all__ = ["SchemeModel", "SCHEME_MODELS", "LayerSecurityTraffic",
+           "overlay_layer", "overlay_scheme", "WorkloadSecurityResult"]
+
+MAC_BYTES = 8
+VN_BYTES = 8
+LINE = 64          # metadata line / tree-node bytes
+TREE_ARITY = 8
+SGX_VN_GRANULARITY = 64  # SGX counters protect 64B lines regardless of MAC gran
+
+
+@dataclass(frozen=True)
+class SchemeModel:
+    name: str
+    granularity: int          # MAC protection block bytes (0 = per-layer optBlk)
+    mac_offchip: bool
+    vn_offchip: bool
+    integrity_tree: bool
+    layer_mac_offchip: bool   # SeDA: one 8B MAC per layer off-chip
+    vn_cache_bytes: int = 16 * 1024
+    mac_cache_bytes: int = 8 * 1024
+
+
+SCHEME_MODELS = {
+    "baseline": SchemeModel("baseline", 0, False, False, False, False),
+    "sgx64": SchemeModel("sgx64", 64, True, True, True, False),
+    "sgx512": SchemeModel("sgx512", 512, True, True, True, False),
+    "mgx64": SchemeModel("mgx64", 64, True, False, False, False),
+    "mgx512": SchemeModel("mgx512", 512, True, False, False, False),
+    "seda": SchemeModel("seda", 0, False, False, False, True),
+}
+
+
+@dataclass(frozen=True)
+class LayerSecurityTraffic:
+    data_bytes: float         # payload at protection granularity
+    meta_read: float
+    meta_write: float
+    granularity: int
+
+    @property
+    def total(self) -> float:
+        return self.data_bytes + self.meta_read + self.meta_write
+
+
+@dataclass(frozen=True)
+class WorkloadSecurityResult:
+    scheme: str
+    baseline_bytes: float
+    protected_bytes: float
+    layers: tuple
+
+    @property
+    def traffic_overhead(self) -> float:
+        return self.protected_bytes / self.baseline_bytes - 1.0
+
+
+def _boundary_overfetch(s, gran: int) -> float:
+    """Extra bytes when protection blocks straddle chunk boundaries.
+
+    Each contiguous chunk (tile row / embedding row / tensor span)
+    starts and ends at arbitrary offsets within a ``gran``-byte
+    protection block; decrypt+verify forces fetching the whole block.
+    Expected waste per chunk ~ (gran - BURST) for unaligned placement
+    ((gran-BURST)/2 per edge); reads only fetch, writes additionally
+    read back the partial blocks to recompute their MACs (RMW).
+    """
+    if s.total_bytes <= 0 or gran <= BURST_BYTES:
+        return 0.0
+    chunk = max(s.chunk_bytes, 1.0)
+    n_chunks = max(1.0, s.total_bytes / chunk)
+    # Expected boundary waste per chunk over random block alignment:
+    # (gran-BURST)/2 at the start edge and the same at the end edge.
+    per_chunk = float(gran - BURST_BYTES) if chunk % gran else 0.0
+    overfetch = n_chunks * per_chunk
+    if s.is_write:
+        overfetch *= 2.0  # read-modify-write of partial protection blocks
+    return overfetch
+
+
+def _tree_levels(n_leaf_lines: float) -> list[float]:
+    levels = []
+    lines = n_leaf_lines
+    while lines > 1:
+        lines = -(-lines // TREE_ARITY)
+        levels.append(lines)
+    return levels
+
+
+def overlay_layer(trace: LayerTrace, scheme: SchemeModel,
+                  npu: NPUConfig) -> LayerSecurityTraffic:
+    if scheme.name == "baseline":
+        return LayerSecurityTraffic(trace.total_bytes, 0.0, 0.0, BURST_BYTES)
+
+    if scheme.granularity == 0:  # SeDA: per-layer optBlk search
+        gran = optimal_block_for_streams(trace.streams, npu)
+    else:
+        gran = scheme.granularity
+
+    data_bytes = 0.0
+    read_blocks = 0.0
+    write_blocks = 0.0
+    for s in trace.streams:
+        base = s.burst_bytes()
+        if scheme.name == "seda":
+            # optBlk aligns with the chunk layout: no over-fetch beyond
+            # the 64B DRAM bursts the baseline already pays.
+            moved = base
+        else:
+            moved = base + _boundary_overfetch(s, gran)
+        data_bytes += moved
+        blocks = moved / gran
+        if s.is_write:
+            write_blocks += blocks
+        else:
+            read_blocks += blocks
+
+    meta_read = meta_write = 0.0
+    if scheme.mac_offchip:
+        # MAC lines streamed: reads fetch MACs; writes write them back.
+        meta_read += read_blocks * MAC_BYTES
+        meta_write += write_blocks * MAC_BYTES
+    if scheme.vn_offchip:
+        # SGX: VNs at native 64B-line granularity, independent of MAC size.
+        vn_read_blocks = sum(s.burst_bytes() for s in trace.streams
+                             if not s.is_write) / SGX_VN_GRANULARITY
+        vn_write_blocks = sum(s.burst_bytes() for s in trace.streams
+                              if s.is_write) / SGX_VN_GRANULARITY
+        meta_read += vn_read_blocks * VN_BYTES
+        # VN increment on store: read old, write new.
+        meta_read += vn_write_blocks * VN_BYTES
+        meta_write += vn_write_blocks * VN_BYTES
+    if scheme.integrity_tree:
+        total_vn_lines = (read_blocks + write_blocks) * VN_BYTES / LINE
+        for level_lines in _tree_levels(total_vn_lines):
+            level_bytes = level_lines * LINE
+            if level_bytes > scheme.vn_cache_bytes / 4:
+                meta_read += level_bytes  # streamed; upper levels stay pinned
+    if scheme.layer_mac_offchip:
+        meta_read += MAC_BYTES
+        meta_write += MAC_BYTES
+
+    return LayerSecurityTraffic(data_bytes, meta_read, meta_write, gran)
+
+
+def overlay_scheme(trace: WorkloadTrace, scheme_name: str,
+                   npu: NPUConfig) -> WorkloadSecurityResult:
+    scheme = SCHEME_MODELS[scheme_name]
+    layers = tuple(overlay_layer(t, scheme, npu) for t in trace.layers)
+    baseline = sum(t.total_bytes for t in trace.layers)
+    protected = sum(l.total for l in layers)
+    return WorkloadSecurityResult(scheme_name, baseline, protected, layers)

@@ -1,0 +1,49 @@
+"""DNN simulation configurations (paper Table II)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["NPUConfig", "SERVER_NPU", "EDGE_NPU", "NPUS"]
+
+
+@dataclass(frozen=True)
+class NPUConfig:
+    name: str
+    pe_rows: int
+    pe_cols: int
+    bandwidth_gbps: float     # off-chip, GB/s (4 channels total)
+    freq_ghz: float
+    sram_bytes: int
+    precision_bytes: int = 1  # 1B per element (Table II)
+    dram_channels: int = 4
+
+    @property
+    def bytes_per_cycle(self) -> float:
+        """Off-chip bytes deliverable per accelerator cycle."""
+        return self.bandwidth_gbps / self.freq_ghz
+
+    @property
+    def macs_per_cycle(self) -> int:
+        return self.pe_rows * self.pe_cols
+
+
+# Server NPU: Google TPU v1-like (Table II).
+SERVER_NPU = NPUConfig(
+    name="server",
+    pe_rows=256, pe_cols=256,
+    bandwidth_gbps=20.0,
+    freq_ghz=1.0,
+    sram_bytes=24 * 1024 * 1024,
+)
+
+# Edge NPU: Samsung Exynos 990-like (Table II).
+EDGE_NPU = NPUConfig(
+    name="edge",
+    pe_rows=32, pe_cols=32,
+    bandwidth_gbps=10.0,
+    freq_ghz=2.75,
+    sram_bytes=480 * 1024,
+)
+
+NPUS = {"server": SERVER_NPU, "edge": EDGE_NPU}

@@ -1,0 +1,84 @@
+"""SecureLoop-style optimal authentication-block (optBlk) search (§III-C).
+
+The paper uses SecureLoop's scheduling search to pick, per layer, the
+authentication granularity that (a) aligns with the layer's tile fetch
+chunks (no over-fetch, no redundant re-authentication of halo overlap)
+and (b) minimizes metadata traffic, while also matching the *producer*
+layer's write pattern with the *consumer* layer's read pattern
+(inter-layer tiling, Fig. 3(b)).
+
+Cost per candidate granularity g for a (total, chunk) stream:
+
+    meta(g)      = blocks(g) * MAC_BYTES        (finer g = more MACs)
+    overfetch(g) = moved(g) - moved(64B burst)  (coarser g = waste)
+    halo(g)      = re-authenticated halo overlap when g spans rows the
+                   next tile re-reads (conv windows with R > stride)
+
+optBlk = argmin of the summed stream costs.  The cross-layer variant
+minimizes max(producer write cost, consumer read cost) so one
+granularity serves the ofmap_i -> ifmap_{i+1} tensor.
+"""
+
+from __future__ import annotations
+
+from repro.sim.npu_configs import NPUConfig
+
+__all__ = ["CANDIDATE_BLOCKS", "optimal_block_for_streams",
+           "optimal_block_cross_layer", "stream_cost"]
+
+CANDIDATE_BLOCKS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+MAC_BYTES = 8
+BURST = 64
+
+
+def _rounded(total: float, chunk: float, g: int) -> float:
+    if total <= 0:
+        return 0.0
+    chunk = max(chunk, 1.0)
+    n_chunks = max(1.0, total / chunk)
+    return n_chunks * (-(-chunk // g) * g)
+
+
+def stream_cost(total: float, chunk: float, g: int, *,
+                halo_fraction: float = 0.0) -> float:
+    """Extra off-chip bytes for protecting one stream at granularity g."""
+    if total <= 0:
+        return 0.0
+    moved = _rounded(total, chunk, g)
+    baseline = _rounded(total, chunk, BURST)
+    overfetch = max(0.0, moved - baseline)
+    blocks = moved / g
+    meta = blocks * MAC_BYTES
+    # Halo rows are re-read by adjacent tiles: blocks spanning the halo
+    # must be re-authenticated; cost grows with g beyond the chunk.
+    halo = halo_fraction * total * (g / max(chunk, g))
+    return meta + overfetch + halo
+
+
+def optimal_block_for_streams(streams, npu: NPUConfig) -> int:
+    """Intra-layer optBlk: argmin summed stream cost over candidates."""
+    del npu  # granularity search is bandwidth-agnostic
+    best_g, best_cost = CANDIDATE_BLOCKS[0], float("inf")
+    for g in CANDIDATE_BLOCKS:
+        cost = sum(stream_cost(s.total_bytes, s.chunk_bytes, g,
+                               halo_fraction=s.halo_fraction)
+                   for s in streams)
+        if cost < best_cost:
+            best_g, best_cost = g, cost
+    return best_g
+
+
+def optimal_block_cross_layer(producer, consumer, npu: NPUConfig) -> int:
+    """Inter-layer optBlk for the ofmap_i -> ifmap_{i+1} tensor."""
+    del npu
+    prod = [s for s in producer.streams if s.is_write]
+    cons = [s for s in consumer.streams if s.name == "ifmap"]
+    best_g, best_cost = CANDIDATE_BLOCKS[0], float("inf")
+    for g in CANDIDATE_BLOCKS:
+        wcost = sum(stream_cost(s.total_bytes, s.chunk_bytes, g) for s in prod)
+        rcost = sum(stream_cost(s.total_bytes, s.chunk_bytes, g,
+                                halo_fraction=s.halo_fraction) for s in cons)
+        cost = max(wcost, rcost)
+        if cost < best_cost:
+            best_g, best_cost = g, cost
+    return best_g

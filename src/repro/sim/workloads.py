@@ -1,0 +1,296 @@
+"""The paper's 13 DNN benchmark workloads (§IV-A) as layer tables.
+
+Layer dimensions are reconstructed from the public SCALE-Sim topology
+set (the simulator the paper uses) and the original architectures.
+Every layer is normalized to the systolic GEMM view:
+
+    conv:  M = P*Q (output pixels), K = R*S*C, N = num_filters
+    gemm:  (M, K, N) directly
+
+which is exactly how SCALE-Sim maps conv onto the array.  DNN tiling
+metadata (ifmap row bytes, halo overlap) is derived from the conv
+geometry for the optBlk search.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+__all__ = ["Layer", "Workload", "WORKLOADS", "conv", "gemm"]
+
+
+@dataclass(frozen=True)
+class Layer:
+    name: str
+    m: int                  # output rows of the GEMM view
+    k: int                  # contraction dim
+    n: int                  # output cols (filters)
+    kind: str = "conv"      # conv | dwconv | gemm | embed
+    # conv geometry for tiling/halo analysis (0 when kind == gemm):
+    h: int = 0              # input height
+    w: int = 0              # input width
+    c: int = 0              # input channels
+    r: int = 0              # filter height
+    s: int = 0              # filter width
+    stride: int = 1
+
+    @property
+    def ifmap_bytes(self) -> int:
+        return self.m * self.k
+
+    @property
+    def filter_bytes(self) -> int:
+        return self.k * self.n
+
+    @property
+    def ofmap_bytes(self) -> int:
+        return self.m * self.n
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n
+
+    @property
+    def has_halo(self) -> bool:
+        """Tile halo exists when the conv window overlaps (R or S > stride)."""
+        return self.kind in ("conv", "dwconv") and max(self.r, self.s) > self.stride
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    layers: tuple
+
+    @property
+    def total_macs(self) -> int:
+        return sum(l.macs for l in self.layers)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(l.ifmap_bytes + l.filter_bytes + l.ofmap_bytes
+                   for l in self.layers)
+
+
+def conv(name, h, w, c, k_filters, r, s, stride=1, pad=None) -> Layer:
+    if pad is None:
+        pad = r // 2
+    p = (h + 2 * pad - r) // stride + 1
+    q = (w + 2 * pad - s) // stride + 1
+    return Layer(name, m=p * q, k=r * s * c, n=k_filters, kind="conv",
+                 h=h, w=w, c=c, r=r, s=s, stride=stride)
+
+
+def dwconv(name, h, w, c, r, s, stride=1) -> Layer:
+    pad = r // 2
+    p = (h + 2 * pad - r) // stride + 1
+    q = (w + 2 * pad - s) // stride + 1
+    # Depthwise: each channel convolved independently; GEMM view per
+    # channel batched — model as M=P*Q, K=R*S, N=C (utilization-poor).
+    return Layer(name, m=p * q, k=r * s, n=c, kind="dwconv",
+                 h=h, w=w, c=c, r=r, s=s, stride=stride)
+
+
+def gemm(name, m, k, n) -> Layer:
+    return Layer(name, m=m, k=k, n=n, kind="gemm")
+
+
+def _lenet() -> Workload:
+    return Workload("lenet", (
+        conv("c1", 28, 28, 1, 6, 5, 5, pad=2),
+        conv("c3", 14, 14, 6, 16, 5, 5, pad=0),
+        gemm("f5", 1, 400, 120),
+        gemm("f6", 1, 120, 84),
+        gemm("f7", 1, 84, 10),
+    ))
+
+
+def _alexnet() -> Workload:
+    return Workload("alexnet", (
+        conv("c1", 227, 227, 3, 96, 11, 11, stride=4, pad=0),
+        conv("c2", 27, 27, 96, 256, 5, 5),
+        conv("c3", 13, 13, 256, 384, 3, 3),
+        conv("c4", 13, 13, 384, 384, 3, 3),
+        conv("c5", 13, 13, 384, 256, 3, 3),
+        gemm("f6", 1, 9216, 4096),
+        gemm("f7", 1, 4096, 4096),
+        gemm("f8", 1, 4096, 1000),
+    ))
+
+
+def _mobilenet() -> Workload:
+    layers = [conv("c0", 224, 224, 3, 32, 3, 3, stride=2)]
+    cfg = [(112, 32, 64, 1), (112, 64, 128, 2), (56, 128, 128, 1),
+           (56, 128, 256, 2), (28, 256, 256, 1), (28, 256, 512, 2),
+           (14, 512, 512, 1), (14, 512, 512, 1), (14, 512, 512, 1),
+           (14, 512, 512, 1), (14, 512, 512, 1), (14, 512, 1024, 2),
+           (7, 1024, 1024, 1)]
+    for i, (hw, cin, cout, stride) in enumerate(cfg):
+        layers.append(dwconv(f"dw{i}", hw, hw, cin, 3, 3, stride))
+        out_hw = hw // stride
+        layers.append(conv(f"pw{i}", out_hw, out_hw, cin, cout, 1, 1, pad=0))
+    layers.append(gemm("fc", 1, 1024, 1000))
+    return Workload("mobilenet", tuple(layers))
+
+
+def _resnet18() -> Workload:
+    layers = [conv("c1", 224, 224, 3, 64, 7, 7, stride=2)]
+    stages = [(56, 64, 64, 1), (56, 64, 64, 1),
+              (56, 64, 128, 2), (28, 128, 128, 1),
+              (28, 128, 256, 2), (14, 256, 256, 1),
+              (14, 256, 512, 2), (7, 512, 512, 1)]
+    for i, (hw, cin, cout, stride) in enumerate(stages):
+        layers.append(conv(f"b{i}a", hw, hw, cin, cout, 3, 3, stride=stride))
+        out_hw = hw // stride
+        layers.append(conv(f"b{i}b", out_hw, out_hw, cout, cout, 3, 3))
+    layers.append(gemm("fc", 1, 512, 1000))
+    return Workload("resnet18", tuple(layers))
+
+
+def _googlenet() -> Workload:
+    # Inception-v1 main trunk + representative inception branches.
+    layers = [
+        conv("c1", 224, 224, 3, 64, 7, 7, stride=2),
+        conv("c2r", 56, 56, 64, 64, 1, 1, pad=0),
+        conv("c2", 56, 56, 64, 192, 3, 3),
+    ]
+    # (hw, cin, 1x1, 3x3red, 3x3, 5x5red, 5x5, pool_proj)
+    inception = [
+        (28, 192, 64, 96, 128, 16, 32, 32),
+        (28, 256, 128, 128, 192, 32, 96, 64),
+        (14, 480, 192, 96, 208, 16, 48, 64),
+        (14, 512, 160, 112, 224, 24, 64, 64),
+        (14, 512, 128, 128, 256, 24, 64, 64),
+        (14, 512, 112, 144, 288, 32, 64, 64),
+        (14, 528, 256, 160, 320, 32, 128, 128),
+        (7, 832, 256, 160, 320, 32, 128, 128),
+        (7, 832, 384, 192, 384, 48, 128, 128),
+    ]
+    for i, (hw, cin, c1, c3r, c3, c5r, c5, pp) in enumerate(inception):
+        layers += [
+            conv(f"i{i}_1x1", hw, hw, cin, c1, 1, 1, pad=0),
+            conv(f"i{i}_3r", hw, hw, cin, c3r, 1, 1, pad=0),
+            conv(f"i{i}_3x3", hw, hw, c3r, c3, 3, 3),
+            conv(f"i{i}_5r", hw, hw, cin, c5r, 1, 1, pad=0),
+            conv(f"i{i}_5x5", hw, hw, c5r, c5, 5, 5),
+            conv(f"i{i}_pp", hw, hw, cin, pp, 1, 1, pad=0),
+        ]
+    layers.append(gemm("fc", 1, 1024, 1000))
+    return Workload("googlenet", tuple(layers))
+
+
+def _dlrm() -> Workload:
+    # MLPerf DLRM: bottom MLP 13-512-256-64, top MLP 512-256-1 (batch 128)
+    # + embedding gathers (memory-bound reads modeled as embed "layers").
+    b = 128
+    return Workload("dlrm", (
+        gemm("bot0", b, 13, 512),
+        gemm("bot1", b, 512, 256),
+        gemm("bot2", b, 256, 64),
+        Layer("embed", m=b * 26, k=1, n=64, kind="embed"),
+        gemm("top0", b, 479, 512),
+        gemm("top1", b, 512, 256),
+        gemm("top2", b, 256, 1),
+    ))
+
+
+def _alphagozero() -> Workload:
+    layers = [conv("c_in", 19, 19, 17, 256, 3, 3)]
+    for i in range(19):  # 19 residual blocks x 2 convs
+        layers.append(conv(f"r{i}a", 19, 19, 256, 256, 3, 3))
+        layers.append(conv(f"r{i}b", 19, 19, 256, 256, 3, 3))
+    layers += [conv("policy", 19, 19, 256, 2, 1, 1, pad=0),
+               gemm("policy_fc", 1, 722, 362),
+               conv("value", 19, 19, 256, 1, 1, 1, pad=0),
+               gemm("value_fc", 1, 361, 256)]
+    return Workload("alphagozero", tuple(layers))
+
+
+def _ds2() -> Workload:
+    # DeepSpeech2: 2 conv frontend + 5 bidirectional GRU (as GEMMs) + fc.
+    t = 300  # time steps
+    layers = [
+        conv("c1", 161, t, 1, 32, 41, 11, stride=2),
+        conv("c2", 81, t // 2, 32, 32, 21, 11, stride=2),
+    ]
+    h = 1760
+    for i in range(5):
+        in_dim = 41 * 32 * 2 if i == 0 else h
+        layers.append(gemm(f"gru{i}_x", t // 4, in_dim, 3 * h))
+        layers.append(gemm(f"gru{i}_h", t // 4, h, 3 * h))
+    layers.append(gemm("fc", t // 4, h, 29))
+    return Workload("ds2", tuple(layers))
+
+
+def _fasterrcnn() -> Workload:
+    # VGG16 backbone @600x600 + RPN + detection head.
+    layers = []
+    vgg = [(600, 3, 64), (600, 64, 64), (300, 64, 128), (300, 128, 128),
+           (150, 128, 256), (150, 256, 256), (150, 256, 256),
+           (75, 256, 512), (75, 512, 512), (75, 512, 512),
+           (37, 512, 512), (37, 512, 512), (37, 512, 512)]
+    for i, (hw, cin, cout) in enumerate(vgg):
+        layers.append(conv(f"v{i}", hw, hw, cin, cout, 3, 3))
+    layers += [
+        conv("rpn", 37, 37, 512, 512, 3, 3),
+        conv("rpn_cls", 37, 37, 512, 18, 1, 1, pad=0),
+        conv("rpn_box", 37, 37, 512, 36, 1, 1, pad=0),
+        gemm("head_fc6", 300, 25088, 4096),
+        gemm("head_fc7", 300, 4096, 4096),
+    ]
+    return Workload("fasterrcnn", tuple(layers))
+
+
+def _ncf() -> Workload:
+    b = 256
+    return Workload("ncf", (
+        Layer("embed", m=b * 2, k=1, n=64, kind="embed"),
+        gemm("mlp0", b, 128, 256),
+        gemm("mlp1", b, 256, 128),
+        gemm("mlp2", b, 128, 64),
+        gemm("out", b, 128, 1),
+    ))
+
+
+def _sentimental() -> Workload:
+    # seqCNN for sentiment: embedding + 1D convs + fc.
+    seq, emb = 400, 128
+    return Workload("sentimental", (
+        Layer("embed", m=seq, k=1, n=emb, kind="embed"),
+        conv("conv3", seq, 1, emb, 128, 3, 1, pad=1),
+        conv("conv4", seq, 1, emb, 128, 4, 1, pad=1),
+        conv("conv5", seq, 1, emb, 128, 5, 1, pad=2),
+        gemm("fc", 1, 384, 2),
+    ))
+
+
+def _transformer_fwd() -> Workload:
+    # Transformer-base forward: 6 layers, d=512, ffn=2048, seq=128.
+    seq, d, ffn, heads = 128, 512, 2048, 8
+    layers = []
+    for i in range(6):
+        layers += [
+            gemm(f"l{i}_qkv", seq, d, 3 * d),
+            gemm(f"l{i}_scores", heads * seq, d // heads, seq),
+            gemm(f"l{i}_ctx", heads * seq, seq, d // heads),
+            gemm(f"l{i}_proj", seq, d, d),
+            gemm(f"l{i}_ff1", seq, d, ffn),
+            gemm(f"l{i}_ff2", seq, ffn, d),
+        ]
+    return Workload("transformer_fwd", tuple(layers))
+
+
+def _yolo_tiny() -> Workload:
+    layers = []
+    cfg = [(416, 3, 16), (208, 16, 32), (104, 32, 64), (52, 64, 128),
+           (26, 128, 256), (13, 256, 512), (13, 512, 1024), (13, 1024, 256)]
+    for i, (hw, cin, cout) in enumerate(cfg):
+        layers.append(conv(f"c{i}", hw, hw, cin, cout, 3, 3))
+    layers.append(conv("head", 13, 13, 256, 255, 1, 1, pad=0))
+    return Workload("yolo_tiny", tuple(layers))
+
+
+WORKLOADS = {w.name: w for w in (
+    _lenet(), _alexnet(), _mobilenet(), _resnet18(), _googlenet(), _dlrm(),
+    _alphagozero(), _ds2(), _fasterrcnn(), _ncf(), _sentimental(),
+    _transformer_fwd(), _yolo_tiny(),
+)}

@@ -1,0 +1,70 @@
+"""Train-step builders for every arch kind, with optional SeDA boundary.
+
+``make_train_step(arch, cfg, opt_cfg)`` returns a pure function
+
+    step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+suitable for ``jax.jit`` with in/out shardings from the planner.  When
+``secure`` is given, the step runs inside the SecureExecutor boundary:
+params are decrypted+verified on entry and re-protected on exit (the
+paper-faithful HBM-as-untrusted emulation mode, measurable in
+cost_analysis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ed
+from repro.models import lm as lm_mod
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+__all__ = ["make_loss_fn", "make_train_step", "make_secure_train_step"]
+
+
+def make_loss_fn(arch, cfg) -> Callable:
+    if arch.kind == "encdec":
+        return lambda params, batch: ed.encdec_loss(cfg, params, batch)
+    return lambda params, batch: lm_mod.lm_loss(cfg, params, batch)
+
+
+def make_train_step(arch, cfg, opt_cfg: AdamWConfig) -> Callable:
+    loss_fn = make_loss_fn(arch, cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, params, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_secure_train_step(arch, cfg, opt_cfg: AdamWConfig, executor,
+                           region_spec) -> Callable:
+    """Paper-faithful mode: params live protected in untrusted memory.
+
+    step(secure_state, opt_state, batch, step_idx)
+        -> (secure_state', opt_state', metrics)
+
+    The decrypt -> train -> re-encrypt pipeline is one jitted program;
+    `ok` (integrity verification) is returned in metrics and must be
+    checked by the host loop (a False aborts training — tamper evident).
+    """
+    inner = make_train_step(arch, cfg, opt_cfg)
+
+    def secure_step(secure_state, opt_state, batch, step_idx):
+        params, ok = executor.unprotect(secure_state, region_spec)
+        params, opt_state, metrics = inner(params, opt_state, batch)
+        new_state = executor.protect(params, region_spec, step=step_idx + 1)
+        metrics["integrity_ok"] = ok
+        return new_state, opt_state, metrics
+
+    return secure_step

@@ -1,0 +1,19 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see the real 1-device CPU; only launch/dryrun.py forces
+512 placeholder devices (and only in its own process)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.secure_memory import SecureKeys
+
+
+@pytest.fixture(scope="session")
+def keys() -> SecureKeys:
+    return SecureKeys.derive(1234)
+
+
+@pytest.fixture()
+def rng() -> np.random.Generator:
+    return np.random.default_rng(0)

@@ -1,0 +1,94 @@
+"""AES-128 + CTR mode against official vectors, plus properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import aes, ctr
+
+
+def _hex(b) -> str:
+    return bytes(np.asarray(b)).hex()
+
+
+class TestFIPS197:
+    def test_appendix_b_vector(self):
+        key = np.arange(16, dtype=np.uint8)  # 000102...0f
+        pt = np.frombuffer(bytes.fromhex("00112233445566778899aabbccddeeff"),
+                           dtype=np.uint8)
+        rks = aes.key_expansion_np(key)
+        ct = aes.aes128_encrypt(jnp.asarray(pt)[None], jnp.asarray(rks))[0]
+        assert _hex(ct) == "69c4e0d86a7b0430d8cdb78070b4c55a"
+
+    def test_sp800_38a_ecb_block(self):
+        key = np.frombuffer(bytes.fromhex("2b7e151628aed2a6abf7158809cf4f3c"),
+                            dtype=np.uint8)
+        pt = np.frombuffer(bytes.fromhex("6bc1bee22e409f96e93d7e117393172a"),
+                           dtype=np.uint8)
+        rks = aes.key_expansion_np(key)
+        ct = aes.aes128_encrypt(jnp.asarray(pt)[None], jnp.asarray(rks))[0]
+        assert _hex(ct) == "3ad77bb40d7a3660a89ecaf32466ef97"
+
+    def test_key_expansion_traced_matches_numpy(self):
+        key = np.frombuffer(bytes.fromhex("2b7e151628aed2a6abf7158809cf4f3c"),
+                            dtype=np.uint8)
+        want = aes.key_expansion_np(key)
+        got = np.asarray(aes.key_expansion(jnp.asarray(key)))
+        assert (got == want).all()
+
+    def test_fips_key_expansion_first_round_keys(self):
+        # FIPS-197 A.1: key 2b7e...3c -> w4..w7 = a0fafe17 88542cb1 ...
+        key = np.frombuffer(bytes.fromhex("2b7e151628aed2a6abf7158809cf4f3c"),
+                            dtype=np.uint8)
+        rks = aes.key_expansion_np(key)
+        assert rks[1].tobytes().hex() == (
+            "a0fafe1788542cb123a339392a6c7605")
+
+
+class TestCTR:
+    def test_sp800_38a_ctr_keystream(self):
+        # SP 800-38A F.5.1: CTR-AES128 with counter f0f1...ff.
+        key = np.frombuffer(bytes.fromhex("2b7e151628aed2a6abf7158809cf4f3c"),
+                            dtype=np.uint8)
+        counter = bytes.fromhex("f0f1f2f3f4f5f6f7f8f9fafbfcfdfeff")
+        rks = jnp.asarray(aes.key_expansion_np(key))
+        pt = np.frombuffer(bytes.fromhex("6bc1bee22e409f96e93d7e117393172a"),
+                           dtype=np.uint8)
+        otp = aes.aes128_encrypt(
+            jnp.asarray(np.frombuffer(counter, np.uint8))[None], rks)[0]
+        ct = np.asarray(otp) ^ pt
+        assert ct.tobytes().hex() == "874d6191b620e3261bef6864990db6ce"
+
+    def test_counter_block_layout_big_endian(self):
+        words = jnp.asarray([[0, 1, 0, 0x0102]], dtype=jnp.uint32)
+        blk = np.asarray(ctr.counter_blocks(words))[0]
+        assert list(blk) == [0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 1, 2]
+
+    def test_roundtrip(self, keys, rng):
+        data = jnp.asarray(rng.integers(0, 256, 160, dtype=np.uint8))
+        enc = ctr.ctr_encrypt(data, keys.round_keys, jnp.uint32(0),
+                              jnp.uint32(7), jnp.uint32(0), jnp.uint32(3))
+        dec = ctr.ctr_decrypt(enc, keys.round_keys, jnp.uint32(0),
+                              jnp.uint32(7), jnp.uint32(0), jnp.uint32(3))
+        assert (np.asarray(dec) == np.asarray(data)).all()
+        assert not (np.asarray(enc) == np.asarray(data)).all()
+
+    def test_distinct_counters_distinct_pads(self, keys):
+        segs = ctr._segment_counters(64, jnp.uint32(0), jnp.uint32(0),
+                                     jnp.uint32(0), jnp.uint32(9))
+        otps = np.asarray(ctr.ctr_keystream(keys.round_keys, segs))
+        assert len({bytes(o) for o in otps}) == 64
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+    def test_roundtrip_property(self, pa, vn):
+        keys = __import__("repro.core.secure_memory",
+                          fromlist=["SecureKeys"]).SecureKeys.derive(7)
+        data = jnp.asarray(np.arange(48, dtype=np.uint8))
+        enc = ctr.ctr_encrypt(data, keys.round_keys, jnp.uint32(0),
+                              jnp.uint32(pa), jnp.uint32(0), jnp.uint32(vn))
+        dec = ctr.ctr_decrypt(enc, keys.round_keys, jnp.uint32(0),
+                              jnp.uint32(pa), jnp.uint32(0), jnp.uint32(vn))
+        assert (np.asarray(dec) == np.asarray(data)).all()

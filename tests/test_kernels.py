@@ -1,0 +1,154 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import aes, baes, mac
+from repro.core.secure_memory import SecureKeys
+from repro.kernels.aes_ctr import ops as aes_ops
+from repro.kernels.aes_ctr.ref import (aes_ctr_keystream_lanes_ref,
+                                       aes_ctr_keystream_ref)
+from repro.kernels.fused_crypt_mac.ops import secure_read_kernel
+from repro.kernels.otp_xor import ops as ox_ops
+from repro.kernels.otp_xor.ref import otp_xor_ref
+from repro.kernels.xormac import ops as xm_ops
+from repro.kernels.xormac.ref import nh_hash_ref
+
+
+@pytest.fixture(scope="module")
+def kkeys():
+    return SecureKeys.derive(77)
+
+
+class TestAESCTRKernel:
+    @pytest.mark.parametrize("n", [1, 7, 256, 1000])
+    @pytest.mark.parametrize("subbytes", ["take", "onehot"])
+    def test_vs_oracle(self, kkeys, n, subbytes):
+        rng = np.random.default_rng(n)
+        cw = jnp.asarray(rng.integers(0, 2**32, (n, 4), dtype=np.uint32))
+        got = aes_ops.keystream_lanes(cw, kkeys.round_keys, subbytes=subbytes)
+        want = aes_ctr_keystream_lanes_ref(cw, kkeys.round_keys)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_bytes_layout(self, kkeys):
+        cw = jnp.asarray([[0, 5, 0, 9]], dtype=jnp.uint32)
+        got = aes_ops.keystream_bytes(cw, kkeys.round_keys)
+        want = aes_ctr_keystream_ref(cw, kkeys.round_keys)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("tile_n", [8, 64, 512])
+    def test_tile_sweep(self, kkeys, tile_n):
+        rng = np.random.default_rng(1)
+        cw = jnp.asarray(rng.integers(0, 2**32, (100, 4), dtype=np.uint32))
+        got = aes_ops.keystream_lanes(cw, kkeys.round_keys)
+        from repro.kernels.aes_ctr.kernel import aes_ctr_keystream
+        got_t = aes_ctr_keystream(cw, kkeys.round_keys, tile_n=tile_n)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(got_t))
+
+
+class TestOtpXorKernel:
+    @pytest.mark.parametrize("n,s", [(1, 2), (13, 4), (300, 8), (64, 32)])
+    def test_vs_oracle(self, n, s):
+        rng = np.random.default_rng(n * s)
+        data = jnp.asarray(rng.integers(0, 2**32, (n, s * 4), dtype=np.uint32))
+        base = jnp.asarray(rng.integers(0, 2**32, (n, 4), dtype=np.uint32))
+        div = jnp.asarray(rng.integers(0, 2**32, (s, 4), dtype=np.uint32))
+        got = ox_ops.otp_xor(data, base, div)
+        want = otp_xor_ref(data, base, div)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("block_bytes", [32, 64, 128])
+    def test_full_baes_path_vs_core(self, kkeys, block_bytes):
+        rng = np.random.default_rng(0)
+        n = 40
+        pt = jnp.asarray(rng.integers(0, 256, block_bytes * n, dtype=np.uint8))
+        cw = jnp.asarray(np.stack(
+            [np.zeros(n, np.uint32),
+             np.arange(n, dtype=np.uint32) * (block_bytes // 16),
+             np.zeros(n, np.uint32), np.full(n, 3, np.uint32)], -1))
+        got = ox_ops.baes_encrypt_kernel(pt, kkeys.round_keys, cw,
+                                         block_bytes=block_bytes)
+        want = baes.baes_encrypt(pt, kkeys.round_keys, cw,
+                                 block_bytes=block_bytes, key=kkeys.key)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestXorMacKernel:
+    @pytest.mark.parametrize("n,lanes", [(1, 8), (50, 24), (200, 136)])
+    def test_nh_vs_oracle(self, kkeys, n, lanes):
+        rng = np.random.default_rng(n)
+        payload = jnp.asarray(rng.integers(0, 2**32, (n, lanes),
+                                           dtype=np.uint32))
+        key = kkeys.hash_key[:lanes]
+        got = xm_ops.nh_hash_kernel_call(payload, key)
+        want = nh_hash_ref(payload, key)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_block_macs_bitexact_vs_core(self, kkeys):
+        rng = np.random.default_rng(2)
+        blocks = jnp.asarray(rng.integers(0, 256, (33, 64), dtype=np.uint8))
+        bind = mac.Binding.make(np.arange(33) * 4, 7, 2, 1, np.arange(33))
+        got = xm_ops.block_macs_kernel(blocks, bind,
+                                       hash_key_u32=kkeys.hash_key,
+                                       round_keys=kkeys.round_keys)
+        want = mac.block_macs(blocks, bind, hash_key_u32=kkeys.hash_key,
+                              round_keys=kkeys.round_keys, engine="nh")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_layer_mac_bitexact(self, kkeys):
+        rng = np.random.default_rng(3)
+        blocks = jnp.asarray(rng.integers(0, 256, (16, 64), dtype=np.uint8))
+        bind = mac.Binding.make(np.arange(16) * 4, 9, 0, 0, np.arange(16))
+        got = xm_ops.layer_mac_kernel(blocks, bind,
+                                      hash_key_u32=kkeys.hash_key,
+                                      round_keys=kkeys.round_keys)
+        want = mac.layer_mac(blocks, bind, hash_key_u32=kkeys.hash_key,
+                             round_keys=kkeys.round_keys)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestFusedCryptMac:
+    @pytest.mark.parametrize("n_blocks", [4, 40])
+    def test_fused_read_path(self, kkeys, n_blocks):
+        rng = np.random.default_rng(4)
+        bb = 64
+        pt = jnp.asarray(rng.integers(0, 256, bb * n_blocks, dtype=np.uint8))
+        cw = jnp.asarray(np.stack(
+            [np.zeros(n_blocks, np.uint32),
+             np.arange(n_blocks, dtype=np.uint32) * 4,
+             np.zeros(n_blocks, np.uint32),
+             np.full(n_blocks, 9, np.uint32)], -1))
+        ct = baes.baes_encrypt(pt, kkeys.round_keys, cw, block_bytes=bb,
+                               key=kkeys.key)
+        bind = mac.Binding.make(np.arange(n_blocks) * 4, 9, 1, 0,
+                                np.arange(n_blocks))
+        pt2, macs = secure_read_kernel(ct, bind, kkeys.round_keys, cw,
+                                       kkeys.hash_key, block_bytes=bb)
+        np.testing.assert_array_equal(np.asarray(pt2), np.asarray(pt))
+        want = mac.block_macs(ct.reshape(n_blocks, bb), bind,
+                              hash_key_u32=kkeys.hash_key,
+                              round_keys=kkeys.round_keys, engine="nh")
+        np.testing.assert_array_equal(np.asarray(macs), np.asarray(want))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 60))
+    def test_fused_roundtrip_property(self, n_blocks):
+        kkeys = SecureKeys.derive(55)
+        rng = np.random.default_rng(n_blocks)
+        pt = jnp.asarray(rng.integers(0, 256, 64 * n_blocks, dtype=np.uint8))
+        cw = jnp.asarray(np.stack(
+            [np.zeros(n_blocks, np.uint32),
+             np.arange(n_blocks, dtype=np.uint32) * 4,
+             np.zeros(n_blocks, np.uint32),
+             np.full(n_blocks, 1, np.uint32)], -1))
+        ct = baes.baes_encrypt(pt, kkeys.round_keys, cw, block_bytes=64,
+                               key=kkeys.key)
+        bind = mac.Binding.make(np.arange(n_blocks) * 4, 1, 0, 0,
+                                np.arange(n_blocks))
+        pt2, _ = secure_read_kernel(ct, bind, kkeys.round_keys, cw,
+                                    kkeys.hash_key, block_bytes=64)
+        np.testing.assert_array_equal(np.asarray(pt2), np.asarray(pt))

@@ -1,0 +1,124 @@
+"""Multi-level MAC (§III-C): XOR-MAC, RePA attack/defense, properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import attacks, mac
+from repro.core.secure_memory import SecureKeys
+
+
+def _bind(n, layer=3, fmap=1, vn=7):
+    return mac.Binding.make(np.arange(n, dtype=np.uint32) * 4, vn, layer,
+                            fmap, np.arange(n, dtype=np.uint32))
+
+
+@pytest.fixture()
+def blocks(rng):
+    return jnp.asarray(rng.integers(0, 256, (16, 64), dtype=np.uint8))
+
+
+class TestBlockMACs:
+    @pytest.mark.parametrize("engine", ["nh", "cbc"])
+    def test_deterministic(self, keys, blocks, engine):
+        kw = dict(hash_key_u32=keys.hash_key, round_keys=keys.round_keys,
+                  engine=engine)
+        m1 = mac.block_macs(blocks, _bind(16), **kw)
+        m2 = mac.block_macs(blocks, _bind(16), **kw)
+        assert (np.asarray(m1) == np.asarray(m2)).all()
+
+    @pytest.mark.parametrize("engine", ["nh", "cbc"])
+    def test_distinct_blocks_distinct_macs(self, keys, blocks, engine):
+        m = np.asarray(mac.block_macs(blocks, _bind(16),
+                                      hash_key_u32=keys.hash_key,
+                                      round_keys=keys.round_keys,
+                                      engine=engine))
+        assert len({bytes(x) for x in m}) == 16
+
+    @pytest.mark.parametrize("engine", ["nh", "cbc"])
+    def test_binding_sensitivity(self, keys, blocks, engine):
+        """Same data, different (layer, fmap, blk) binding -> different MAC
+        (the RePA defense, Alg. 2 lines 7-8)."""
+        kw = dict(hash_key_u32=keys.hash_key, round_keys=keys.round_keys,
+                  engine=engine)
+        m1 = np.asarray(mac.block_macs(blocks, _bind(16, layer=3), **kw))
+        m2 = np.asarray(mac.block_macs(blocks, _bind(16, layer=4), **kw))
+        assert not (m1 == m2).all()
+        m3 = np.asarray(mac.block_macs(blocks, _bind(16, vn=8), **kw))
+        assert not (m1 == m3).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 15), st.integers(0, 63), st.integers(0, 7))
+    def test_tamper_detection_property(self, blk_idx, byte_idx, bit):
+        """Flipping ANY bit of ANY block changes that block's MAC."""
+        keys = SecureKeys.derive(321)
+        rng = np.random.default_rng(5)
+        blocks = jnp.asarray(rng.integers(0, 256, (16, 64), dtype=np.uint8))
+        kw = dict(hash_key_u32=keys.hash_key, round_keys=keys.round_keys)
+        m1 = np.asarray(mac.block_macs(blocks, _bind(16), **kw))
+        tampered = blocks.at[blk_idx, byte_idx].set(
+            blocks[blk_idx, byte_idx] ^ (1 << bit))
+        m2 = np.asarray(mac.block_macs(tampered, _bind(16), **kw))
+        assert not (m1[blk_idx] == m2[blk_idx]).all()
+
+
+class TestRePA:
+    """Algorithm 2: shuffle attack on XOR-aggregated layer MACs."""
+
+    def test_repa_succeeds_against_naive_xormac(self, keys, blocks):
+        kw = dict(hash_key_u32=keys.hash_key, round_keys=keys.round_keys,
+                  engine="naive")
+        layer1 = mac.layer_mac(blocks, _bind(16), **kw)
+        shuffled = jnp.asarray(attacks.repa_shuffle(np.asarray(blocks)))
+        layer2 = mac.layer_mac(shuffled, _bind(16), **kw)
+        # XOR commutes and naive MACs ignore position: verification PASSES
+        # although the layer content is permuted -> attack succeeds.
+        assert (np.asarray(layer1) == np.asarray(layer2)).all()
+
+    def test_repa_fails_against_seda_binding(self, keys, blocks):
+        kw = dict(hash_key_u32=keys.hash_key, round_keys=keys.round_keys,
+                  engine="nh")
+        layer1 = mac.layer_mac(blocks, _bind(16), **kw)
+        shuffled = jnp.asarray(attacks.repa_shuffle(np.asarray(blocks)))
+        layer2 = mac.layer_mac(shuffled, _bind(16), **kw)
+        assert not (np.asarray(layer1) == np.asarray(layer2)).all()
+
+    def test_model_mac_hierarchy(self, keys, blocks):
+        kw = dict(hash_key_u32=keys.hash_key, round_keys=keys.round_keys)
+        l1 = mac.layer_mac(blocks, _bind(16, layer=0), **kw)
+        l2 = mac.layer_mac(blocks ^ jnp.uint8(1), _bind(16, layer=1), **kw)
+        model = mac.model_mac(jnp.stack([l1, l2]))
+        assert model.shape == (mac.MAC_BYTES,)
+        model2 = mac.model_mac(jnp.stack([l1, l1]))
+        assert not (np.asarray(model) == np.asarray(model2)).all()
+
+    def test_verify_layer(self, keys, blocks):
+        kw = dict(hash_key_u32=keys.hash_key, round_keys=keys.round_keys)
+        lm = mac.layer_mac(blocks, _bind(16), **kw)
+        assert bool(mac.verify_layer(blocks, _bind(16), lm, **kw))
+        assert not bool(mac.verify_layer(blocks ^ jnp.uint8(2), _bind(16),
+                                         lm, **kw))
+
+
+class TestNH:
+    def test_nh_matches_bigint_reference(self, rng):
+        m = rng.integers(0, 2**32, size=(4, 16), dtype=np.uint32)
+        k = rng.integers(0, 2**32, size=16, dtype=np.uint32)
+        hi, lo = mac.nh_hash(jnp.asarray(m), jnp.asarray(k))
+        for r in range(4):
+            acc = 0
+            for i in range(0, 16, 2):
+                acc = (acc + ((int(m[r, i]) + int(k[i])) % 2**32)
+                       * ((int(m[r, i + 1]) + int(k[i + 1])) % 2**32)) % 2**64
+            assert (int(hi[r]) << 32) + int(lo[r]) == acc
+
+    def test_mul32x32_exhaustive_edges(self):
+        edge = np.array([0, 1, 2, 0xFFFF, 0x10000, 0x7FFFFFFF, 0x80000000,
+                         0xFFFFFFFE, 0xFFFFFFFF], dtype=np.uint32)
+        a, b = np.meshgrid(edge, edge)
+        hi, lo = mac._mul32x32(jnp.asarray(a.ravel()), jnp.asarray(b.ravel()))
+        want = a.ravel().astype(object) * b.ravel().astype(object)
+        got = (np.asarray(hi).astype(object) << 32) + np.asarray(lo)
+        assert (got == want).all()

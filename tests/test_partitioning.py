@@ -1,0 +1,83 @@
+"""models/partitioning + launch/analysis unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.analysis import analyze_hlo
+from repro.models.partitioning import activation_context, constrain
+
+
+class TestConstrain:
+    def test_identity_without_context(self):
+        x = jnp.ones((4, 8))
+        y = constrain(x, "batch", None)
+        assert y is x  # no-op outside a partitioning context
+
+    def test_applies_inside_context_single_device(self):
+        from jax.sharding import Mesh
+        dev = np.array(jax.devices()[:1]).reshape(1, 1)
+        mesh = Mesh(dev, ("data", "model"))
+
+        def f(x):
+            with activation_context(mesh, {"batch": "data", "seq": None}):
+                return constrain(x, "batch", "seq") * 2
+
+        out = jax.jit(f)(jnp.ones((4, 8)))
+        assert (np.asarray(out) == 2).all()
+
+    def test_nondivisible_dim_falls_back(self):
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        # 5 % 16 != 0: the entry must resolve to None (replicated), so
+        # with_sharding_constraint would get P(None). We can't run XLA
+        # with a fake mesh; instead verify the resolution logic via the
+        # planner's shared code path.
+        from repro.launch.sharding import _resolve_axes
+        axes = _resolve_axes((5, 32), ("batch", "seq"),
+                             {"batch": "data", "seq": "model"}, FakeMesh())
+        assert axes == [None, "model"]
+
+    def test_axis_not_reused_across_dims(self):
+        from repro.launch.sharding import _resolve_axes
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        axes = _resolve_axes((32, 32), ("a", "b"),
+                             {"a": "model", "b": "model"}, FakeMesh())
+        assert axes == ["model", None]
+
+
+class TestAnalyzer:
+    def test_nested_scan_multiplicity(self):
+        """Flops inside scan-in-scan multiply by both trip counts."""
+        def f(x):
+            def outer(c, _):
+                def inner(c2, _):
+                    return c2 @ c2, None
+                c, _ = jax.lax.scan(inner, c, None, length=3)
+                return c, None
+            out, _ = jax.lax.scan(outer, x, None, length=5)
+            return out
+
+        hlo = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile().as_text()
+        stats = analyze_hlo(hlo)
+        assert stats.dot_flops == pytest.approx(15 * 2 * 32 ** 3, rel=0.01)
+
+    def test_collectives_empty_on_single_device(self):
+        hlo = jax.jit(lambda x: x @ x).lower(
+            jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile().as_text()
+        stats = analyze_hlo(hlo)
+        assert stats.collective_total == 0.0
+        assert stats.dot_flops == pytest.approx(2 * 16 ** 3, rel=0.01)
+
+    def test_mem_bytes_positive(self):
+        hlo = jax.jit(lambda x: jnp.tanh(x @ x)).lower(
+            jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile().as_text()
+        stats = analyze_hlo(hlo)
+        # at least operands+outputs of the dot: 3 x 16KB.
+        assert stats.mem_bytes >= 3 * 64 * 64 * 4

@@ -1,0 +1,130 @@
+"""SecureRegion protect/unprotect + SecureExecutor schemes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import SCHEMES, SecureExecutor, attacks
+from repro.core import secure_memory as sm
+
+
+def _tree(rng):
+    return {
+        "layer0": {"w": jnp.asarray(rng.standard_normal((8, 12),
+                                                        dtype=np.float32)),
+                   "b": jnp.asarray(rng.standard_normal(5,
+                                                        dtype=np.float32))},
+        "layer1": {"w": jnp.asarray(
+            rng.integers(-100, 100, (31,), dtype=np.int32))},
+    }
+
+
+class TestSecureMemory:
+    @pytest.mark.parametrize("block_bytes", [64, 128, 512])
+    @pytest.mark.parametrize("use_baes", [True, False])
+    def test_roundtrip(self, keys, rng, block_bytes, use_baes):
+        tree = _tree(rng)
+        spec = sm.make_region_spec(tree, block_bytes=block_bytes,
+                                   use_baes=use_baes)
+        st_ = sm.protect(tree, keys, spec, step=1)
+        out, ok = sm.unprotect(st_, keys, spec)
+        assert bool(ok)
+        for a, b in zip(jax.tree_util.tree_leaves(out),
+                        jax.tree_util.tree_leaves(tree)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+    def test_ciphertext_differs_from_plaintext(self, keys, rng):
+        tree = _tree(rng)
+        spec = sm.make_region_spec(tree)
+        st_ = sm.protect(tree, keys, spec)
+        flat = jax.tree_util.tree_leaves(tree)
+        from repro.core.bytesutil import tensor_to_bytes
+        for ct, leaf in zip(st_.ciphertexts, flat):
+            pt = np.asarray(tensor_to_bytes(leaf, multiple=64))
+            assert not (np.asarray(ct) == pt).all()
+
+    def test_vn_changes_ciphertext(self, keys, rng):
+        tree = _tree(rng)
+        spec = sm.make_region_spec(tree)
+        s1 = sm.protect(tree, keys, spec, step=1)
+        s2 = sm.protect(tree, keys, spec, step=2)
+        assert not (np.asarray(s1.ciphertexts[0])
+                    == np.asarray(s2.ciphertexts[0])).all()
+
+    def test_replay_attack_detected(self, keys, rng):
+        """Splicing an old (valid) ciphertext into a newer state fails:
+        the VN differs, so MACs recompute differently (freshness)."""
+        tree = _tree(rng)
+        spec = sm.make_region_spec(tree)
+        s1 = sm.protect(tree, keys, spec, step=1)
+        tree2 = jax.tree_util.tree_map(lambda x: x + 1, tree)
+        s2 = sm.protect(tree2, keys, spec, step=2)
+        spliced = s2._replace(
+            ciphertexts=(s1.ciphertexts[0],) + s2.ciphertexts[1:])
+        _, ok = sm.unprotect(spliced, keys, spec)
+        assert not bool(ok)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2), st.integers(0, 30))
+    def test_tamper_any_leaf_any_byte(self, leaf_idx, byte_idx):
+        keys = sm.SecureKeys.derive(9)
+        rng = np.random.default_rng(3)
+        tree = _tree(rng)
+        spec = sm.make_region_spec(tree)
+        st_ = sm.protect(tree, keys, spec)
+        cts = list(st_.ciphertexts)
+        byte_idx = byte_idx % cts[leaf_idx].shape[0]
+        cts[leaf_idx] = cts[leaf_idx].at[byte_idx].set(
+            cts[leaf_idx][byte_idx] ^ 0x5A)
+        _, ok = sm.unprotect(st_._replace(ciphertexts=tuple(cts)), keys, spec)
+        assert not bool(ok)
+
+    def test_repa_shuffle_detected_on_leaf(self, keys, rng):
+        tree = {"w": jnp.asarray(rng.standard_normal((32, 16),
+                                                     dtype=np.float32))}
+        spec = sm.make_region_spec(tree, block_bytes=64)
+        st_ = sm.protect(tree, keys, spec)
+        ct = np.asarray(st_.ciphertexts[0]).reshape(-1, 64)
+        shuf = attacks.repa_shuffle(ct, seed=2).reshape(-1)
+        _, ok = sm.unprotect(
+            st_._replace(ciphertexts=(jnp.asarray(shuf),)), keys, spec)
+        assert not bool(ok)
+
+
+class TestSecureExecutor:
+    @pytest.mark.parametrize("scheme", list(SCHEMES))
+    def test_schemes_roundtrip(self, rng, scheme):
+        ex = SecureExecutor(scheme=scheme)
+        params = {"w": jnp.asarray(rng.standard_normal((16, 16),
+                                                       dtype=np.float32))}
+        spec = ex.region_spec(params)
+        state = ex.protect(params, spec, step=0)
+        out, ok = ex.unprotect(state, spec)
+        assert bool(ok)
+        assert (np.asarray(out["w"]) == np.asarray(params["w"])).all()
+
+    def test_secure_step_updates_params(self, rng):
+        ex = SecureExecutor(scheme="seda")
+        params = {"w": jnp.ones((8, 8), jnp.float32)}
+        spec = ex.region_spec(params)
+
+        def step_fn(p, x):
+            grad = jax.grad(lambda w: jnp.sum((w @ x) ** 2))(p["w"])
+            return {"w": p["w"] - 0.1 * grad}, jnp.sum(grad)
+
+        sec = ex.make_secure_step(step_fn, spec)
+        state = ex.protect(params, spec, step=0)
+        state, _, ok = jax.jit(sec)(state, 0, jnp.ones(8))
+        assert bool(ok)
+        out, ok2 = ex.unprotect(state, spec)
+        assert bool(ok2)
+        assert not (np.asarray(out["w"]) == 1.0).all()
+
+    def test_off_scheme_is_passthrough(self, rng):
+        ex = SecureExecutor(scheme="off")
+        params = {"w": jnp.ones((4, 4))}
+        spec = ex.region_spec(params)
+        assert ex.protect(params, spec) is params

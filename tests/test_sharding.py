@@ -1,0 +1,110 @@
+"""Sharding planner invariants across all 10 archs (no devices needed:
+NamedSharding construction is validated against a 16x16 abstract mesh)."""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_arch
+from repro.launch import sharding as shp
+from repro.launch.mesh import make_test_mesh
+from repro.models import encdec as ed
+from repro.models import lm as lm_mod
+from repro.models.layers import ParamSpec
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1 real device is enough to build an abstract mesh object for
+    # planner logic (we never place data in these tests).
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    from jax.sharding import Mesh
+    return Mesh(dev, ("data", "model"))
+
+
+def _mesh_sizes(overrides):
+    """Fake mesh-shape lookup for divisibility math (production 16x16)."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    return FakeMesh()
+
+
+@pytest.mark.parametrize("arch_name", sorted(ARCHS))
+class TestPlanner:
+    def _specs(self, arch):
+        cfg = arch.make_config()
+        return (ed.encdec_specs(cfg) if arch.kind == "encdec"
+                else lm_mod.lm_specs(cfg))
+
+    def test_every_rule_application_divides(self, arch_name):
+        """Resolved specs never assign a mesh axis that does not divide
+        the dim — the invariant that makes lower() never fail on
+        sharding mismatches."""
+        arch = get_arch(arch_name)
+        specs = self._specs(arch)
+        rules = arch.sharding_rules()
+        fake = _mesh_sizes(rules)
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        checked = 0
+        for path, s in flat:
+            axes = shp._resolve_axes(s.shape, s.axes, rules, fake)
+            for dim, axis in zip(s.shape, axes):
+                if axis is None:
+                    continue
+                names = axis if isinstance(axis, tuple) else (axis,)
+                size = math.prod(fake.shape[n] for n in names)
+                assert dim % size == 0, (arch_name,
+                                         jax.tree_util.keystr(path), s.shape)
+                checked += 1
+        assert checked > 0, "planner sharded nothing — rules broken"
+
+    def test_no_axis_used_twice_per_tensor(self, arch_name):
+        arch = get_arch(arch_name)
+        specs = self._specs(arch)
+        rules = arch.sharding_rules()
+        fake = _mesh_sizes(rules)
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        for path, s in flat:
+            axes = shp._resolve_axes(s.shape, s.axes, rules, fake)
+            used = [a for a in axes if a is not None]
+            flat_used = []
+            for a in used:
+                flat_used.extend(a if isinstance(a, tuple) else (a,))
+            assert len(flat_used) == len(set(flat_used)), (
+                arch_name, jax.tree_util.keystr(path), axes)
+
+    def test_big_weights_sharded(self, arch_name):
+        """Any tensor >= 64MB (bf16) must shard on at least one axis on
+        the production mesh — else a single chip would hold it whole."""
+        arch = get_arch(arch_name)
+        specs = self._specs(arch)
+        rules = arch.sharding_rules()
+        fake = _mesh_sizes(rules)
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        for path, s in flat:
+            nbytes = math.prod(s.shape) * 2
+            if nbytes < 64 * 1024 * 1024:
+                continue
+            axes = shp._resolve_axes(s.shape, s.axes, rules, fake)
+            assert any(a is not None for a in axes), (
+                arch_name, jax.tree_util.keystr(path), s.shape,
+                "unsharded large tensor")
+
+
+class TestBatchSharding:
+    def test_divisible_batch_shards_over_dp(self):
+        fake = _mesh_sizes({})
+        b_axis, s_axis = shp.batch_sharding(fake, 256)
+        assert b_axis == "data" and s_axis is None
+
+    def test_batch_one_falls_back_to_sequence(self):
+        fake = _mesh_sizes({})
+        b_axis, s_axis = shp.batch_sharding(fake, 1)
+        assert b_axis is None and s_axis == "data"
