@@ -1,0 +1,141 @@
+"""Batched secure serving: tokens/s + protection traffic per scheme.
+
+The serving analogue of :mod:`benchmarks.bench_secure_step`: the
+continuous-batching engine with the paged, MAC-protected KV pool
+(:mod:`repro.serve.engine`) decodes under every protection scheme at
+batch sizes {1, 8, 32}, reporting
+
+* steady-state decode throughput (tokens/s, compile excluded), and
+* HLO-visible protection traffic: ``bytes accessed`` of the jitted
+  batched decode step, minus the same measurement for the ``off``
+  scheme (the paper's DRAM-traffic-overhead axis).
+
+Standalone JSON mode for the CI perf-smoke job::
+
+    PYTHONPATH=src python benchmarks/bench_secure_serving.py \
+        --batch-sizes 1,8 --gen-len 6 --json results.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import lm as lm_mod
+from repro.models.layers import init_params
+from repro.serve.engine import SecureServingEngine
+
+DEFAULT_SCHEMES = ("off", "seda", "seda512", "mgx64", "sgx64")
+DEFAULT_BATCHES = (1, 8, 32)
+
+
+def _measure(arch, cfg, params, scheme: str, batch: int, *,
+             page_tokens: int, pages_per_slot: int, gen_len: int,
+             prompt_len: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    eng = SecureServingEngine(
+        arch, cfg, params, scheme=scheme, max_slots=batch,
+        page_tokens=page_tokens, pages_per_slot=pages_per_slot,
+        n_pages=batch * pages_per_slot)
+    for _ in range(batch):
+        prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
+        eng.submit(prompt, max_new_tokens=gen_len)
+    eng.step()                       # admission + first decode (compiles)
+    t0 = time.perf_counter()
+    steps = 0
+    while any(s is not None for s in eng.slots) or eng.waiting:
+        eng.step()
+        steps += 1
+    dt = time.perf_counter() - t0
+    cost = eng.decode_cost_analysis()
+    return {
+        "scheme": scheme,
+        "batch": batch,
+        "decode_steps_timed": steps,
+        "tok_per_s": batch * steps / max(dt, 1e-9),
+        "us_per_step": dt / max(steps, 1) * 1e6,
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "preemptions": eng.stats["preemptions"],
+    }
+
+
+def collect(schemes=DEFAULT_SCHEMES, batch_sizes=DEFAULT_BATCHES, *,
+            arch_name: str = "minitron-4b", page_tokens: int = 8,
+            pages_per_slot: int = 4, gen_len: int = 8,
+            prompt_len: int = 9) -> list:
+    arch = get_arch(arch_name)
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    results = []
+    for batch in batch_sizes:
+        base_bytes = None
+        for scheme in schemes:
+            r = _measure(arch, cfg, params, scheme, batch,
+                         page_tokens=page_tokens,
+                         pages_per_slot=pages_per_slot, gen_len=gen_len,
+                         prompt_len=prompt_len)
+            if scheme == "off":
+                base_bytes = r["bytes_accessed"]
+            if base_bytes:
+                r["protection_traffic_bytes"] = (r["bytes_accessed"]
+                                                 - base_bytes)
+                r["traffic_overhead"] = r["bytes_accessed"] / base_bytes - 1
+            results.append(r)
+    return results
+
+
+def run() -> list:
+    """benchmarks.run suite hook: CSV rows for a reduced sweep."""
+    rows = []
+    for r in collect(batch_sizes=(1, 8), gen_len=6):
+        overhead = r.get("traffic_overhead")
+        derived = (f"tok/s={r['tok_per_s']:.1f} "
+                   f"steps={r['decode_steps_timed']}")
+        if overhead is not None:
+            derived += f" traffic_overhead={overhead:+.1%}"
+        rows.append({
+            "name": f"serve_{r['scheme']}_b{r['batch']}",
+            "us_per_call": r["us_per_step"],
+            "derived": derived,
+        })
+    return rows
+
+
+def main(argv=None) -> list:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="minitron-4b")
+    ap.add_argument("--schemes", default=",".join(DEFAULT_SCHEMES))
+    ap.add_argument("--batch-sizes", default=",".join(map(str,
+                                                          DEFAULT_BATCHES)))
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--pages-per-slot", type=int, default=4)
+    ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=9)
+    ap.add_argument("--json", default=None, help="write results to this file")
+    args = ap.parse_args(argv)
+
+    results = collect(
+        schemes=tuple(args.schemes.split(",")),
+        batch_sizes=tuple(int(b) for b in args.batch_sizes.split(",")),
+        arch_name=args.arch, page_tokens=args.page_tokens,
+        pages_per_slot=args.pages_per_slot, gen_len=args.gen_len,
+        prompt_len=args.prompt_len)
+    for r in results:
+        print(f"[serve-bench] scheme={r['scheme']:<8} batch={r['batch']:<3} "
+              f"tok/s={r['tok_per_s']:9.1f} "
+              f"traffic={r.get('protection_traffic_bytes', 0):12.0f}B")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "secure_serving", "results": results}, f,
+                      indent=2)
+        print(f"[serve-bench] wrote {args.json}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

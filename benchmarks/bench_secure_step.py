@@ -8,6 +8,8 @@ the paper's simulator produces: sgx64 > mgx64 > seda ~ off.
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -76,3 +78,24 @@ def run() -> list:
             "derived": f"overhead={(us / base_us - 1):+.1%} {crypto}",
         })
     return rows
+
+
+def main(argv=None) -> list:
+    """Standalone JSON mode for the CI perf-smoke job."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="write rows to this file")
+    args = ap.parse_args(argv)
+    rows = run()
+    for row in rows:
+        print(f"[secure-step] {row['name']:<24} "
+              f"{row['us_per_call']:12.1f}us  {row['derived']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "secure_step", "results": rows}, f,
+                      indent=2)
+        print(f"[secure-step] wrote {args.json}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

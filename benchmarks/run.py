@@ -13,7 +13,7 @@ import traceback
 
 from benchmarks import (bench_area_power, bench_crypt_kernels,
                         bench_memory_traffic, bench_performance,
-                        bench_secure_step, bench_table3)
+                        bench_secure_serving, bench_secure_step, bench_table3)
 
 SUITES = {
     "fig4_area_power": bench_area_power,
@@ -22,6 +22,7 @@ SUITES = {
     "table3_schemes": bench_table3,
     "crypt_kernels": bench_crypt_kernels,
     "secure_step": bench_secure_step,
+    "secure_serving": bench_secure_serving,
 }
 
 

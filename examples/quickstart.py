@@ -16,8 +16,7 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.checkpoint.secure_ckpt import (CheckpointError, load_checkpoint,
-                                          save_checkpoint)
+from repro.checkpoint.secure_ckpt import CheckpointError, load_checkpoint
 from repro.core.secure_memory import SecureKeys
 from repro.launch import train
 

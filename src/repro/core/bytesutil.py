@@ -7,7 +7,7 @@ conversions are jit-compatible bitcasts (no host round-trips).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ from __future__ import annotations
 from typing import Any, NamedTuple
 
 import jax
-import numpy as np
 
 from repro.core.bytesutil import TensorSpec
 

@@ -31,7 +31,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aes
-from repro.core.bytesutil import bytes_to_u32
 
 __all__ = [
     "Binding",

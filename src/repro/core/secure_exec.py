@@ -28,16 +28,35 @@ trace-level model used in the paper-reproduction benchmarks).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import mac, vn
+from repro.core import vn
 from repro.core import secure_memory as sm
 
-__all__ = ["SchemeConfig", "SCHEMES", "SecureExecutor"]
+__all__ = ["SchemeConfig", "SCHEMES", "SecureExecutor", "emulated_tree_probe"]
+
+
+def emulated_tree_probe(n_blocks: int) -> jax.Array:
+    """Touch VN-table + 8-ary-tree-node bytes so HLO traffic matches SGX.
+
+    The check itself is a tautology (we model traffic, not a second MAC
+    hierarchy); `sim/` carries the faithful per-access model.  Shared by
+    the training-loop executor and the paged serving pool so the two
+    paths charge identical emulated metadata traffic.
+    """
+    # 8B VN per block + 8-ary tree nodes (64B each) above them.
+    n_nodes = 0
+    level = max(1, n_blocks)
+    while level > 1:
+        level = (level + 7) // 8
+        n_nodes += level
+    vn_table = jnp.zeros((max(1, n_blocks), 2), jnp.uint32)
+    tree_nodes = jnp.zeros((max(1, n_nodes), 16), jnp.uint32)
+    probe = (jnp.sum(vn_table) + jnp.sum(tree_nodes)).astype(jnp.uint32)
+    return probe == jnp.uint32(0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,20 +146,6 @@ class SecureExecutor:
     # -- SGX integrity-tree emulation ----------------------------------------
 
     def _emulated_tree_check(self, state: sm.SecureState) -> jax.Array:
-        """Touch VN-table + tree-node bytes so HLO traffic matches SGX.
-
-        The check itself is a tautology (we model traffic, not a second
-        MAC hierarchy); `sim/` carries the faithful per-access model.
-        """
         total_blocks = sum(ct.shape[0] // self.cfg.block_bytes
                            for ct in state.ciphertexts)
-        # 8B VN per block + 8-ary tree nodes (64B each) above them.
-        n_nodes = 0
-        level = max(1, total_blocks)
-        while level > 1:
-            level = (level + 7) // 8
-            n_nodes += level
-        vn_table = jnp.zeros((max(1, total_blocks), 2), jnp.uint32)
-        tree_nodes = jnp.zeros((max(1, n_nodes), 16), jnp.uint32)
-        probe = (jnp.sum(vn_table) + jnp.sum(tree_nodes)).astype(jnp.uint32)
-        return probe == 0
+        return emulated_tree_probe(total_blocks)

@@ -20,7 +20,7 @@ from enum import IntEnum
 
 import jax.numpy as jnp
 
-__all__ = ["Role", "vn_for", "vn_words"]
+__all__ = ["Role", "vn_for", "vn_words", "kv_page_vn"]
 
 
 class Role(IntEnum):
@@ -51,3 +51,17 @@ def vn_words(role: Role | int, *, layer_id=0, step=0, slot=0):
     """(vn_hi, vn_lo) uint32 pair for counter construction."""
     lo = vn_for(role, layer_id=layer_id, step=step, slot=slot)
     return jnp.zeros_like(lo), lo
+
+
+def kv_page_vn(write_epoch) -> jnp.ndarray:
+    """VN for a KV-cache page: KVCACHE role tag | 29-bit write epoch.
+
+    The serving engine's page pool bumps one global write epoch per
+    protected write event (prefill or batched decode step), so the
+    12-bit ``step`` field of :func:`vn_for` would wrap within a long
+    decode.  Pages at different pool addresses share an epoch — CTR
+    uniqueness comes from the (PA, VN) pair, and PA distinguishes them.
+    """
+    tag = jnp.uint32(int(Role.KVCACHE)) << jnp.uint32(29)
+    return tag | (jnp.asarray(write_epoch, jnp.uint32)
+                  & jnp.uint32((1 << 29) - 1))

@@ -12,9 +12,8 @@ Optionally each batch is authenticated at ingest with the SeDA MAC
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional
+from typing import Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

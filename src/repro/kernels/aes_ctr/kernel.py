@@ -28,7 +28,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.aes import _RCON_NP, _SBOX_NP, _SHIFT_ROWS_PERM_NP  # noqa: F401

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import aes, ctr
+from repro.core import ctr
 
 __all__ = ["aes_ctr_keystream_ref"]
 

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import mac
 from repro.core.bytesutil import bytes_to_u32, u32_to_bytes

@@ -77,7 +77,11 @@ def _split_computations(text: str) -> dict:
 
 
 _DEF = re.compile(r"^%?([\w.\-]+)\s*=")
-_DOT_OPERANDS = re.compile(r"\bdot\(\s*%?([\w.\-]+)")
+# Newer XLA prints typed operands — `dot(f32[16,16]{1,0} %arg, ...)` —
+# so the lhs shape may be inline (group 1); otherwise fall back to the
+# operand name (group 2) via the symbol table.
+_DOT_OPERANDS = re.compile(
+    r"\bdot\(\s*(?:[a-z0-9]+\[([0-9,]*)\](?:\{[0-9,]*\})?\s+)?%?([\w.\-]+)")
 
 
 def _symbol_table(lines: list) -> dict:
@@ -117,7 +121,10 @@ def _dot_flops_of_line(line: str, symtab: dict) -> float:
     cm = _CONTRACT.search(line)
     om = _DOT_OPERANDS.search(line)
     if cm and om:
-        lhs = symtab.get(om.group(1))
+        if om.group(1) is not None:
+            lhs = [int(x) for x in om.group(1).split(",") if x]
+        else:
+            lhs = symtab.get(om.group(2))
         if lhs:
             for i in (int(x) for x in cm.group(1).split(",") if x):
                 if i < len(lhs):

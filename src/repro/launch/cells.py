@@ -8,7 +8,7 @@ launch/dryrun.py and launch/roofline.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import OPT_DTYPE_OVERRIDES, SHAPES, get_arch
 from repro.configs.base import ArchDef, Shape
 from repro.launch import sharding as shp
-from repro.launch.mesh import dp_axes, mesh_axis_size
 from repro.models import encdec as ed
 from repro.models import lm as lm_mod
 from repro.models.layers import shape_structs

@@ -26,7 +26,7 @@ import traceback  # noqa: E402
 
 import jax        # noqa: E402
 
-from repro.configs import ARCHS, SHAPES, get_arch           # noqa: E402
+from repro.configs import SHAPES, get_arch             # noqa: E402
 from repro.launch.analysis import analyze_hlo               # noqa: E402
 from repro.launch.cells import build_cell                   # noqa: E402
 from repro.launch.hlo_utils import collective_bytes         # noqa: E402

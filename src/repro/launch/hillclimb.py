@@ -16,7 +16,7 @@ import dataclasses  # noqa: E402
 import json         # noqa: E402
 import time         # noqa: E402
 
-from repro.configs import SHAPES, get_arch                 # noqa: E402
+from repro.configs import get_arch                     # noqa: E402
 from repro.launch.analysis import analyze_hlo              # noqa: E402
 from repro.launch.cells import build_cell                  # noqa: E402
 from repro.launch.mesh import make_production_mesh         # noqa: E402

@@ -30,7 +30,6 @@ import math
 import os
 
 from repro.configs import SHAPES, get_arch
-from repro.launch.mesh import make_production_mesh  # noqa: F401 (doc link)
 from repro.models import encdec as ed
 from repro.models import lm as lm_mod
 from repro.models.layers import ParamSpec

@@ -6,6 +6,14 @@
 Weights restore ONLY if their layer MACs verify (tampered checkpoints
 are refused); the deferred model-MAC check runs after the generation
 loop (paper Table I semantics).
+
+``--engine paged`` serves through the continuous-batching secure
+engine instead: the KV cache lives as a paged, MAC-protected pool
+(page size = the scheme's optBlk granularity multiple), decode steps
+verify only touched pages and re-MAC only dirty ones::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch minitron-4b \
+        --smoke --engine paged --scheme seda --batch 8 --gen-len 16
 """
 
 from __future__ import annotations
@@ -21,7 +29,6 @@ import numpy as np
 from repro.checkpoint.secure_ckpt import latest_step, load_checkpoint
 from repro.configs import get_arch
 from repro.core.secure_memory import SecureKeys
-from repro.models import encdec as ed
 from repro.models import lm as lm_mod
 from repro.models.layers import init_params, shape_structs
 from repro.serve.serve_step import (greedy_sample, make_decode_step,
@@ -37,6 +44,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--engine", choices=("simple", "paged"), default="simple")
+    ap.add_argument("--scheme", default="seda",
+                    help="protection scheme for --engine paged")
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--pages-per-slot", type=int, default=0,
+                    help="0 = sized from prompt+gen length")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="0 = batch * pages_per_slot")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
@@ -54,6 +69,9 @@ def main(argv=None) -> dict:
     else:
         params = init_params(specs, jax.random.PRNGKey(args.seed))
         print("[serve] no checkpoint: serving fresh init")
+
+    if args.engine == "paged":
+        return _serve_paged(arch, cfg, params, args)
 
     max_len = args.prompt_len + args.gen_len
     prefill = jax.jit(make_prefill_step(arch, cfg, max_len))
@@ -77,6 +95,35 @@ def main(argv=None) -> dict:
     print(f"[serve] {args.gen_len} tokens x {args.batch} requests "
           f"({rate:.1f} tok/s)")
     return {"tokens": np.asarray(toks), "tok_per_s": rate}
+
+
+def _serve_paged(arch, cfg, params, args) -> dict:
+    """Continuous-batching path: paged, MAC-protected KV pool."""
+    from repro.serve.engine import SecureServingEngine
+
+    pages_per_slot = args.pages_per_slot or -(
+        -(args.prompt_len + args.gen_len) // args.page_tokens)
+    n_pages = args.n_pages or args.batch * pages_per_slot
+    eng = SecureServingEngine(
+        arch, cfg, params, scheme=args.scheme, max_slots=args.batch,
+        page_tokens=args.page_tokens, pages_per_slot=pages_per_slot,
+        n_pages=n_pages, keys=SecureKeys.derive(args.seed))
+    rng = np.random.default_rng(args.seed)
+    rids = []
+    for _ in range(args.batch):
+        prompt = list(map(int, rng.integers(1, cfg.vocab, args.prompt_len)))
+        rids.append(eng.submit(prompt, max_new_tokens=args.gen_len))
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    n_tokens = sum(len(done[r].generated) for r in rids)
+    rate = n_tokens / max(dt, 1e-9)
+    print(f"[serve] paged/{args.scheme}: {n_tokens} tokens over "
+          f"{args.batch} requests ({rate:.1f} tok/s incl. compile), "
+          f"{eng.stats['preemptions']} preemptions, "
+          f"deferred pool MAC {'OK' if eng.deferred_check() else 'FAIL'}")
+    toks = np.asarray([done[r].generated for r in rids], np.int32)
+    return {"tokens": toks, "tok_per_s": rate, "stats": eng.stats}
 
 
 if __name__ == "__main__":

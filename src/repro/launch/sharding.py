@@ -21,7 +21,6 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import dp_axes, mesh_axis_size

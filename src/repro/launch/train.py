@@ -23,14 +23,13 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.secure_ckpt import (latest_step, load_checkpoint,
                                           save_checkpoint)
 from repro.configs import OPT_DTYPE_OVERRIDES, get_arch
 from repro.core import SecureExecutor
 from repro.core.secure_memory import SecureKeys
-from repro.data.pipeline import DataConfig, SyntheticLM, make_batch
+from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import encdec as ed
 from repro.models import lm as lm_mod
 from repro.models.layers import init_params

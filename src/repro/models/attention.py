@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.models.layers import rope, spec
 
 __all__ = ["attention_specs", "attention", "decode_attention", "KVCache",
-           "init_kv_cache_specs"]
+           "init_kv_cache_specs", "decode_lengths", "scatter_new_token"]
 
 NEG_INF = -1e30
 
@@ -144,22 +144,51 @@ def attention(params, x, positions, *, q_block: int = 512,
     return out
 
 
+def decode_lengths(length: jax.Array, batch: int):
+    """Normalize a decode cache length to per-sequence form.
+
+    ``length`` may be a scalar (all sequences aligned, the classic
+    serve path) or a (B,) vector (continuous batching: each slot
+    decodes at its own position).  Returns ``(per_seq, lengths)`` with
+    ``lengths`` always (B,) int32.
+    """
+    per_seq = length.ndim == 1
+    lengths = length if per_seq else jnp.broadcast_to(length[None], (batch,))
+    return per_seq, lengths.astype(jnp.int32)
+
+
+def scatter_new_token(cache_arr, new, length, lengths, per_seq: bool):
+    """Write a (B, 1, ...) new-token slice at each sequence's position.
+
+    Per-sequence lengths use a one-hot masked write; the scalar path
+    keeps the cheaper dynamic_update_slice.
+    """
+    if per_seq:
+        l_max = cache_arr.shape[1]
+        hit = (jnp.arange(l_max, dtype=jnp.int32)[None, :]
+               == lengths[:, None])                    # (B, L)
+        hit = hit.reshape(hit.shape + (1,) * (cache_arr.ndim - 2))
+        return jnp.where(hit, new.astype(cache_arr.dtype), cache_arr)
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache_arr, new.astype(cache_arr.dtype), length, axis=1)
+
+
 def decode_attention(params, x, cache: KVCache, *, kv_shard_axis=None):
     """Single-token decode.  x: (B, 1, d); returns (out, new_cache).
 
     The new token's K/V are written at ``cache.length``; attention runs
-    over the full cache with positions >= length masked out.
+    over the full cache with positions >= length masked out.  See
+    :func:`decode_lengths` for the scalar vs (B,) length forms.
     """
     b, one, d = x.shape
     assert one == 1
-    pos = cache.length[None].astype(jnp.int32)  # current position
-    positions = jnp.broadcast_to(pos, (b, 1))
+    per_seq, lengths = decode_lengths(cache.length, b)
+    positions = lengths[:, None]                       # (B, 1)
     q, k_new, v_new = _qkv(params, x, positions)
 
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k_new.astype(cache.k.dtype), cache.length, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v_new.astype(cache.v.dtype), cache.length, axis=1)
+    l_max = cache.k.shape[1]
+    k = scatter_new_token(cache.k, k_new, cache.length, lengths, per_seq)
+    v = scatter_new_token(cache.v, v_new, cache.length, lengths, per_seq)
 
     h = q.shape[2]
     hkv = k.shape[2]
@@ -167,8 +196,8 @@ def decode_attention(params, x, cache: KVCache, *, kv_shard_axis=None):
     scale = 1.0 / math.sqrt(q.shape[-1])
     qg = (q.astype(jnp.float32) * scale).reshape(b, 1, hkv, groups, -1)
     logits = jnp.einsum("bqhgd,blhd->bhgql", qg, k.astype(jnp.float32))
-    l_max = k.shape[1]
-    mask = jnp.arange(l_max)[None, None, None, None, :] <= cache.length
+    mask = (jnp.arange(l_max)[None, None, None, None, :]
+            <= lengths[:, None, None, None, None])
     logits = jnp.where(mask, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     ctx = jnp.einsum("bhgql,blhd->bqhgd", p, v.astype(jnp.float32))

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 from typing import Any, NamedTuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn_mod

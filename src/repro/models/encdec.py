@@ -16,7 +16,6 @@ import jax.numpy as jnp
 
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
-from repro.models.attention import KVCache, _chunked_causal_attention
 from repro.models.layers import ParamSpec, rms_norm, rope, spec
 from repro.models.partitioning import constrain
 

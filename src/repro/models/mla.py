@@ -109,23 +109,30 @@ def mla_attention(cfg: MLAConfig, params, x, positions, *,
 
 
 def mla_decode(cfg: MLAConfig, params, x, cache: MLACache):
-    """Single-token decode with the compressed cache.  x: (B, 1, d)."""
+    """Single-token decode with the compressed cache.  x: (B, 1, d).
+
+    ``cache.length`` may be a scalar or (B,) for continuous batching
+    (see :func:`repro.models.attention.decode_lengths`).
+    """
+    from repro.models.attention import decode_lengths, scatter_new_token
     b = x.shape[0]
-    positions = jnp.broadcast_to(cache.length[None].astype(jnp.int32), (b, 1))
+    per_seq, lengths = decode_lengths(cache.length, b)
+    positions = lengths[:, None]                              # (B, 1)
     q = _project_q(cfg, params, x, positions)                 # (B,1,H,dn+dr)
     c_new, kpe_new = _project_kv_latent(cfg, params, x, positions)
 
-    c_kv = jax.lax.dynamic_update_slice_in_dim(
-        cache.c_kv, c_new.astype(cache.c_kv.dtype), cache.length, axis=1)
-    k_pe = jax.lax.dynamic_update_slice_in_dim(
-        cache.k_pe, kpe_new.astype(cache.k_pe.dtype), cache.length, axis=1)
+    l_max = cache.c_kv.shape[1]
+    c_kv = scatter_new_token(cache.c_kv, c_new, cache.length, lengths,
+                             per_seq)
+    k_pe = scatter_new_token(cache.k_pe, kpe_new, cache.length, lengths,
+                             per_seq)
 
     k, v = _expand_kv(cfg, params, c_kv, k_pe)                # (B,L,H,*)
     scale = 1.0 / math.sqrt(q.shape[-1])
     logits = jnp.einsum("bqhk,blhk->bhql", q.astype(jnp.float32) * scale,
                         k.astype(jnp.float32))
-    l_max = k.shape[1]
-    mask = jnp.arange(l_max)[None, None, None, :] <= cache.length
+    mask = (jnp.arange(l_max)[None, None, None, :]
+            <= lengths[:, None, None, None])
     logits = jnp.where(mask, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     ctx = jnp.einsum("bhql,blhd->bqhd", p, v.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,420 @@
+"""Continuous-batching secure serving engine over the paged KV pool.
+
+The engine multiplexes many requests over ``max_slots`` decode lanes
+and a shared pool of MAC-protected KV pages (:mod:`repro.serve.kv_pages`):
+
+* **admission** — waiting requests are prefetched into a free slot when
+  the pool has pages for their prompt; prefill runs per request and the
+  resulting cache pages are encrypted + MACed into the pool;
+* **decode** — one jitted computation per tick batches every running
+  slot: gather pages -> decrypt -> verify touched pages -> attend/append
+  -> re-encrypt + re-MAC only the dirty page per slot.  All schemes from
+  :data:`repro.core.secure_exec.SCHEMES` run through the same step;
+* **growth / eviction** — slots allocate pages on demand as decodes
+  lengthen; under a full pool the youngest running request is preempted
+  (pages freed, request requeued, KV recomputed on re-admission), so
+  long-running decodes never deadlock the pool;
+* **deferred verification** — the pool-level MAC (the model-MAC level
+  of :mod:`repro.core.multilevel`) is checked off the critical path,
+  every ``defer_interval`` ticks, amortizing it across the batch.
+
+Host-side scheduling state (free list, queues, lengths) is plain
+Python; everything that touches tensor data stays inside jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import multilevel
+from repro.core import secure_memory as sm
+from repro.core import vn as vn_mod
+from repro.core.secure_exec import SCHEMES
+from repro.models import lm as lm_mod
+from repro.serve import kv_pages as kvp
+from repro.serve.serve_step import greedy_sample
+
+__all__ = ["IntegrityError", "Request", "SecureServingEngine"]
+
+
+class IntegrityError(RuntimeError):
+    """A MAC gate (page/block) or the deferred pool MAC failed."""
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    state: str = "waiting"          # waiting | running | finished
+    n_evictions: int = 0
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    length: int                     # KV tokens resident (host mirror)
+    pages: list                     # owned pool page ids, in token order
+    admit_seq: int
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class SecureServingEngine:
+    """Batched secure decoding with paged, MAC-protected KV residency.
+
+    Typical use::
+
+        eng = SecureServingEngine(arch, cfg, params, scheme="seda",
+                                  max_slots=4, page_tokens=8,
+                                  pages_per_slot=4, n_pages=12)
+        rids = [eng.submit(prompt, max_new_tokens=8) for prompt in prompts]
+        done = eng.run()            # {rid: Request}
+    """
+
+    def __init__(self, arch, cfg, params, *, scheme: str = "seda",
+                 max_slots: int = 4, page_tokens: int = 8,
+                 pages_per_slot: int = 8, n_pages: Optional[int] = None,
+                 keys: Optional[sm.SecureKeys] = None,
+                 use_kernel: bool = False, defer_interval: int = 16,
+                 eos_id: Optional[int] = None,
+                 verify_every_step: bool = True):
+        if arch.kind != "lm":
+            raise ValueError("the paged serving engine supports decoder-only "
+                             "LMs (enc-dec serving stays on serve_step)")
+        if scheme not in SCHEMES:
+            raise KeyError(f"unknown scheme {scheme!r}")
+        self.arch, self.cfg, self.params = arch, cfg, params
+        self.scheme = scheme
+        self.max_slots = max_slots
+        self.page_tokens = page_tokens
+        self.pages_per_slot = pages_per_slot
+        self.max_len = page_tokens * pages_per_slot
+        if n_pages is None:
+            n_pages = max_slots * pages_per_slot
+        self.n_pages = n_pages
+        self.keys = keys if keys is not None else sm.SecureKeys.derive(0)
+        self.defer_interval = defer_interval
+        self.eos_id = eos_id
+        self.verify_every_step = verify_every_step
+
+        cache_tree = lm_mod.cache_specs(cfg, max_slots, self.max_len)
+        flat, self.treedef = jax.tree_util.tree_flatten(cache_tree)
+        paged = kvp.paged_flags(cache_tree)
+        lengths = kvp.length_flags(cache_tree)
+        self.paged_idx = [i for i, f in enumerate(paged) if f]
+        self.len_leaves = [(i, flat[i].shape[0])
+                           for i, f in enumerate(lengths) if f]
+        self.onchip_idx = [i for i in range(len(flat))
+                           if not paged[i] and not lengths[i]]
+        self.n_leaves = len(flat)
+        self.spec = kvp.build_page_spec(
+            cache_tree, scheme=scheme, page_tokens=page_tokens,
+            n_pages=n_pages, max_slots=max_slots, max_len=self.max_len,
+            use_kernel=use_kernel)
+        self.policy = (multilevel.SEDA_DEFAULT
+                       if SCHEMES[scheme].verify == "layer"
+                       else multilevel.SGX_LIKE if SCHEMES[scheme].emulate_tree
+                       else multilevel.MGX_LIKE)
+
+        # Device state.
+        self.pool = kvp.init_pool(self.spec)
+        self.onchip = [jnp.zeros(flat[i].shape, flat[i].dtype)
+                       for i in self.onchip_idx]
+        self._ok_accum = jnp.asarray(True)
+
+        # Host scheduling state.
+        self.waiting: deque = deque()
+        self.slots: list = [None] * max_slots
+        self.free_pages: list = list(range(n_pages))
+        self.requests: dict = {}
+        self._next_rid = 0
+        self._admit_seq = 0
+        self._epoch = 0
+        self.tick = 0
+        self.stats = {"admitted": 0, "preemptions": 0, "decode_steps": 0,
+                      "deferred_checks": 0}
+
+        self._decode_fn = jax.jit(self._build_decode_fn())
+        self._prefill_fn = jax.jit(self._build_prefill_fn())
+        self._writers: dict = {}
+
+    # -- traced builders ----------------------------------------------------
+
+    def _merge_cache_leaves(self, dense, onchip, lengths):
+        leaves = [None] * self.n_leaves
+        for j, idx in enumerate(self.paged_idx):
+            leaves[idx] = dense[j]
+        for idx, steps in self.len_leaves:
+            leaves[idx] = jnp.broadcast_to(lengths[None, :],
+                                           (steps, self.max_slots))
+        for j, idx in enumerate(self.onchip_idx):
+            leaves[idx] = onchip[j]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def _build_decode_fn(self):
+        cfg, spec, keys = self.cfg, self.spec, self.keys
+
+        def decode_fn(params, pool, onchip, page_table, lengths, active,
+                      tokens, epoch):
+            dense, ok = kvp.read_pages(pool, spec, keys, page_table, lengths)
+            caches = self._merge_cache_leaves(dense, onchip, lengths)
+            logits, new_caches = lm_mod.lm_decode(cfg, params, tokens, caches)
+            tok = greedy_sample(logits)                    # (S, 1)
+            new_leaves = jax.tree_util.tree_leaves(new_caches)
+            vn = vn_mod.kv_page_vn(epoch)
+            new_pool = kvp.write_dirty(
+                pool, spec, keys, page_table,
+                [new_leaves[i] for i in self.paged_idx], lengths, active, vn)
+            new_onchip = []
+            for j, idx in enumerate(self.onchip_idx):
+                leaf = new_leaves[idx]
+                keep = active.reshape((1, self.max_slots)
+                                      + (1,) * (leaf.ndim - 2))
+                new_onchip.append(jnp.where(keep, leaf, onchip[j]))
+            return new_pool, new_onchip, tok, ok
+
+        return decode_fn
+
+    def _build_prefill_fn(self):
+        cfg, max_len = self.cfg, self.max_len
+
+        def prefill_fn(params, tokens):                    # tokens: (1, Lp)
+            logits, caches = lm_mod.lm_prefill(cfg, params,
+                                               {"tokens": tokens}, max_len)
+            leaves = jax.tree_util.tree_leaves(caches)
+            return (greedy_sample(logits),
+                    [leaves[i] for i in self.paged_idx],
+                    [leaves[i] for i in self.onchip_idx])
+
+        return prefill_fn
+
+    def _writer(self, n_write_pages: int):
+        if n_write_pages not in self._writers:
+            spec, keys = self.spec, self.keys
+
+            def write(pool, page_ids, paged_leaves, epoch):
+                vn = vn_mod.kv_page_vn(epoch)
+                return kvp.write_prefill(pool, spec, keys, page_ids,
+                                         paged_leaves, n_write_pages, vn)
+
+            self._writers[n_write_pages] = jax.jit(write)
+        return self._writers[n_write_pages]
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        prompt = [int(t) for t in prompt]
+        if not prompt or max_new_tokens < 1:
+            raise ValueError("need a non-empty prompt and max_new_tokens>=1")
+        total = len(prompt) + max_new_tokens
+        if total > self.max_len:
+            raise ValueError(f"prompt+max_new_tokens={total} exceeds "
+                             f"max_len={self.max_len}")
+        worst_pages = _ceil_div(total, self.page_tokens)
+        if worst_pages > min(self.pages_per_slot, self.n_pages):
+            raise ValueError(f"request needs up to {worst_pages} pages; pool "
+                             f"has {self.n_pages} (per-slot cap "
+                             f"{self.pages_per_slot})")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, prompt, max_new_tokens)
+        self.requests[rid] = req
+        self.waiting.append(req)
+        return rid
+
+    def step(self) -> list:
+        """One scheduler tick: admit, grow/evict, batched decode.
+
+        Returns the requests that finished during this tick.
+        """
+        self.tick += 1
+        finished: list = []
+        self._admit(finished)
+        self._ensure_growth()
+        active_idx = [i for i, s in enumerate(self.slots) if s is not None]
+        if active_idx:
+            self._decode(active_idx, finished)
+        if (self.policy.deferred_model_mac and self.defer_interval
+                and self.tick % self.defer_interval == 0):
+            self._deferred_check()
+        return finished
+
+    def run(self, max_ticks: int = 100_000) -> dict:
+        """Drive ticks until every submitted request finished."""
+        for _ in range(max_ticks):
+            if not self.waiting and all(s is None for s in self.slots):
+                break
+            self.step()
+        else:
+            raise RuntimeError("run() exceeded max_ticks")
+        if self.policy.deferred_model_mac:
+            self._deferred_check()
+        if not self.verify_every_step and not bool(self._ok_accum):
+            raise IntegrityError("accumulated page-MAC verification failed")
+        return {rid: r for rid, r in self.requests.items()
+                if r.state == "finished"}
+
+    def deferred_check(self) -> bool:
+        """Model-level deferred MAC over the whole pool (paper Table I)."""
+        return bool(kvp.deferred_pool_check(self.pool, self.spec))
+
+    def decode_cost_analysis(self) -> dict:
+        """XLA cost analysis of the jitted batched decode step.
+
+        ``bytes accessed`` makes the protection traffic HLO-visible:
+        the delta vs. the ``off`` scheme is the metadata + crypto
+        traffic a scheme adds to one batched decode.
+        """
+        args = (
+            self.params, self.pool, self.onchip,
+            jnp.zeros((self.max_slots, self.pages_per_slot), jnp.int32),
+            jnp.ones((self.max_slots,), jnp.int32),
+            jnp.ones((self.max_slots,), bool),
+            jnp.zeros((self.max_slots, 1), jnp.int32),
+            jnp.uint32(1),
+        )
+        try:
+            cost = self._decode_fn.lower(*args).compile().cost_analysis()
+        except Exception:  # noqa: BLE001 - backend-dependent availability
+            return {}
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        return dict(cost or {})
+
+    @property
+    def n_free_pages(self) -> int:
+        return len(self.free_pages)
+
+    # -- scheduler internals ------------------------------------------------
+
+    def _next_epoch(self) -> jnp.ndarray:
+        self._epoch += 1
+        return jnp.uint32(self._epoch)
+
+    def _admit(self, finished: list) -> None:
+        while self.waiting and None in self.slots:
+            req = self.waiting[0]
+            seq = req.prompt + req.generated
+            # +1 so the first decode's write position is always covered.
+            n_alloc = min(len(seq) // self.page_tokens + 1,
+                          self.pages_per_slot)
+            if len(self.free_pages) < n_alloc:
+                break
+            self.waiting.popleft()
+            slot_idx = self.slots.index(None)
+            pages = [self.free_pages.pop() for _ in range(n_alloc)]
+            tok, paged_leaves, onchip_leaves = self._prefill_fn(
+                self.params, jnp.asarray([seq], jnp.int32))
+            n_write = _ceil_div(len(seq), self.page_tokens)
+            page_ids = np.full((self.pages_per_slot,),
+                               self.spec.scratch_page, np.int32)
+            page_ids[: len(pages)] = pages
+            self.pool = self._writer(n_write)(
+                self.pool, jnp.asarray(page_ids), paged_leaves,
+                self._next_epoch())
+            for j, idx in enumerate(self.onchip_idx):
+                self.onchip[j] = self.onchip[j].at[:, slot_idx].set(
+                    onchip_leaves[j][:, 0])
+            self._admit_seq += 1
+            self.stats["admitted"] += 1
+            slot = _Slot(req, length=len(seq), pages=pages,
+                         admit_seq=self._admit_seq)
+            self.slots[slot_idx] = slot
+            req.state = "running"
+            req.generated.append(int(tok[0, 0]))
+            self._maybe_finish(slot_idx, finished)
+
+    def _ensure_growth(self) -> None:
+        order = sorted((i for i, s in enumerate(self.slots) if s is not None),
+                       key=lambda i: self.slots[i].admit_seq)
+        for i in order:
+            slot = self.slots[i]
+            if slot is None:                      # evicted by an older slot
+                continue
+            need = slot.length // self.page_tokens
+            while self.slots[i] is not None and len(slot.pages) <= need:
+                if self.free_pages:
+                    slot.pages.append(self.free_pages.pop())
+                    continue
+                self._preempt(self._pick_victim())
+
+    def _pick_victim(self) -> int:
+        """Globally youngest running slot (LIFO preemption, vLLM-style);
+        may be the slot whose growth triggered the eviction."""
+        candidates = [i for i, s in enumerate(self.slots) if s is not None]
+        return max(candidates, key=lambda i: self.slots[i].admit_seq)
+
+    def _preempt(self, idx: int) -> None:
+        slot = self.slots[idx]
+        self.free_pages.extend(slot.pages)
+        self.slots[idx] = None
+        slot.req.state = "waiting"
+        slot.req.n_evictions += 1
+        self.stats["preemptions"] += 1
+        self.waiting.appendleft(slot.req)         # preempted go to the front
+
+    def _release(self, idx: int) -> None:
+        slot = self.slots[idx]
+        self.free_pages.extend(slot.pages)
+        self.slots[idx] = None
+        slot.req.state = "finished"
+
+    def _maybe_finish(self, idx: int, finished: list) -> None:
+        slot = self.slots[idx]
+        req = slot.req
+        hit_eos = (self.eos_id is not None and req.generated
+                   and req.generated[-1] == self.eos_id)
+        if req.done or hit_eos:
+            self._release(idx)
+            finished.append(req)
+
+    def _decode(self, active_idx: list, finished: list) -> None:
+        page_table = np.full((self.max_slots, self.pages_per_slot), -1,
+                             np.int32)
+        lengths = np.zeros((self.max_slots,), np.int32)
+        active = np.zeros((self.max_slots,), bool)
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        for i in active_idx:
+            slot = self.slots[i]
+            page_table[i, : len(slot.pages)] = slot.pages
+            lengths[i] = slot.length
+            active[i] = True
+            tokens[i, 0] = slot.req.generated[-1]
+        self.pool, self.onchip, toks, ok = self._decode_fn(
+            self.params, self.pool, self.onchip, jnp.asarray(page_table),
+            jnp.asarray(lengths), jnp.asarray(active), jnp.asarray(tokens),
+            self._next_epoch())
+        self.stats["decode_steps"] += 1
+        if self.verify_every_step:
+            if not bool(ok):
+                raise IntegrityError(
+                    f"page MAC verification failed at tick {self.tick} "
+                    f"(scheme={self.scheme})")
+        else:
+            self._ok_accum = self._ok_accum & ok
+        toks = np.asarray(toks)
+        for i in active_idx:
+            slot = self.slots[i]
+            slot.length += 1
+            slot.req.generated.append(int(toks[i, 0]))
+            self._maybe_finish(i, finished)
+
+    def _deferred_check(self) -> None:
+        self.stats["deferred_checks"] += 1
+        if not self.deferred_check():
+            raise IntegrityError("deferred pool-level MAC check failed "
+                                 f"(tick {self.tick}, scheme={self.scheme})")

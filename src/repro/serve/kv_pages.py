@@ -1,0 +1,523 @@
+"""Paged, MAC-protected KV-cache pool for batched secure serving.
+
+The serving-side boundary in SeDA is the KV/latent cache: during long
+decodes it is the tensor that lives in untrusted memory.  This module
+co-designs the serving memory layout with the protection machinery:
+
+* the cache is a pool of fixed-size **pages** (``page_tokens`` tokens
+  per page, per sequence, spanning all layers);
+* each page's per-layer payload is padded to the scheme's optBlk
+  granularity (``block_bytes`` from :mod:`repro.core.secure_exec`), so
+  a page is always a whole number of protection blocks — the page is
+  the unit of ownership AND of MAC bookkeeping;
+* each page carries a MAC (XOR aggregate of its optBlk MACs, per
+  :mod:`repro.core.mac`) and a VN (:func:`repro.core.vn.kv_page_vn`);
+* reads verify only the pages a decode step touches; writes re-MAC
+  only dirty pages; a pool-level deferred MAC (the model-MAC level of
+  :mod:`repro.core.multilevel`) is maintained incrementally and checked
+  off the critical path.
+
+Trust model (matches the paper's Table III assignments): ciphertext
+pages (and, for the block-gated SGX/MGX schemes, their per-block MAC
+tables) are untrusted; page MACs and VNs model on-chip SRAM metadata
+for MGX/SeDA (SGX's off-chip VN table and integrity tree are charged as
+emulated traffic, as in :mod:`repro.core.secure_exec`).  Replaying an
+old page ciphertext therefore fails verification: the on-chip VN has
+moved on and the MAC binding (PA, VN, layer, fmap, blk) no longer
+matches.
+
+Everything here is pure and jit-compatible; the serving engine traces
+``read_pages`` + model decode + ``write_dirty`` as ONE jitted
+computation.  On the B-AES/NH schemes with narrow blocks the read path
+can run through the fused Pallas decrypt+hash kernel
+(:func:`repro.kernels.fused_crypt_mac.ops.secure_read_kernel`) and the
+write path through the ``otp_xor``-based
+:func:`repro.kernels.otp_xor.ops.baes_encrypt_kernel`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baes, ctr, mac
+from repro.core.layout import SEGMENT_BYTES
+from repro.core.secure_exec import SCHEMES, SchemeConfig, emulated_tree_probe
+
+__all__ = [
+    "LeafPageSpec",
+    "PageSpec",
+    "PagedKVPool",
+    "PAGED_FIELDS",
+    "paged_flags",
+    "length_flags",
+    "build_page_spec",
+    "init_pool",
+    "read_pages",
+    "write_pages",
+    "write_prefill",
+    "write_dirty",
+    "deferred_pool_check",
+]
+
+# Cache NamedTuple fields whose leaves have a (steps, B, max_len, ...)
+# sequence layout and cross the untrusted boundary.  Everything else
+# (lengths, Mamba SSM/conv state) is small per-sequence register state
+# that stays on-chip.
+PAGED_FIELDS = frozenset({"k", "v", "c_kv", "k_pe"})
+
+
+class LeafPageSpec(NamedTuple):
+    """Static page layout for one paged cache leaf (hashable)."""
+
+    leaf_idx: int        # index in the flat cache-leaf list
+    steps: int           # layer-stack dim of the scanned segment
+    base_layer: int      # global layer id of stack index 0 (MAC binding)
+    rest: tuple          # per-token trailing dims, e.g. (n_kv, head_dim)
+    dtype: str
+    tok_bytes: int       # bytes per token per layer
+    lp_bytes: int        # per-layer page payload, padded to block_bytes
+    page_bytes: int      # steps * lp_bytes
+    n_blocks: int        # optBlks per page = page_bytes // block_bytes
+    pa_base: int         # pool base address in 16B-segment units
+
+
+class PageSpec(NamedTuple):
+    """Static description of the whole paged pool (hashable jit arg)."""
+
+    leaves: tuple        # tuple[LeafPageSpec, ...]
+    page_tokens: int
+    pages_per_slot: int
+    n_pages: int         # real pages; arrays carry one extra scratch row
+    max_slots: int
+    max_len: int         # page_tokens * pages_per_slot
+    scheme: str          # key into core.secure_exec.SCHEMES
+    use_kernel: bool     # route crypto through the Pallas kernels
+
+    @property
+    def cfg(self) -> SchemeConfig:
+        return SCHEMES[self.scheme]
+
+    @property
+    def scratch_page(self) -> int:
+        """Write sink for inactive slots / unallocated table entries."""
+        return self.n_pages
+
+    @property
+    def blocks_per_read(self) -> int:
+        """optBlks touched by one full gather (tree-traffic emulation)."""
+        return (sum(l.n_blocks for l in self.leaves)
+                * self.max_slots * self.pages_per_slot)
+
+
+class PagedKVPool(NamedTuple):
+    """The cache as it lives across the boundary (+ its metadata)."""
+
+    cts: tuple           # per paged leaf: (n_pages + 1, page_bytes) u8
+    page_macs: jax.Array     # (n_pages + 1, MAC_BYTES) u8
+    block_macs: tuple        # block-gated schemes: per leaf
+    #                          (n_pages + 1, n_blocks, MAC_BYTES) u8; else ()
+    page_vns: jax.Array      # (n_pages + 1,) u32
+    pool_mac: jax.Array      # (MAC_BYTES,) u8 — deferred model-level MAC
+
+
+# ---------------------------------------------------------------------------
+# Structure classification + spec construction.
+# ---------------------------------------------------------------------------
+
+
+def _iter_field_flags(node: Any, wanted: frozenset):
+    """Yield one bool per flat leaf: is it under a ``wanted`` field?"""
+    if hasattr(node, "_fields"):  # cache NamedTuples (KVCache, MLACache, ...)
+        for name in node._fields:
+            sub = getattr(node, name)
+            n_sub = len(jax.tree_util.tree_leaves(sub))
+            hit = name in wanted
+            for _ in range(n_sub):
+                yield hit
+    elif isinstance(node, (list, tuple)):
+        for child in node:
+            yield from _iter_field_flags(child, wanted)
+    elif isinstance(node, dict):
+        for key in sorted(node):
+            yield from _iter_field_flags(node[key], wanted)
+    else:
+        yield False
+
+
+def paged_flags(cache_tree: Any) -> list:
+    """Per-flat-leaf bools: True for leaves that go through the pool."""
+    return list(_iter_field_flags(cache_tree, PAGED_FIELDS))
+
+
+def length_flags(cache_tree: Any) -> list:
+    """Per-flat-leaf bools: True for per-layer ``length`` leaves."""
+    return list(_iter_field_flags(cache_tree, frozenset({"length"})))
+
+
+def build_page_spec(cache_tree: Any, *, scheme: str, page_tokens: int,
+                    n_pages: int, max_slots: int, max_len: int,
+                    use_kernel: bool = False) -> PageSpec:
+    """Lay the paged leaves of a cache pytree out as a protected pool.
+
+    ``cache_tree`` is the ShapeDtypeStruct tree from
+    ``lm.cache_specs(cfg, max_slots, max_len)``.  The page-size /
+    block-granularity invariant: each leaf's per-layer page payload
+    (``page_tokens`` tokens) is padded up to the scheme's optBlk
+    granularity, so page size is always a whole multiple of the SeDA
+    block size and a page never shares a protection block with its
+    neighbour.
+    """
+    if max_len % page_tokens:
+        raise ValueError(f"max_len {max_len} not a multiple of "
+                         f"page_tokens {page_tokens}")
+    cfg = SCHEMES[scheme]
+    flags = paged_flags(cache_tree)
+    leaves = jax.tree_util.tree_leaves(cache_tree)
+    if len(flags) != len(leaves):
+        raise ValueError("flag walk disagrees with tree_leaves order")
+    specs = []
+    cursor = 0          # pool byte cursor across leaves
+    base_layer = 0
+    for idx, (leaf, is_paged) in enumerate(zip(leaves, flags)):
+        if not is_paged:
+            continue
+        steps, bsz, seq = leaf.shape[0], leaf.shape[1], leaf.shape[2]
+        if bsz != max_slots or seq != max_len:
+            raise ValueError(
+                f"paged leaf {idx} has shape {leaf.shape}, expected "
+                f"(steps, {max_slots}, {max_len}, ...)")
+        rest = tuple(int(d) for d in leaf.shape[3:])
+        itemsize = jnp.dtype(leaf.dtype).itemsize
+        tok_bytes = itemsize
+        for d in rest:
+            tok_bytes *= d
+        lp_bytes = (-(-page_tokens * tok_bytes // cfg.block_bytes)
+                    * cfg.block_bytes)
+        page_bytes = steps * lp_bytes
+        specs.append(LeafPageSpec(
+            leaf_idx=idx, steps=steps, base_layer=base_layer, rest=rest,
+            dtype=jnp.dtype(leaf.dtype).name, tok_bytes=tok_bytes,
+            lp_bytes=lp_bytes, page_bytes=page_bytes,
+            n_blocks=page_bytes // cfg.block_bytes,
+            pa_base=cursor // SEGMENT_BYTES))
+        cursor += (n_pages + 1) * page_bytes
+        base_layer += steps
+    if not specs:
+        raise ValueError("cache tree has no paged (KV/latent) leaves — "
+                         "the paged engine needs at least one attention "
+                         "or MLA layer")
+    return PageSpec(tuple(specs), page_tokens, max_len // page_tokens,
+                    n_pages, max_slots, max_len, scheme, use_kernel)
+
+
+def init_pool(spec: PageSpec) -> PagedKVPool:
+    cfg = spec.cfg
+    cts = tuple(jnp.zeros((spec.n_pages + 1, l.page_bytes), jnp.uint8)
+                for l in spec.leaves)
+    block_macs = ()
+    if cfg.verify == "block":
+        block_macs = tuple(
+            jnp.zeros((spec.n_pages + 1, l.n_blocks, mac.MAC_BYTES), jnp.uint8)
+            for l in spec.leaves)
+    return PagedKVPool(
+        cts=cts,
+        page_macs=jnp.zeros((spec.n_pages + 1, mac.MAC_BYTES), jnp.uint8),
+        block_macs=block_macs,
+        page_vns=jnp.zeros((spec.n_pages + 1,), jnp.uint32),
+        pool_mac=jnp.zeros((mac.MAC_BYTES,), jnp.uint8),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-page crypto/MAC primitives (flattened over a batch of pages).
+# ---------------------------------------------------------------------------
+
+
+def _block_pa(spec: PageSpec, leaf: LeafPageSpec,
+              page_ids: jax.Array) -> jax.Array:
+    """(N,) page ids -> (N, n_blocks) u32 optBlk PAs (16B-segment units)."""
+    bb = spec.cfg.block_bytes
+    segs_per_page = leaf.page_bytes // SEGMENT_BYTES
+    blk = jnp.arange(leaf.n_blocks, dtype=jnp.uint32) * (bb // SEGMENT_BYTES)
+    return (jnp.uint32(leaf.pa_base)
+            + page_ids.astype(jnp.uint32)[:, None] * jnp.uint32(segs_per_page)
+            + blk[None, :])
+
+
+def _block_counters(spec: PageSpec, leaf: LeafPageSpec, page_ids: jax.Array,
+                    vns: jax.Array) -> jax.Array:
+    """PA||VN counter words per optBlk: (N * n_blocks, 4) u32."""
+    pa = _block_pa(spec, leaf, page_ids).reshape(-1)
+    vn_col = jnp.repeat(vns.astype(jnp.uint32), leaf.n_blocks)
+    zeros = jnp.zeros_like(pa)
+    return jnp.stack([zeros, pa, zeros, vn_col], axis=-1)
+
+
+def _block_binding(spec: PageSpec, leaf: LeafPageSpec, page_ids: jax.Array,
+                   vns: jax.Array) -> mac.Binding:
+    """MAC binding tuple for every optBlk of N pages (flattened)."""
+    n = page_ids.shape[0]
+    bb = spec.cfg.block_bytes
+    blocks_per_layer = leaf.lp_bytes // bb
+    blk = jnp.arange(leaf.n_blocks, dtype=jnp.uint32)
+    layer = jnp.uint32(leaf.base_layer) + blk // jnp.uint32(blocks_per_layer)
+    pa = _block_pa(spec, leaf, page_ids).reshape(-1)
+    return mac.Binding.make(
+        pa,
+        jnp.repeat(vns.astype(jnp.uint32), leaf.n_blocks),
+        jnp.tile(layer, n),
+        jnp.uint32(leaf.leaf_idx),
+        jnp.tile(blk, n))
+
+
+def _crypt(spec: PageSpec, leaf: LeafPageSpec, buf: jax.Array,
+           page_ids: jax.Array, vns: jax.Array, keys) -> jax.Array:
+    """XOR-crypt (enc == dec) page payloads.  buf: (N, page_bytes) u8."""
+    cfg = spec.cfg
+    if cfg.name == "off":
+        return buf
+    if cfg.baes:
+        counters = _block_counters(spec, leaf, page_ids, vns)
+        narrow = cfg.block_bytes // SEGMENT_BYTES <= 11
+        if spec.use_kernel and narrow:
+            from repro.kernels.otp_xor.ops import baes_encrypt_kernel
+            out = baes_encrypt_kernel(buf.reshape(-1), keys.round_keys,
+                                      counters, block_bytes=cfg.block_bytes)
+        else:
+            out = baes.baes_encrypt(buf.reshape(-1), keys.round_keys, counters,
+                                    block_bytes=cfg.block_bytes, key=keys.key)
+        return out.reshape(buf.shape)
+    # T-AES: one AES invocation per 16B segment, PA advancing per segment.
+    segs_per_page = leaf.page_bytes // SEGMENT_BYTES
+    pa = (jnp.uint32(leaf.pa_base)
+          + page_ids.astype(jnp.uint32)[:, None] * jnp.uint32(segs_per_page)
+          + jnp.arange(segs_per_page, dtype=jnp.uint32)[None, :]).reshape(-1)
+    vn_col = jnp.repeat(vns.astype(jnp.uint32), segs_per_page)
+    zeros = jnp.zeros_like(pa)
+    counters = jnp.stack([zeros, pa, zeros, vn_col], axis=-1)
+    otp = ctr.ctr_keystream(keys.round_keys, counters)
+    return (buf.reshape(-1, SEGMENT_BYTES) ^ otp).reshape(buf.shape)
+
+
+def _page_block_macs(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
+                     page_ids: jax.Array, vns: jax.Array, keys) -> jax.Array:
+    """optBlk MACs of N ciphertext pages: (N, n_blocks, MAC_BYTES) u8."""
+    cfg = spec.cfg
+    binding = _block_binding(spec, leaf, page_ids, vns)
+    blocks = ct.reshape(-1, cfg.block_bytes)
+    macs = mac.block_macs(blocks, binding, hash_key_u32=keys.hash_key,
+                          round_keys=keys.round_keys, engine=cfg.mac_engine)
+    return macs.reshape(page_ids.shape[0], leaf.n_blocks, mac.MAC_BYTES)
+
+
+def _fused_read(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
+                page_ids: jax.Array, vns: jax.Array, keys):
+    """Kernel-fused decrypt + optBlk MACs in one pass over the bytes."""
+    from repro.kernels.fused_crypt_mac.ops import secure_read_kernel
+    cfg = spec.cfg
+    binding = _block_binding(spec, leaf, page_ids, vns)
+    counters = _block_counters(spec, leaf, page_ids, vns)
+    pt, macs = secure_read_kernel(
+        ct.reshape(-1), binding, keys.round_keys, counters, keys.hash_key,
+        block_bytes=cfg.block_bytes)
+    return (pt.reshape(ct.shape),
+            macs.reshape(page_ids.shape[0], leaf.n_blocks, mac.MAC_BYTES))
+
+
+def _kernel_read_ok(spec: PageSpec) -> bool:
+    cfg = spec.cfg
+    return (spec.use_kernel and cfg.baes and cfg.mac_engine == "nh"
+            and cfg.block_bytes // SEGMENT_BYTES <= 11)
+
+
+# ---------------------------------------------------------------------------
+# Dense <-> page byte layout.
+# ---------------------------------------------------------------------------
+
+
+def _pages_to_dense(spec: PageSpec, leaf: LeafPageSpec, pt: jax.Array,
+                    lengths: jax.Array) -> jax.Array:
+    """(S, P, page_bytes) u8 -> (steps, S, max_len, *rest), invalid
+    token positions (>= length) zeroed so masked attention never sees
+    decrypt garbage (and schemes stay token-bit-identical)."""
+    s, p = pt.shape[:2]
+    ptok = spec.page_tokens
+    per_layer = pt.reshape(s, p, leaf.steps, leaf.lp_bytes)
+    payload = per_layer[..., : ptok * leaf.tok_bytes]
+    itemsize = jnp.dtype(leaf.dtype).itemsize
+    elems = leaf.tok_bytes // itemsize
+    grouped = payload.reshape(s, p, leaf.steps, ptok, elems, itemsize)
+    vals = jax.lax.bitcast_convert_type(grouped, jnp.dtype(leaf.dtype))
+    # (S, P, steps, ptok, elems) -> (steps, S, P*ptok, *rest)
+    dense = vals.transpose(2, 0, 1, 3, 4).reshape(
+        (leaf.steps, s, spec.max_len) + leaf.rest)
+    valid = (jnp.arange(spec.max_len, dtype=jnp.int32)[None, :]
+             < lengths[:, None])                       # (S, L)
+    valid = valid.reshape((1, s, spec.max_len) + (1,) * len(leaf.rest))
+    return jnp.where(valid, dense, jnp.zeros((), dense.dtype))
+
+
+def _dense_to_pages(spec: PageSpec, leaf: LeafPageSpec,
+                    pages: jax.Array) -> jax.Array:
+    """(N, steps, ptok, *rest) token data -> (N, page_bytes) u8."""
+    n = pages.shape[0]
+    ptok = spec.page_tokens
+    itemsize = jnp.dtype(leaf.dtype).itemsize
+    if jnp.dtype(leaf.dtype) == jnp.uint8:
+        flat = pages.reshape(n, leaf.steps, ptok * leaf.tok_bytes)
+    else:
+        as_u8 = jax.lax.bitcast_convert_type(pages, jnp.uint8)
+        flat = as_u8.reshape(n, leaf.steps, ptok * leaf.tok_bytes)
+    pad = leaf.lp_bytes - ptok * leaf.tok_bytes
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, 0), (0, pad)))
+    return flat.reshape(n, leaf.page_bytes)
+
+
+# ---------------------------------------------------------------------------
+# The three boundary crossings: read, bulk write, dirty write.
+# ---------------------------------------------------------------------------
+
+
+def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
+               lengths: jax.Array):
+    """Gather + decrypt + verify the paged leaves for a batched decode.
+
+    Args:
+      page_table: (max_slots, pages_per_slot) int32; -1 = unallocated.
+      lengths: (max_slots,) int32 valid tokens per slot.
+
+    Returns ``(dense_leaves, ok)`` — one dense (steps, S, max_len,
+    *rest) array per paged leaf, and the AND of every gated MAC check
+    over the *touched* pages (pages holding positions < length).
+    """
+    cfg = spec.cfg
+    s, p = page_table.shape
+    ptab = jnp.where(page_table < 0, spec.scratch_page, page_table)
+    flat_ids = ptab.reshape(-1)
+    vns = pool.page_vns[flat_ids]
+    page_start = (jnp.arange(p, dtype=jnp.int32) * spec.page_tokens)[None, :]
+    touched = page_start < lengths[:, None]            # (S, P)
+
+    ok = jnp.asarray(True)
+    agg = jnp.zeros((s, p, mac.MAC_BYTES), jnp.uint8)
+    dense = []
+    for li, leaf in enumerate(spec.leaves):
+        ct = pool.cts[li][flat_ids].reshape(s, p, leaf.page_bytes)
+        need_macs = cfg.verify != "none"
+        if need_macs and _kernel_read_ok(spec):
+            pt, macs = _fused_read(spec, leaf, ct.reshape(-1, leaf.page_bytes),
+                                   flat_ids, vns, keys)
+            pt = pt.reshape(s, p, leaf.page_bytes)
+            macs = macs.reshape(s, p, leaf.n_blocks, mac.MAC_BYTES)
+        else:
+            pt = _crypt(spec, leaf, ct.reshape(-1, leaf.page_bytes),
+                        flat_ids, vns, keys).reshape(s, p, leaf.page_bytes)
+            macs = None
+            if need_macs:
+                macs = _page_block_macs(
+                    spec, leaf, ct.reshape(-1, leaf.page_bytes), flat_ids,
+                    vns, keys).reshape(s, p, leaf.n_blocks, mac.MAC_BYTES)
+        if cfg.verify == "block":
+            stored = pool.block_macs[li][flat_ids].reshape(macs.shape)
+            ok = ok & jnp.all((macs == stored) | ~touched[..., None, None])
+        elif cfg.verify == "layer":
+            agg = agg ^ mac.xor_aggregate(macs, axis=2)
+        dense.append(_pages_to_dense(spec, leaf, pt, lengths))
+    if cfg.verify == "layer":
+        stored = pool.page_macs[flat_ids].reshape(s, p, mac.MAC_BYTES)
+        ok = ok & jnp.all((agg == stored) | ~touched[..., None])
+    if cfg.emulate_tree:
+        ok = ok & emulated_tree_probe(spec.blocks_per_read)
+    return dense, ok
+
+
+def write_pages(pool: PagedKVPool, spec: PageSpec, keys, page_ids: jax.Array,
+                leaf_pages: list, vn, real_mask: jax.Array) -> PagedKVPool:
+    """Encrypt + MAC N pages and scatter them into the pool.
+
+    Args:
+      page_ids: (N,) int32 destinations (scratch row for masked slots —
+        duplicates are only ever the scratch page, so last-write-wins
+        is harmless).
+      leaf_pages: per paged leaf, (N, steps, page_tokens, *rest) data.
+      vn: scalar uint32 version number for this write event.
+      real_mask: (N,) bool — writes that land on real (non-scratch)
+        pages and therefore participate in the deferred pool MAC.
+    """
+    cfg = spec.cfg
+    n = page_ids.shape[0]
+    vns = jnp.broadcast_to(jnp.asarray(vn, jnp.uint32), (n,))
+    agg = jnp.zeros((n, mac.MAC_BYTES), jnp.uint8)
+    new_cts = []
+    new_block_macs = list(pool.block_macs)
+    for li, leaf in enumerate(spec.leaves):
+        buf = _dense_to_pages(spec, leaf, leaf_pages[li])
+        ct = _crypt(spec, leaf, buf, page_ids, vns, keys)
+        new_cts.append(pool.cts[li].at[page_ids].set(ct))
+        if cfg.verify != "none":
+            macs = _page_block_macs(spec, leaf, ct, page_ids, vns, keys)
+            if cfg.verify == "block":
+                new_block_macs[li] = pool.block_macs[li].at[page_ids].set(macs)
+            agg = agg ^ mac.xor_aggregate(macs, axis=1)
+    old_macs = pool.page_macs[page_ids]                # read before scatter
+    new_page_macs = pool.page_macs.at[page_ids].set(agg)
+    new_vns = pool.page_vns.at[page_ids].set(vns)
+    # Deferred model-level MAC: incremental XOR update, O(dirty pages).
+    delta = jnp.where(real_mask[:, None], old_macs ^ agg,
+                      jnp.zeros((), jnp.uint8))
+    pool_mac = pool.pool_mac ^ mac.xor_aggregate(delta)
+    return PagedKVPool(tuple(new_cts), new_page_macs, tuple(new_block_macs),
+                       new_vns, pool_mac)
+
+
+def write_prefill(pool: PagedKVPool, spec: PageSpec, keys,
+                  page_ids: jax.Array, dense_leaves: list, n_write_pages: int,
+                  vn) -> PagedKVPool:
+    """Protect the first ``n_write_pages`` pages of one freshly-prefilled
+    slot.  ``dense_leaves``: per paged leaf, (steps, 1, max_len, *rest).
+    """
+    ptok = spec.page_tokens
+    leaf_pages = []
+    for leaf, dense_leaf in zip(spec.leaves, dense_leaves):
+        toks = dense_leaf[:, 0, : n_write_pages * ptok]
+        pages = toks.reshape((leaf.steps, n_write_pages, ptok) + leaf.rest)
+        leaf_pages.append(jnp.moveaxis(pages, 1, 0))   # (N, steps, ptok, rest)
+    ids = page_ids[:n_write_pages]
+    real = ids < spec.n_pages
+    return write_pages(pool, spec, keys, ids, leaf_pages, vn, real)
+
+
+def write_dirty(pool: PagedKVPool, spec: PageSpec, keys,
+                page_table: jax.Array, dense_leaves: list,
+                lengths: jax.Array, active: jax.Array, vn) -> PagedKVPool:
+    """Re-encrypt + re-MAC the ONE dirty page per active slot.
+
+    ``lengths`` are the pre-increment lengths: the decode step just
+    wrote its token at position ``length``, so the dirty page is
+    ``length // page_tokens``.  Inactive slots write to the scratch row.
+    """
+    s = page_table.shape[0]
+    ptok = spec.page_tokens
+    dirty = lengths // ptok                            # (S,) page slot-index
+    pid = jnp.take_along_axis(page_table, dirty[:, None], axis=1)[:, 0]
+    real = active & (pid >= 0)
+    pid = jnp.where(real, pid, spec.scratch_page)
+    tok_idx = dirty[:, None] * ptok + jnp.arange(ptok, dtype=jnp.int32)[None]
+    leaf_pages = []
+    for leaf, dense_leaf in zip(spec.leaves, dense_leaves):
+        idx = tok_idx.reshape((1, s, ptok) + (1,) * len(leaf.rest))
+        page = jnp.take_along_axis(dense_leaf, idx, axis=2)
+        leaf_pages.append(jnp.moveaxis(page, 0, 1))    # (S, steps, ptok, rest)
+    return write_pages(pool, spec, keys, pid, leaf_pages, vn, real)
+
+
+def deferred_pool_check(pool: PagedKVPool, spec: PageSpec) -> jax.Array:
+    """Model-level deferred MAC (paper Table I): the XOR of every real
+    page MAC must equal the incrementally-maintained pool MAC.  Run off
+    the critical path (end of request / every N steps)."""
+    return jnp.all(mac.xor_aggregate(pool.page_macs[: spec.n_pages])
+                   == pool.pool_mac)

@@ -21,8 +21,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.sim.npu_configs import NPUConfig
-from repro.sim.scalesim import (BURST_BYTES, LayerTrace, WorkloadTrace,
-                                rounded_bytes)
+from repro.sim.scalesim import BURST_BYTES, LayerTrace, WorkloadTrace
 from repro.sim.secureloop import optimal_block_for_streams
 
 __all__ = ["SchemeModel", "SCHEME_MODELS", "LayerSecurityTraffic",

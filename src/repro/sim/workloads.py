@@ -14,7 +14,7 @@ geometry for the optBlk search.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 __all__ = ["Layer", "Workload", "WORKLOADS", "conv", "gemm"]
 

@@ -13,10 +13,9 @@ cost_analysis).
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import encdec as ed
 from repro.models import lm as lm_mod

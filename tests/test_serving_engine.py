@@ -1,0 +1,257 @@
+"""Batched secure serving engine: paged MAC-protected KV cache.
+
+Covers the tentpole guarantees:
+  * scheme parity — seda (and friends) produce token-identical output
+    to the unprotected baseline and to the dense serve_step path;
+  * partial-page dirty writes — decode re-MACs exactly the dirty page;
+  * eviction under a full pool — preempted requests finish with the
+    same greedy tokens;
+  * tamper/replay — flipped ciphertext bytes and replayed pages fail
+    the page-MAC gate; metadata tampering on pages outside the read
+    set fails the deferred pool-level MAC.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import lm as lm_mod
+from repro.models.layers import init_params
+from repro.serve import kv_pages as kvp
+from repro.serve.engine import IntegrityError, SecureServingEngine
+from repro.serve.serve_step import (greedy_sample, make_decode_step,
+                                    make_prefill_step)
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    arch = get_arch("minitron-4b")
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    return arch, cfg, params
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(0)
+    return [list(map(int, rng.integers(1, 256, n))) for n in (5, 7, 9)]
+
+
+def _engine(smoke, **kw):
+    arch, cfg, params = smoke
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_tokens", 4)
+    kw.setdefault("pages_per_slot", 4)
+    return SecureServingEngine(arch, cfg, params, **kw)
+
+
+def _dense_baseline(smoke, prompt, gen_len, max_len=16):
+    arch, cfg, params = smoke
+    prefill = jax.jit(make_prefill_step(arch, cfg, max_len))
+    decode = jax.jit(make_decode_step(arch, cfg))
+    logits, caches = prefill(params,
+                             {"tokens": jnp.asarray([prompt], jnp.int32)})
+    tok = greedy_sample(logits)
+    out = [int(tok[0, 0])]
+    for _ in range(gen_len - 1):
+        logits, caches = decode(params, tok, caches)
+        tok = greedy_sample(logits)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+class TestSchemeParity:
+    def test_seda_matches_unprotected_and_dense(self, smoke, prompts):
+        dense = [_dense_baseline(smoke, p, 6) for p in prompts]
+        for scheme in ("off", "seda"):
+            eng = _engine(smoke, scheme=scheme)
+            rids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+            done = eng.run()
+            assert [done[r].generated for r in rids] == dense, scheme
+
+    @pytest.mark.parametrize("scheme", ["sgx64", "mgx64", "seda512",
+                                        "mgx512", "sgx512"])
+    def test_all_schemes_token_identical(self, smoke, prompts, scheme):
+        off = _engine(smoke, scheme="off")
+        rids = [off.submit(p, max_new_tokens=4) for p in prompts[:2]]
+        want = [off.run()[r].generated for r in rids]
+        eng = _engine(smoke, scheme=scheme)
+        rids = [eng.submit(p, max_new_tokens=4) for p in prompts[:2]]
+        done = eng.run()
+        assert [done[r].generated for r in rids] == want
+
+    def test_fused_kernel_path_bit_identical(self, smoke, prompts):
+        plain = _engine(smoke, scheme="seda", use_kernel=False)
+        rid = plain.submit(prompts[0], max_new_tokens=5)
+        want = plain.run()[rid].generated
+        fused = _engine(smoke, scheme="seda", use_kernel=True)
+        rid = fused.submit(prompts[0], max_new_tokens=5)
+        assert fused.run()[rid].generated == want
+
+    def test_mla_arch_serves(self):
+        arch = get_arch("deepseek-v3-671b")
+        cfg = arch.make_smoke_config()
+        params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(1))
+        eng = SecureServingEngine(arch, cfg, params, scheme="seda",
+                                  max_slots=2, page_tokens=4,
+                                  pages_per_slot=3)
+        rng = np.random.default_rng(1)
+        rids = [eng.submit(list(map(int, rng.integers(1, cfg.vocab, 5))),
+                           max_new_tokens=4) for _ in range(2)]
+        done = eng.run()
+        assert all(len(done[r].generated) == 4 for r in rids)
+        assert eng.deferred_check()
+
+
+class TestDirtyPages:
+    def test_partial_page_dirty_write_remacs_only_dirty_page(self, smoke):
+        """A mid-page decode rewrites exactly one page's MAC and VN."""
+        eng = _engine(smoke, scheme="seda", max_slots=1)
+        eng.submit([3, 1, 4, 1, 5], max_new_tokens=6)  # 5 tokens: page 1 is
+        eng.step()                                     # partially filled
+        slot = eng.slots[0]
+        macs_before = np.asarray(eng.pool.page_macs).copy()
+        vns_before = np.asarray(eng.pool.page_vns).copy()
+        dirty_pid = slot.pages[slot.length // eng.page_tokens]
+        eng.step()
+        macs_after = np.asarray(eng.pool.page_macs)
+        vns_after = np.asarray(eng.pool.page_vns)
+        changed = {int(i) for i in range(eng.n_pages)
+                   if not (macs_before[i] == macs_after[i]).all()
+                   or vns_before[i] != vns_after[i]}
+        assert changed == {dirty_pid}
+        assert eng.deferred_check()
+
+    def test_page_boundary_allocates_and_macs_fresh_page(self, smoke):
+        """Crossing into a new page MACs it for the first time."""
+        eng = _engine(smoke, scheme="seda", max_slots=1)
+        eng.submit([3, 1, 4, 1, 5, 9, 2], max_new_tokens=7)  # crosses at 8
+        eng.step()                               # admit + first decode
+        while eng.slots[0] is not None and eng.slots[0].length < 9:
+            eng.step()
+        assert len(eng.slots[0].pages) >= 3      # grew past page 2 boundary
+        eng.run()
+        assert eng.deferred_check()
+
+
+class TestEviction:
+    def test_eviction_under_full_pool_preserves_tokens(self, smoke, prompts):
+        roomy = _engine(smoke, scheme="seda", max_slots=3,
+                        n_pages=12)
+        rids = [roomy.submit(p, max_new_tokens=6) for p in prompts]
+        want = [roomy.run()[r].generated for r in rids]
+        assert roomy.stats["preemptions"] == 0
+
+        tight = _engine(smoke, scheme="seda", max_slots=3, n_pages=5)
+        rids = [tight.submit(p, max_new_tokens=6) for p in prompts]
+        done = tight.run()
+        assert tight.stats["preemptions"] > 0
+        assert [done[r].generated for r in rids] == want
+        assert tight.n_free_pages == 5           # everything returned
+
+    def test_oversized_request_rejected(self, smoke):
+        eng = _engine(smoke, scheme="seda", max_slots=1, n_pages=2)
+        with pytest.raises(ValueError):
+            eng.submit(list(range(1, 12)), max_new_tokens=8)
+
+
+class TestTamper:
+    def test_ciphertext_flip_fails_page_gate(self, smoke, prompts):
+        eng = _engine(smoke, scheme="seda", max_slots=1)
+        eng.submit(prompts[0], max_new_tokens=6)
+        eng.step()
+        pid = eng.slots[0].pages[0]
+        ct = eng.pool.cts[0]
+        eng.pool = eng.pool._replace(
+            cts=(ct.at[pid, 3].set(ct[pid, 3] ^ 0x5A),) + eng.pool.cts[1:])
+        with pytest.raises(IntegrityError):
+            eng.step()
+
+    @pytest.mark.parametrize("scheme", ["sgx64", "mgx64"])
+    def test_ciphertext_flip_fails_block_gate(self, smoke, prompts, scheme):
+        eng = _engine(smoke, scheme=scheme, max_slots=1)
+        eng.submit(prompts[0], max_new_tokens=6)
+        eng.step()
+        pid = eng.slots[0].pages[0]
+        ct = eng.pool.cts[1]
+        eng.pool = eng.pool._replace(
+            cts=eng.pool.cts[:1] + (ct.at[pid, 0].set(ct[pid, 0] ^ 0x01),))
+        with pytest.raises(IntegrityError):
+            eng.step()
+
+    def test_replayed_page_fails_vn_freshness(self, smoke, prompts):
+        """Restoring an old (valid-at-the-time) ciphertext is caught:
+        the on-chip VN moved on, so the MAC binding no longer holds."""
+        eng = _engine(smoke, scheme="seda", max_slots=1)
+        eng.submit([3, 1, 4, 1, 5], max_new_tokens=7)
+        eng.step()
+        slot = eng.slots[0]
+        dirty_pid = slot.pages[slot.length // eng.page_tokens]
+        old_row = np.asarray(eng.pool.cts[0][dirty_pid]).copy()
+        eng.step()                                # rewrites the dirty page
+        eng.pool = eng.pool._replace(
+            cts=(eng.pool.cts[0].at[dirty_pid].set(jnp.asarray(old_row)),)
+            + eng.pool.cts[1:])
+        with pytest.raises(IntegrityError):
+            eng.step()
+
+    def test_evicted_page_metadata_tamper_fails_deferred_mac(self, smoke,
+                                                             prompts):
+        """Pages of an evicted (finished) request sit outside every read
+        set, so the per-read gate never touches them — tampering there
+        is caught by the deferred pool-level MAC (paper's model MAC)."""
+        eng = _engine(smoke, scheme="seda", max_slots=1, defer_interval=0)
+        rid = eng.submit(prompts[0], max_new_tokens=3)
+        done = eng.run()
+        assert done[rid].state == "finished"
+        assert eng.deferred_check()
+        evicted_pid = 0                           # freed back to the pool
+        eng.pool = eng.pool._replace(
+            page_macs=eng.pool.page_macs.at[evicted_pid, 0].set(
+                eng.pool.page_macs[evicted_pid, 0] ^ 0xFF))
+        assert not eng.deferred_check()
+
+
+class TestPoolUnit:
+    """kv_pages roundtrip without a model in the loop."""
+
+    def _spec_and_tree(self, scheme="seda", use_kernel=False):
+        from repro.models.attention import KVCache
+        tree = [[KVCache(
+            k=jax.ShapeDtypeStruct((2, 2, 16, 2, 8), jnp.float32),
+            v=jax.ShapeDtypeStruct((2, 2, 16, 2, 8), jnp.float32),
+            length=jax.ShapeDtypeStruct((2,), jnp.int32))]]
+        spec = kvp.build_page_spec(tree, scheme=scheme, page_tokens=4,
+                                   n_pages=6, max_slots=2, max_len=16,
+                                   use_kernel=use_kernel)
+        return spec, tree
+
+    @pytest.mark.parametrize("scheme", ["off", "seda", "sgx64", "mgx512"])
+    def test_write_read_roundtrip(self, keys, rng, scheme):
+        spec, _ = self._spec_and_tree(scheme)
+        pool = kvp.init_pool(spec)
+        data = [jnp.asarray(rng.standard_normal((2, 1, 16, 2, 8)),
+                            jnp.float32) for _ in spec.leaves]  # k and v
+        page_ids = jnp.asarray([0, 1, 2, 3], jnp.int32)
+        pool = kvp.write_prefill(pool, spec, keys, page_ids, data, 4,
+                                 jnp.uint32(1))
+        table = jnp.asarray([[0, 1, 2, 3], [-1, -1, -1, -1]], jnp.int32)
+        lengths = jnp.asarray([16, 0], jnp.int32)
+        dense, ok = kvp.read_pages(pool, spec, keys, table, lengths)
+        assert bool(ok)
+        for got, want in zip(dense, data):
+            np.testing.assert_array_equal(np.asarray(got[:, 0]),
+                                          np.asarray(want[:, 0]))
+            # Slot 1 is unallocated: its view must be zero, not garbage.
+            assert (np.asarray(got[:, 1]) == 0).all()
+
+    def test_page_blocks_aligned_to_scheme_granularity(self):
+        for scheme in ("seda", "seda512", "sgx64"):
+            spec, _ = self._spec_and_tree(scheme)
+            bb = spec.cfg.block_bytes
+            for leaf in spec.leaves:
+                assert leaf.lp_bytes % bb == 0
+                assert leaf.page_bytes == leaf.steps * leaf.lp_bytes
+                assert leaf.n_blocks == leaf.page_bytes // bb

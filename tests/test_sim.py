@@ -3,8 +3,7 @@
 import statistics
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.sim.area_power import b_aes_cost, scaling_table, t_aes_cost
 from repro.sim.caches import LRUCache
