@@ -1,0 +1,167 @@
+"""Multi-tenant secure serving: throughput + protection traffic.
+
+Sweeps the tenancy axes of the serving engine: tenant count {1, 2, 4}
+(requests interleaved round-robin across tenant sessions) and key
+rotation period, across every protection scheme in
+:data:`repro.core.secure_exec.SCHEMES`, reporting
+
+* steady-state decode throughput (tokens/s, compile excluded),
+* HLO-visible protection traffic of the tenant-aware decode step
+  (``bytes accessed`` minus the ``off`` scheme at the same tenant
+  count — the cost of per-page key gathering + (tenant, epoch) RePA
+  binding on top of the baseline), and
+* scheduler counters (preemptions, rotations) + latency percentiles.
+
+Standalone JSON mode for the CI perf-smoke job::
+
+    PYTHONPATH=src python benchmarks/bench_multi_tenant.py \
+        --tenant-counts 1,2 --gen-len 6 --json results.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.secure_exec import SCHEMES
+from repro.models import lm as lm_mod
+from repro.models.layers import init_params
+from repro.serve.engine import SecureServingEngine
+from repro.tenancy import KeyHierarchy, TenantRegistry
+
+DEFAULT_TENANTS = (1, 2, 4)
+# Rotation period in ticks; 0 = never.  Must stay below the ~gen_len
+# tick run length or the rotation rows silently measure no rotations.
+DEFAULT_ROTATIONS = (0, 4)
+
+
+def _measure(arch, cfg, params, scheme: str, n_tenants: int, *,
+             rotate_every: int, batch: int, page_tokens: int,
+             pages_per_slot: int, gen_len: int, prompt_len: int,
+             seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    registry = TenantRegistry(KeyHierarchy(seed), max_tenants=n_tenants)
+    sessions = []
+    for t in range(n_tenants):
+        registry.register(f"tenant-{t}")
+        sessions.append(registry.open_session(f"tenant-{t}"))
+    eng = SecureServingEngine(
+        arch, cfg, params, scheme=scheme, max_slots=batch,
+        page_tokens=page_tokens, pages_per_slot=pages_per_slot,
+        n_pages=batch * pages_per_slot, registry=registry,
+        rotate_every=rotate_every)
+    for i in range(batch):
+        prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
+        eng.submit(prompt, max_new_tokens=gen_len,
+                   session=sessions[i % n_tenants])
+    eng.step()                       # admission + first decode (compiles)
+    t0 = time.perf_counter()
+    steps = 0
+    while any(s is not None for s in eng.slots) or eng._n_waiting():
+        eng.step()
+        steps += 1
+    dt = time.perf_counter() - t0
+    cost = eng.decode_cost_analysis()
+    return {
+        "scheme": scheme,
+        "tenants": n_tenants,
+        "rotate_every": rotate_every,
+        "decode_steps_timed": steps,
+        "tok_per_s": batch * steps / max(dt, 1e-9),
+        "us_per_step": dt / max(steps, 1) * 1e6,
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "preemptions": eng.stats["preemptions"],
+        "rotations": eng.stats["rotations"],
+        "latency": eng.latency_stats(),
+    }
+
+
+def collect(schemes=tuple(SCHEMES), tenant_counts=DEFAULT_TENANTS,
+            rotations=DEFAULT_ROTATIONS, *, arch_name: str = "minitron-4b",
+            batch: int = 4, page_tokens: int = 8, pages_per_slot: int = 4,
+            gen_len: int = 8, prompt_len: int = 9) -> list:
+    arch = get_arch(arch_name)
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    results = []
+    for n_tenants in tenant_counts:
+        for rotate_every in rotations:
+            base_bytes = None
+            for scheme in schemes:
+                r = _measure(arch, cfg, params, scheme, n_tenants,
+                             rotate_every=rotate_every, batch=batch,
+                             page_tokens=page_tokens,
+                             pages_per_slot=pages_per_slot,
+                             gen_len=gen_len, prompt_len=prompt_len)
+                if scheme == "off":
+                    base_bytes = r["bytes_accessed"]
+                if base_bytes:
+                    r["protection_traffic_bytes"] = (r["bytes_accessed"]
+                                                     - base_bytes)
+                    r["traffic_overhead"] = (r["bytes_accessed"] / base_bytes
+                                             - 1)
+                results.append(r)
+    return results
+
+
+def run() -> list:
+    """benchmarks.run suite hook: CSV rows for a reduced sweep."""
+    rows = []
+    for r in collect(schemes=("off", "seda", "mgx64"),
+                     tenant_counts=(1, 2), rotations=(0, 4), gen_len=6):
+        overhead = r.get("traffic_overhead")
+        derived = (f"tok/s={r['tok_per_s']:.1f} "
+                   f"rotations={r['rotations']}")
+        if overhead is not None:
+            derived += f" traffic_overhead={overhead:+.1%}"
+        rows.append({
+            "name": (f"mt_{r['scheme']}_t{r['tenants']}"
+                     f"_r{r['rotate_every']}"),
+            "us_per_call": r["us_per_step"],
+            "derived": derived,
+        })
+    return rows
+
+
+def main(argv=None) -> list:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="minitron-4b")
+    ap.add_argument("--schemes", default=",".join(SCHEMES))
+    ap.add_argument("--tenant-counts",
+                    default=",".join(map(str, DEFAULT_TENANTS)))
+    ap.add_argument("--rotations",
+                    default=",".join(map(str, DEFAULT_ROTATIONS)))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--pages-per-slot", type=int, default=4)
+    ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=9)
+    ap.add_argument("--json", default=None, help="write results to this file")
+    args = ap.parse_args(argv)
+
+    results = collect(
+        schemes=tuple(args.schemes.split(",")),
+        tenant_counts=tuple(int(t) for t in args.tenant_counts.split(",")),
+        rotations=tuple(int(r) for r in args.rotations.split(",")),
+        arch_name=args.arch, batch=args.batch, page_tokens=args.page_tokens,
+        pages_per_slot=args.pages_per_slot, gen_len=args.gen_len,
+        prompt_len=args.prompt_len)
+    for r in results:
+        print(f"[mt-bench] scheme={r['scheme']:<8} tenants={r['tenants']:<2} "
+              f"rot={r['rotate_every']:<3} tok/s={r['tok_per_s']:9.1f} "
+              f"traffic={r.get('protection_traffic_bytes', 0):12.0f}B")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "multi_tenant_serving",
+                       "results": results}, f, indent=2)
+        print(f"[mt-bench] wrote {args.json}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -61,6 +61,8 @@ def _measure(arch, cfg, params, scheme: str, batch: int, *,
         "us_per_step": dt / max(steps, 1) * 1e6,
         "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
         "preemptions": eng.stats["preemptions"],
+        "prefill_compiles": eng.stats["prefill_compiles"],
+        "latency": eng.latency_stats(),
     }
 
 
@@ -96,6 +98,9 @@ def run() -> list:
         overhead = r.get("traffic_overhead")
         derived = (f"tok/s={r['tok_per_s']:.1f} "
                    f"steps={r['decode_steps_timed']}")
+        lat = r.get("latency") or {}
+        if lat:
+            derived += (f" ttft_p95={lat['p95_ttft_ticks']:.1f}")
         if overhead is not None:
             derived += f" traffic_overhead={overhead:+.1%}"
         rows.append({

@@ -12,8 +12,9 @@ import sys
 import traceback
 
 from benchmarks import (bench_area_power, bench_crypt_kernels,
-                        bench_memory_traffic, bench_performance,
-                        bench_secure_serving, bench_secure_step, bench_table3)
+                        bench_memory_traffic, bench_multi_tenant,
+                        bench_performance, bench_secure_serving,
+                        bench_secure_step, bench_table3)
 
 SUITES = {
     "fig4_area_power": bench_area_power,
@@ -23,6 +24,7 @@ SUITES = {
     "crypt_kernels": bench_crypt_kernels,
     "secure_step": bench_secure_step,
     "secure_serving": bench_secure_serving,
+    "multi_tenant_serving": bench_multi_tenant,
 }
 
 

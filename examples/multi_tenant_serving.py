@@ -1,0 +1,108 @@
+"""Multi-tenant secure serving: per-tenant key domains on one engine.
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py
+
+Three tenants share one continuous-batching engine and one paged KV
+pool, but never one cryptographic domain:
+
+* each tenant's KV pages are encrypted + MACed under keys from its own
+  subtree of the hierarchical KDF (root -> tenant master -> purpose
+  -split enc/MAC/VN keys -> epoch keys);
+* the RePA binding carries (tenant, epoch), so relocating a page
+  across tenants fails its MAC gate — demonstrated below by pointing
+  one tenant's slot at another tenant's pages;
+* admission is weighted-fair (tenant weights 2:1:1) and quota-gated;
+* mid-flight ``rotate()`` bumps one tenant's key epoch live: old pages
+  keep verifying under the retained previous-epoch key and re-encrypt
+  lazily on their next dirty write — decode output is unchanged.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import lm as lm_mod
+from repro.models.layers import init_params
+from repro.serve.engine import IntegrityError, SecureServingEngine
+from repro.tenancy import KeyHierarchy, TenantRegistry
+
+
+def make_engine(arch, cfg, params, registry, **kw):
+    return SecureServingEngine(arch, cfg, params, scheme="seda",
+                               max_slots=3, page_tokens=4, pages_per_slot=6,
+                               n_pages=14, registry=registry, **kw)
+
+
+def main() -> None:
+    arch = get_arch("minitron-4b")
+    cfg = arch.make_smoke_config()
+    print(f"=== multi-tenant secure serving: {cfg.name} ===")
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+
+    registry = TenantRegistry(KeyHierarchy(42), max_tenants=4)
+    registry.register("alice", weight=2.0, page_quota=8)
+    registry.register("bob", weight=1.0, page_quota=6)
+    registry.register("carol", weight=1.0, page_quota=6)
+    sessions = {t: registry.open_session(t) for t in registry.tenants}
+    print(f"registered {registry.n_tenants} tenants "
+          f"(weights 2:1:1, quotas 8/6/6 pages), "
+          f"key bank: {registry.bank.key.shape[0]} rows "
+          f"({registry.retain} retained epochs each)")
+
+    eng = make_engine(arch, cfg, params, registry)
+    rng = np.random.default_rng(7)
+    rids = {}
+    for tenant_id, n in zip(("alice", "bob", "carol"), (6, 9, 12)):
+        prompt = list(map(int, rng.integers(1, cfg.vocab, n)))
+        rids[tenant_id] = eng.submit(prompt, max_new_tokens=8,
+                                     session=sessions[tenant_id])
+
+    # Rotate alice's keys after a few ticks — live, mid-decode.
+    for _ in range(3):
+        eng.step()
+    new_epoch = eng.rotate("alice")
+    print(f"rotated alice's keys mid-decode -> epoch {new_epoch} "
+          f"(old pages verify under the retained epoch, re-encrypt on "
+          f"next dirty write)")
+    done = eng.run()
+    for tenant_id, rid in rids.items():
+        print(f"  {tenant_id:>6}: generated={done[rid].generated}")
+    print(f"engine: {eng.stats['decode_steps']} decode steps, "
+          f"{eng.stats['preemptions']} preemptions, "
+          f"{eng.stats['rotations']} rotations, "
+          f"prefill compiled {eng.stats['prefill_compiles']}x "
+          f"(length-bucketed), "
+          f"deferred pool MAC {'OK' if eng.deferred_check() else 'FAIL'}")
+    if done.latency:
+        print(f"latency: ttft p50={done.latency['p50_ttft_ticks']:.1f} "
+              f"p95={done.latency['p95_ttft_ticks']:.1f} ticks")
+    assert eng.deferred_check()
+
+    # --- cross-tenant isolation: point bob's slot at carol's pages ------
+    # (same key epoch on both sides, so rejection comes from the MAC
+    # gate: carol's pages carry carol's keys + (tenant, epoch) binding)
+    eng2 = make_engine(arch, cfg, params, registry)
+    rc = eng2.submit(list(map(int, rng.integers(1, cfg.vocab, 6))),
+                     max_new_tokens=8, session=sessions["carol"])
+    rb = eng2.submit(list(map(int, rng.integers(1, cfg.vocab, 6))),
+                     max_new_tokens=8, session=sessions["bob"])
+    eng2.step()
+    slot_c = next(s for s in eng2.slots if s and s.req.rid == rc)
+    slot_b = next(s for s in eng2.slots if s and s.req.rid == rb)
+    slot_b.pages, slot_b.page_epochs = (list(slot_c.pages),
+                                        list(slot_c.page_epochs))
+    try:
+        eng2.step()
+        raise AssertionError("cross-tenant page read was NOT rejected")
+    except IntegrityError as e:
+        print(f"cross-tenant page read rejected as designed: {e}")
+    print("=== multi_tenant_serving OK ===")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,17 @@ verify only touched pages and re-MAC only dirty ones::
 
     PYTHONPATH=src python -m repro.launch.serve --arch minitron-4b \
         --smoke --engine paged --scheme seda --batch 8 --gen-len 16
+
+``--tenants N`` registers N tenants in a key-management registry and
+serves the batch round-robin across their sessions: every tenant's KV
+pages live under its own (tenant, epoch) keys from the hierarchical
+KDF, with weighted-fair admission and tenant-scoped eviction.
+``--rotate-every K`` additionally rotates one tenant's keys every K
+scheduler ticks (round-robin), exercising live lazy rotation::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch minitron-4b \
+        --smoke --engine paged --scheme seda --batch 8 --gen-len 16 \
+        --tenants 4 --rotate-every 8
 """
 
 from __future__ import annotations
@@ -52,7 +63,18 @@ def main(argv=None) -> dict:
                     help="0 = sized from prompt+gen length")
     ap.add_argument("--n-pages", type=int, default=0,
                     help="0 = batch * pages_per_slot")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="serve through N per-tenant key domains "
+                         "(--engine paged only; 0 = single-tenant)")
+    ap.add_argument("--rotate-every", type=int, default=0,
+                    help="rotate one tenant's keys every K ticks "
+                         "(round-robin; needs --tenants)")
     args = ap.parse_args(argv)
+    if args.tenants and args.engine != "paged":
+        raise SystemExit("--tenants needs --engine paged")
+    if args.rotate_every and not args.tenants:
+        raise SystemExit("--rotate-every needs --tenants (there are no "
+                         "tenant keys to rotate otherwise)")
 
     arch = get_arch(args.arch)
     if arch.kind == "encdec":
@@ -104,26 +126,46 @@ def _serve_paged(arch, cfg, params, args) -> dict:
     pages_per_slot = args.pages_per_slot or -(
         -(args.prompt_len + args.gen_len) // args.page_tokens)
     n_pages = args.n_pages or args.batch * pages_per_slot
+    registry = None
+    sessions = []
+    if args.tenants:
+        from repro.tenancy import KeyHierarchy, TenantRegistry
+        registry = TenantRegistry(KeyHierarchy(args.seed),
+                                  max_tenants=args.tenants)
+        for t in range(args.tenants):
+            registry.register(f"tenant-{t}")
+            sessions.append(registry.open_session(f"tenant-{t}"))
     eng = SecureServingEngine(
         arch, cfg, params, scheme=args.scheme, max_slots=args.batch,
         page_tokens=args.page_tokens, pages_per_slot=pages_per_slot,
-        n_pages=n_pages, keys=SecureKeys.derive(args.seed))
+        n_pages=n_pages, keys=SecureKeys.derive(args.seed),
+        registry=registry, rotate_every=args.rotate_every)
     rng = np.random.default_rng(args.seed)
     rids = []
-    for _ in range(args.batch):
+    for i in range(args.batch):
         prompt = list(map(int, rng.integers(1, cfg.vocab, args.prompt_len)))
-        rids.append(eng.submit(prompt, max_new_tokens=args.gen_len))
+        session = sessions[i % len(sessions)] if sessions else None
+        rids.append(eng.submit(prompt, max_new_tokens=args.gen_len,
+                               session=session))
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
     n_tokens = sum(len(done[r].generated) for r in rids)
     rate = n_tokens / max(dt, 1e-9)
-    print(f"[serve] paged/{args.scheme}: {n_tokens} tokens over "
+    mode = f"paged/{args.scheme}" + (
+        f"/{args.tenants} tenants" if args.tenants else "")
+    print(f"[serve] {mode}: {n_tokens} tokens over "
           f"{args.batch} requests ({rate:.1f} tok/s incl. compile), "
           f"{eng.stats['preemptions']} preemptions, "
+          f"{eng.stats['rotations']} key rotations, "
           f"deferred pool MAC {'OK' if eng.deferred_check() else 'FAIL'}")
+    if done.latency:
+        print(f"[serve] latency (ticks): "
+              f"ttft p50={done.latency['p50_ttft_ticks']:.1f} "
+              f"p95={done.latency['p95_ttft_ticks']:.1f}")
     toks = np.asarray([done[r].generated for r in rids], np.int32)
-    return {"tokens": toks, "tok_per_s": rate, "stats": eng.stats}
+    return {"tokens": toks, "tok_per_s": rate, "stats": eng.stats,
+            "latency": done.latency}
 
 
 if __name__ == "__main__":

@@ -235,8 +235,16 @@ def cache_axes(cfg: LMConfig) -> list:
     return out
 
 
-def lm_prefill(cfg: LMConfig, params, batch, max_len: int) -> tuple:
-    """Full-sequence prefill: returns (last_logits, caches)."""
+def lm_prefill(cfg: LMConfig, params, batch, max_len: int,
+               last_pos=None) -> tuple:
+    """Full-sequence prefill: returns (last_logits, caches).
+
+    ``last_pos`` (optional traced scalar) selects which position's
+    logits to return instead of the literal last one — the serving
+    engine's length-bucketed prefill right-pads prompts to a power-of
+    -two length and needs the logits of the last *real* token (causal
+    attention makes positions <= last_pos independent of the padding).
+    """
     x, positions = _embed_tokens(cfg, params, batch)
     caches = []
     for seg_params, (kinds, steps) in zip(params["segments"], segments(cfg)):
@@ -253,7 +261,10 @@ def lm_prefill(cfg: LMConfig, params, batch, max_len: int) -> tuple:
             body, (x, jnp.zeros((), jnp.float32)), seg_params)
         caches.append(list(seg_cache))
     x = rms_norm(x, params["final_norm"])
-    last = x[:, -1:]
+    if last_pos is None:
+        last = x[:, -1:]
+    else:
+        last = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
     if cfg.tie_embeddings:
         logits = jnp.einsum("bld,vd->blv", last, params["embed"])
     else:

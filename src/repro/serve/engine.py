@@ -4,8 +4,10 @@ The engine multiplexes many requests over ``max_slots`` decode lanes
 and a shared pool of MAC-protected KV pages (:mod:`repro.serve.kv_pages`):
 
 * **admission** — waiting requests are prefetched into a free slot when
-  the pool has pages for their prompt; prefill runs per request and the
-  resulting cache pages are encrypted + MACed into the pool;
+  the pool has pages for their prompt; prefill runs per request (with
+  power-of-two length bucketing so prefill compiles once per bucket,
+  not once per distinct prompt length) and the resulting cache pages
+  are encrypted + MACed into the pool;
 * **decode** — one jitted computation per tick batches every running
   slot: gather pages -> decrypt -> verify touched pages -> attend/append
   -> re-encrypt + re-MAC only the dirty page per slot.  All schemes from
@@ -18,8 +20,32 @@ and a shared pool of MAC-protected KV pages (:mod:`repro.serve.kv_pages`):
   of :mod:`repro.core.multilevel`) is checked off the critical path,
   every ``defer_interval`` ticks, amortizing it across the batch.
 
-Host-side scheduling state (free list, queues, lengths) is plain
-Python; everything that touches tensor data stays inside jit.
+**Multi-tenant mode.**  Constructed with a
+:class:`repro.tenancy.registry.TenantRegistry`, the engine becomes a
+shared-accelerator serving plane with per-tenant cryptographic
+domains:
+
+* requests must carry a :class:`~repro.tenancy.registry.SessionHandle`
+  into :meth:`submit`; the registry validates it and pins the request
+  to its tenant;
+* every KV page is encrypted + MACed under its owner's (tenant, epoch)
+  keys, with the identity folded into the RePA binding — a page
+  written by tenant A fails verification when read under tenant B's
+  keys or under a stale epoch;
+* admission is **weighted-fair** (stride scheduling over tenant
+  virtual time, weighted by ``Tenant.weight``) and **quota-gated**: a
+  tenant at its page quota queues its own requests rather than
+  evicting anyone else's;
+* eviction is **tenant-scoped**: a tenant under memory pressure
+  preempts its *own* youngest request before touching others';
+* :meth:`rotate` bumps a tenant's key epoch **live**: resident pages
+  re-encrypt to the new epoch lazily on their next dirty write, reads
+  of previous-epoch pages keep verifying against the retained key, and
+  slots still holding pages about to fall out of the retention window
+  are preempted (their KV recomputes under fresh keys on re-admission).
+
+Host-side scheduling state (free list, queues, lengths, page epochs)
+is plain Python; everything that touches tensor data stays inside jit.
 """
 
 from __future__ import annotations
@@ -40,7 +66,7 @@ from repro.models import lm as lm_mod
 from repro.serve import kv_pages as kvp
 from repro.serve.serve_step import greedy_sample
 
-__all__ = ["IntegrityError", "Request", "SecureServingEngine"]
+__all__ = ["IntegrityError", "Request", "RunResult", "SecureServingEngine"]
 
 
 class IntegrityError(RuntimeError):
@@ -55,10 +81,22 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     state: str = "waiting"          # waiting | running | finished
     n_evictions: int = 0
+    tenant_idx: Optional[int] = None
+    submit_tick: int = 0
+    first_tick: Optional[int] = None    # tick the first token appeared
+    done_tick: Optional[int] = None
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
+
+
+class RunResult(dict):
+    """``{rid: Request}`` plus aggregate ``latency`` percentiles."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.latency: dict = {}
 
 
 @dataclasses.dataclass
@@ -67,22 +105,42 @@ class _Slot:
     length: int                     # KV tokens resident (host mirror)
     pages: list                     # owned pool page ids, in token order
     admit_seq: int
+    tenant: object = None           # tenancy.registry.Tenant | None
+    page_epochs: list = dataclasses.field(default_factory=list)
 
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def _bucket_len(n: int, cap: int) -> int:
+    """Round ``n`` up to the next power of two, capped at ``cap``."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, cap)
+
+
 class SecureServingEngine:
     """Batched secure decoding with paged, MAC-protected KV residency.
 
-    Typical use::
+    Typical single-tenant use::
 
         eng = SecureServingEngine(arch, cfg, params, scheme="seda",
                                   max_slots=4, page_tokens=8,
                                   pages_per_slot=4, n_pages=12)
         rids = [eng.submit(prompt, max_new_tokens=8) for prompt in prompts]
-        done = eng.run()            # {rid: Request}
+        done = eng.run()            # RunResult: {rid: Request} + .latency
+
+    Multi-tenant use::
+
+        reg = TenantRegistry(KeyHierarchy(0))
+        reg.register("alice", weight=2.0, page_quota=8)
+        eng = SecureServingEngine(arch, cfg, params, registry=reg, ...)
+        sess = reg.open_session("alice")
+        eng.submit(prompt, max_new_tokens=8, session=sess)
+        eng.rotate("alice")         # live key rotation
+        done = eng.run()
     """
 
     def __init__(self, arch, cfg, params, *, scheme: str = "seda",
@@ -91,12 +149,21 @@ class SecureServingEngine:
                  keys: Optional[sm.SecureKeys] = None,
                  use_kernel: bool = False, defer_interval: int = 16,
                  eos_id: Optional[int] = None,
-                 verify_every_step: bool = True):
+                 verify_every_step: bool = True,
+                 registry=None, rotate_every: int = 0,
+                 prefill_buckets: Optional[bool] = None):
         if arch.kind != "lm":
             raise ValueError("the paged serving engine supports decoder-only "
                              "LMs (enc-dec serving stays on serve_step)")
         if scheme not in SCHEMES:
             raise KeyError(f"unknown scheme {scheme!r}")
+        if registry is not None and use_kernel:
+            raise ValueError("the fused-kernel read path supports a single "
+                             "key domain; multi-tenant mode gathers per-page "
+                             "keys (use_kernel=False)")
+        if rotate_every and registry is None:
+            raise ValueError("rotate_every needs a tenant registry — there "
+                             "is no key hierarchy to rotate without one")
         self.arch, self.cfg, self.params = arch, cfg, params
         self.scheme = scheme
         self.max_slots = max_slots
@@ -110,6 +177,8 @@ class SecureServingEngine:
         self.defer_interval = defer_interval
         self.eos_id = eos_id
         self.verify_every_step = verify_every_step
+        self.registry = registry
+        self.rotate_every = rotate_every
 
         cache_tree = lm_mod.cache_specs(cfg, max_slots, self.max_len)
         flat, self.treedef = jax.tree_util.tree_flatten(cache_tree)
@@ -129,6 +198,13 @@ class SecureServingEngine:
                        if SCHEMES[scheme].verify == "layer"
                        else multilevel.SGX_LIKE if SCHEMES[scheme].emulate_tree
                        else multilevel.MGX_LIKE)
+        # Length bucketing is safe when every cache leaf is either paged
+        # (read path zeroes positions >= length) or a length mirror;
+        # recurrent on-chip state (Mamba SSM/conv) would absorb the pad
+        # tokens, so those archs keep exact-length prefill.
+        if prefill_buckets is None:
+            prefill_buckets = not self.onchip_idx
+        self.prefill_buckets = prefill_buckets
 
         # Device state.
         self.pool = kvp.init_pool(self.spec)
@@ -137,7 +213,10 @@ class SecureServingEngine:
         self._ok_accum = jnp.asarray(True)
 
         # Host scheduling state.
-        self.waiting: deque = deque()
+        self.waiting: deque = deque()           # single-tenant FIFO
+        self._tenant_waiting: dict = {}         # tenant idx -> deque
+        self._vtime: dict = {}                  # tenant idx -> virtual time
+        self._rotate_rr = 0
         self.slots: list = [None] * max_slots
         self.free_pages: list = list(range(n_pages))
         self.requests: dict = {}
@@ -145,12 +224,18 @@ class SecureServingEngine:
         self._admit_seq = 0
         self._epoch = 0
         self.tick = 0
+        self._prefill_shapes: set = set()
         self.stats = {"admitted": 0, "preemptions": 0, "decode_steps": 0,
-                      "deferred_checks": 0}
+                      "deferred_checks": 0, "rotations": 0,
+                      "prefill_compiles": 0}
 
         self._decode_fn = jax.jit(self._build_decode_fn())
         self._prefill_fn = jax.jit(self._build_prefill_fn())
         self._writers: dict = {}
+        if registry is not None:
+            # Rotations repair every engine sharing the registry, no
+            # matter which one (or which operator call) triggered them.
+            registry.attach_rotation_hook(self._on_rotation)
 
     # -- traced builders ----------------------------------------------------
 
@@ -167,10 +252,13 @@ class SecureServingEngine:
 
     def _build_decode_fn(self):
         cfg, spec, keys = self.cfg, self.spec, self.keys
+        tenant_mode = self.registry is not None
+        pages_per_slot = self.pages_per_slot
 
-        def decode_fn(params, pool, onchip, page_table, lengths, active,
-                      tokens, epoch):
-            dense, ok = kvp.read_pages(pool, spec, keys, page_table, lengths)
+        def core(params, pool, onchip, page_table, lengths, active, tokens,
+                 epoch, read_ctx, write_ctx):
+            dense, ok = kvp.read_pages(pool, spec, keys, page_table, lengths,
+                                       read_ctx)
             caches = self._merge_cache_leaves(dense, onchip, lengths)
             logits, new_caches = lm_mod.lm_decode(cfg, params, tokens, caches)
             tok = greedy_sample(logits)                    # (S, 1)
@@ -178,7 +266,8 @@ class SecureServingEngine:
             vn = vn_mod.kv_page_vn(epoch)
             new_pool = kvp.write_dirty(
                 pool, spec, keys, page_table,
-                [new_leaves[i] for i in self.paged_idx], lengths, active, vn)
+                [new_leaves[i] for i in self.paged_idx], lengths, active, vn,
+                write_ctx)
             new_onchip = []
             for j, idx in enumerate(self.onchip_idx):
                 leaf = new_leaves[idx]
@@ -187,14 +276,33 @@ class SecureServingEngine:
                 new_onchip.append(jnp.where(keep, leaf, onchip[j]))
             return new_pool, new_onchip, tok, ok
 
+        if not tenant_mode:
+            def decode_fn(params, pool, onchip, page_table, lengths, active,
+                          tokens, epoch):
+                return core(params, pool, onchip, page_table, lengths,
+                            active, tokens, epoch, None, None)
+            return decode_fn
+
+        def decode_fn(params, pool, onchip, page_table, lengths, active,
+                      tokens, epoch, bank, key_idx, owners, key_epochs,
+                      cur_key_idx, cur_epochs):
+            read_ctx = kvp.PageKeyCtx.make(
+                bank, key_idx.reshape(-1),
+                jnp.repeat(owners, pages_per_slot), key_epochs.reshape(-1))
+            write_ctx = kvp.PageKeyCtx.make(bank, cur_key_idx, owners,
+                                            cur_epochs)
+            return core(params, pool, onchip, page_table, lengths, active,
+                        tokens, epoch, read_ctx, write_ctx)
+
         return decode_fn
 
     def _build_prefill_fn(self):
         cfg, max_len = self.cfg, self.max_len
 
-        def prefill_fn(params, tokens):                    # tokens: (1, Lp)
+        def prefill_fn(params, tokens, last_pos):       # tokens: (1, Lp)
             logits, caches = lm_mod.lm_prefill(cfg, params,
-                                               {"tokens": tokens}, max_len)
+                                               {"tokens": tokens}, max_len,
+                                               last_pos=last_pos)
             leaves = jax.tree_util.tree_leaves(caches)
             return (greedy_sample(logits),
                     [leaves[i] for i in self.paged_idx],
@@ -206,17 +314,25 @@ class SecureServingEngine:
         if n_write_pages not in self._writers:
             spec, keys = self.spec, self.keys
 
-            def write(pool, page_ids, paged_leaves, epoch):
-                vn = vn_mod.kv_page_vn(epoch)
-                return kvp.write_prefill(pool, spec, keys, page_ids,
-                                         paged_leaves, n_write_pages, vn)
+            if self.registry is None:
+                def write(pool, page_ids, paged_leaves, epoch):
+                    vn = vn_mod.kv_page_vn(epoch)
+                    return kvp.write_prefill(pool, spec, keys, page_ids,
+                                             paged_leaves, n_write_pages, vn)
+            else:
+                def write(pool, page_ids, paged_leaves, epoch, ctx):
+                    vn = vn_mod.kv_page_vn(epoch)
+                    return kvp.write_prefill(pool, spec, keys, page_ids,
+                                             paged_leaves, n_write_pages, vn,
+                                             ctx)
 
             self._writers[n_write_pages] = jax.jit(write)
         return self._writers[n_write_pages]
 
     # -- public API ---------------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+    def submit(self, prompt, max_new_tokens: int = 16, *,
+               session=None) -> int:
         prompt = [int(t) for t in prompt]
         if not prompt or max_new_tokens < 1:
             raise ValueError("need a non-empty prompt and max_new_tokens>=1")
@@ -229,12 +345,82 @@ class SecureServingEngine:
             raise ValueError(f"request needs up to {worst_pages} pages; pool "
                              f"has {self.n_pages} (per-slot cap "
                              f"{self.pages_per_slot})")
+        tenant = None
+        if self.registry is not None:
+            if session is None:
+                raise PermissionError("multi-tenant engine: submit() needs a "
+                                      "registry session handle")
+            tenant = self.registry.validate(session)
+            if worst_pages > tenant.page_quota:
+                raise ValueError(
+                    f"request needs up to {worst_pages} pages; tenant "
+                    f"{tenant.tenant_id!r} quota is {tenant.page_quota}")
+        elif session is not None:
+            raise ValueError("session handle given but the engine has no "
+                             "tenant registry")
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, prompt, max_new_tokens)
+        req = Request(rid, prompt, max_new_tokens, submit_tick=self.tick)
         self.requests[rid] = req
-        self.waiting.append(req)
+        if tenant is not None:
+            req.tenant_idx = tenant.index
+            if not self._tenant_active(tenant.index):
+                self._activate_vtime(tenant.index)
+            self._tenant_waiting.setdefault(tenant.index,
+                                            deque()).append(req)
+        else:
+            self.waiting.append(req)
         return rid
+
+    def _tenant_active(self, index: int) -> bool:
+        """Tenant has queued or running work (stride-scheduler sense)."""
+        if self._tenant_waiting.get(index):
+            return True
+        return any(s is not None and s.tenant is not None
+                   and s.tenant.index == index for s in self.slots)
+
+    def _activate_vtime(self, index: int) -> None:
+        """Re-anchor an (in)active tenant's virtual time on activation.
+
+        Standard WFQ no-credit-for-idle rule: a tenant entering the
+        backlog starts at max(its own virtual time, the system virtual
+        time), approximated by the minimum virtual time of currently
+        active tenants (or the maximum ever reached when the system is
+        idle).  Without this, a late-arriving tenant would start at 0
+        and monopolize admission until it "caught up" with incumbents.
+        """
+        active = [v for j, v in self._vtime.items()
+                  if j != index and self._tenant_active(j)]
+        if active:
+            floor = min(active)
+        else:
+            floor = max(self._vtime.values(), default=0.0)
+        self._vtime[index] = max(self._vtime.get(index, 0.0), floor)
+
+    def rotate(self, tenant_id: str) -> int:
+        """Live key rotation for one tenant (lazy re-encryption).
+
+        Bumps the tenant's epoch in the registry.  Pages written under
+        the *previous* epoch keep verifying (its keys stay in the
+        bank); each re-encrypts to the new epoch on its next dirty
+        write.  The registry's rotation hooks then run on every
+        attached engine (:meth:`_on_rotation`), preempting slots still
+        holding pages of the epoch that just left the retained window —
+        their KV recomputes under fresh keys on re-admission, so no
+        page ever needs a dropped key.
+        """
+        if self.registry is None:
+            raise ValueError("rotate() needs a tenant registry")
+        return self.registry.rotate(tenant_id)
+
+    def _on_rotation(self, tenant, new_epoch: int) -> None:
+        """Registry rotation hook: preempt slots leaving the window."""
+        oldest_retained = new_epoch - self.registry.retain + 1
+        for i, slot in enumerate(self.slots):
+            if (slot is not None and slot.tenant is tenant
+                    and any(e < oldest_retained for e in slot.page_epochs)):
+                self._preempt(i)
+        self.stats["rotations"] += 1
 
     def step(self) -> list:
         """One scheduler tick: admit, grow/evict, batched decode.
@@ -242,6 +428,12 @@ class SecureServingEngine:
         Returns the requests that finished during this tick.
         """
         self.tick += 1
+        if (self.registry is not None and self.rotate_every
+                and self.tick % self.rotate_every == 0
+                and self.registry.n_tenants):
+            idx = self._rotate_rr % self.registry.n_tenants
+            self._rotate_rr += 1
+            self.rotate(self.registry.by_index(idx).tenant_id)
         finished: list = []
         self._admit(finished)
         self._ensure_growth()
@@ -253,10 +445,15 @@ class SecureServingEngine:
             self._deferred_check()
         return finished
 
-    def run(self, max_ticks: int = 100_000) -> dict:
-        """Drive ticks until every submitted request finished."""
+    def run(self, max_ticks: int = 100_000) -> RunResult:
+        """Drive ticks until every submitted request finished.
+
+        Returns a :class:`RunResult`: ``{rid: Request}`` for finished
+        requests, with per-request latency percentiles (ticks-to-first
+        -token and ticks-per-token) on ``.latency``.
+        """
         for _ in range(max_ticks):
-            if not self.waiting and all(s is None for s in self.slots):
+            if not self._n_waiting() and all(s is None for s in self.slots):
                 break
             self.step()
         else:
@@ -265,8 +462,29 @@ class SecureServingEngine:
             self._deferred_check()
         if not self.verify_every_step and not bool(self._ok_accum):
             raise IntegrityError("accumulated page-MAC verification failed")
-        return {rid: r for rid, r in self.requests.items()
-                if r.state == "finished"}
+        result = RunResult({rid: r for rid, r in self.requests.items()
+                            if r.state == "finished"})
+        result.latency = self.latency_stats()
+        return result
+
+    def latency_stats(self) -> dict:
+        """p50/p95 ticks-to-first-token and ticks-per-token, finished reqs."""
+        ttft, tpt = [], []
+        for r in self.requests.values():
+            if r.state != "finished" or r.first_tick is None:
+                continue
+            ttft.append(r.first_tick - r.submit_tick)
+            if r.done_tick is not None and len(r.generated) > 1:
+                tpt.append((r.done_tick - r.first_tick)
+                           / (len(r.generated) - 1))
+        if not ttft:
+            return {}
+        out = {"p50_ttft_ticks": float(np.percentile(ttft, 50)),
+               "p95_ttft_ticks": float(np.percentile(ttft, 95))}
+        if tpt:
+            out["p50_ticks_per_token"] = float(np.percentile(tpt, 50))
+            out["p95_ticks_per_token"] = float(np.percentile(tpt, 95))
+        return out
 
     def deferred_check(self) -> bool:
         """Model-level deferred MAC over the whole pool (paper Table I)."""
@@ -279,14 +497,23 @@ class SecureServingEngine:
         the delta vs. the ``off`` scheme is the metadata + crypto
         traffic a scheme adds to one batched decode.
         """
-        args = (
+        args = [
             self.params, self.pool, self.onchip,
             jnp.zeros((self.max_slots, self.pages_per_slot), jnp.int32),
             jnp.ones((self.max_slots,), jnp.int32),
             jnp.ones((self.max_slots,), bool),
             jnp.zeros((self.max_slots, 1), jnp.int32),
             jnp.uint32(1),
-        )
+        ]
+        if self.registry is not None:
+            args += [
+                self.registry.bank,
+                jnp.zeros((self.max_slots, self.pages_per_slot), jnp.int32),
+                jnp.zeros((self.max_slots,), jnp.uint32),
+                jnp.zeros((self.max_slots, self.pages_per_slot), jnp.uint32),
+                jnp.zeros((self.max_slots,), jnp.int32),
+                jnp.zeros((self.max_slots,), jnp.uint32),
+            ]
         try:
             cost = self._decode_fn.lower(*args).compile().cost_analysis()
         except Exception:  # noqa: BLE001 - backend-dependent availability
@@ -299,44 +526,122 @@ class SecureServingEngine:
     def n_free_pages(self) -> int:
         return len(self.free_pages)
 
+    def tenant_resident_pages(self, index: int) -> int:
+        """Pool pages currently owned by one tenant's running slots."""
+        return sum(len(s.pages) for s in self.slots
+                   if s is not None and s.tenant is not None
+                   and s.tenant.index == index)
+
     # -- scheduler internals ------------------------------------------------
+
+    def _n_waiting(self) -> int:
+        return len(self.waiting) + sum(len(q) for q in
+                                       self._tenant_waiting.values())
 
     def _next_epoch(self) -> jnp.ndarray:
         self._epoch += 1
         return jnp.uint32(self._epoch)
 
+    # -- admission ----------------------------------------------------------
+
+    def _prefill(self, seq: list):
+        """Run (bucketed) prefill for one request's token sequence."""
+        lp = len(seq)
+        if self.prefill_buckets:
+            padded = seq + [0] * (_bucket_len(lp, self.max_len) - lp)
+        else:
+            padded = seq
+        if len(padded) not in self._prefill_shapes:
+            self._prefill_shapes.add(len(padded))
+            self.stats["prefill_compiles"] += 1
+        return self._prefill_fn(self.params,
+                                jnp.asarray([padded], jnp.int32),
+                                jnp.int32(lp - 1))
+
+    def _admission_pages(self, req: Request) -> int:
+        # +1 so the first decode's write position is always covered.
+        return min(len(req.prompt + req.generated) // self.page_tokens + 1,
+                   self.pages_per_slot)
+
     def _admit(self, finished: list) -> None:
-        while self.waiting and None in self.slots:
-            req = self.waiting[0]
-            seq = req.prompt + req.generated
-            # +1 so the first decode's write position is always covered.
-            n_alloc = min(len(seq) // self.page_tokens + 1,
-                          self.pages_per_slot)
-            if len(self.free_pages) < n_alloc:
+        if self.registry is None:
+            while self.waiting and None in self.slots:
+                req = self.waiting[0]
+                if len(self.free_pages) < self._admission_pages(req):
+                    break
+                self.waiting.popleft()
+                self._admit_one(req, None, finished)
+            return
+        # Weighted-fair (stride) admission across tenant queues: among
+        # tenants whose head request fits (free pages AND page quota),
+        # admit the one with the least virtual time; charge it the
+        # pages it allocated, scaled by 1/weight.  A quota-capped
+        # tenant queues its own work — it never evicts other tenants.
+        while None in self.slots:
+            best = None
+            for idx, queue in self._tenant_waiting.items():
+                if not queue:
+                    continue
+                tenant = self.registry.by_index(idx)
+                n_alloc = self._admission_pages(queue[0])
+                if n_alloc > len(self.free_pages):
+                    continue
+                if self.tenant_resident_pages(idx) + n_alloc > \
+                        tenant.page_quota:
+                    continue
+                vt = self._vtime[idx]
+                if best is None or vt < best[0]:
+                    best = (vt, idx, tenant, n_alloc)
+            if best is None:
                 break
-            self.waiting.popleft()
-            slot_idx = self.slots.index(None)
-            pages = [self.free_pages.pop() for _ in range(n_alloc)]
-            tok, paged_leaves, onchip_leaves = self._prefill_fn(
-                self.params, jnp.asarray([seq], jnp.int32))
-            n_write = _ceil_div(len(seq), self.page_tokens)
-            page_ids = np.full((self.pages_per_slot,),
-                               self.spec.scratch_page, np.int32)
-            page_ids[: len(pages)] = pages
+            _, idx, tenant, n_alloc = best
+            req = self._tenant_waiting[idx].popleft()
+            self._vtime[idx] += n_alloc / tenant.weight
+            self._admit_one(req, tenant, finished)
+
+    def _admit_one(self, req: Request, tenant, finished: list) -> None:
+        seq = req.prompt + req.generated
+        n_alloc = self._admission_pages(req)
+        slot_idx = self.slots.index(None)
+        pages = [self.free_pages.pop() for _ in range(n_alloc)]
+        tok, paged_leaves, onchip_leaves = self._prefill(seq)
+        n_write = _ceil_div(len(seq), self.page_tokens)
+        page_ids = np.full((self.pages_per_slot,),
+                           self.spec.scratch_page, np.int32)
+        page_ids[: len(pages)] = pages
+        if tenant is None:
             self.pool = self._writer(n_write)(
                 self.pool, jnp.asarray(page_ids), paged_leaves,
                 self._next_epoch())
-            for j, idx in enumerate(self.onchip_idx):
-                self.onchip[j] = self.onchip[j].at[:, slot_idx].set(
-                    onchip_leaves[j][:, 0])
-            self._admit_seq += 1
-            self.stats["admitted"] += 1
-            slot = _Slot(req, length=len(seq), pages=pages,
-                         admit_seq=self._admit_seq)
-            self.slots[slot_idx] = slot
-            req.state = "running"
-            req.generated.append(int(tok[0, 0]))
-            self._maybe_finish(slot_idx, finished)
+            page_epochs = []
+        else:
+            epoch = tenant.current_epoch
+            row = self.registry.key_row(tenant.index, epoch)
+            ctx = kvp.PageKeyCtx.make(
+                self.registry.bank,
+                np.full((self.pages_per_slot,), row, np.int32),
+                np.full((self.pages_per_slot,), tenant.index, np.uint32),
+                np.full((self.pages_per_slot,), epoch, np.uint32))
+            self.pool = self._writer(n_write)(
+                self.pool, jnp.asarray(page_ids), paged_leaves,
+                self._next_epoch(), ctx)
+            page_epochs = [epoch] * len(pages)
+        for j, idx in enumerate(self.onchip_idx):
+            self.onchip[j] = self.onchip[j].at[:, slot_idx].set(
+                onchip_leaves[j][:, 0])
+        self._admit_seq += 1
+        self.stats["admitted"] += 1
+        slot = _Slot(req, length=len(seq), pages=pages,
+                     admit_seq=self._admit_seq, tenant=tenant,
+                     page_epochs=page_epochs)
+        self.slots[slot_idx] = slot
+        req.state = "running"
+        req.generated.append(int(tok[0, 0]))
+        if req.first_tick is None:
+            req.first_tick = self.tick
+        self._maybe_finish(slot_idx, finished)
+
+    # -- growth / eviction ---------------------------------------------------
 
     def _ensure_growth(self) -> None:
         order = sorted((i for i, s in enumerate(self.slots) if s is not None),
@@ -347,15 +652,27 @@ class SecureServingEngine:
                 continue
             need = slot.length // self.page_tokens
             while self.slots[i] is not None and len(slot.pages) <= need:
+                tenant = slot.tenant
+                if tenant is not None and \
+                        self.tenant_resident_pages(tenant.index) + 1 > \
+                        tenant.page_quota:
+                    # Over quota: the tenant preempts ITS OWN youngest.
+                    self._preempt(self._pick_victim(tenant))
+                    continue
                 if self.free_pages:
                     slot.pages.append(self.free_pages.pop())
+                    if tenant is not None:
+                        slot.page_epochs.append(tenant.current_epoch)
                     continue
-                self._preempt(self._pick_victim())
+                self._preempt(self._pick_victim(tenant))
 
-    def _pick_victim(self) -> int:
-        """Globally youngest running slot (LIFO preemption, vLLM-style);
-        may be the slot whose growth triggered the eviction."""
-        candidates = [i for i, s in enumerate(self.slots) if s is not None]
+    def _pick_victim(self, tenant=None) -> int:
+        """Youngest running slot (LIFO preemption, vLLM-style) — scoped
+        to ``tenant``'s own slots in multi-tenant mode, so one tenant's
+        memory pressure never evicts another's requests.  May be the
+        slot whose growth triggered the eviction."""
+        candidates = [i for i, s in enumerate(self.slots) if s is not None
+                      and (tenant is None or s.tenant is tenant)]
         return max(candidates, key=lambda i: self.slots[i].admit_seq)
 
     def _preempt(self, idx: int) -> None:
@@ -365,7 +682,10 @@ class SecureServingEngine:
         slot.req.state = "waiting"
         slot.req.n_evictions += 1
         self.stats["preemptions"] += 1
-        self.waiting.appendleft(slot.req)         # preempted go to the front
+        if slot.tenant is not None:               # preempted go to the front
+            self._tenant_waiting[slot.tenant.index].appendleft(slot.req)
+        else:
+            self.waiting.appendleft(slot.req)
 
     def _release(self, idx: int) -> None:
         slot = self.slots[idx]
@@ -379,8 +699,43 @@ class SecureServingEngine:
         hit_eos = (self.eos_id is not None and req.generated
                    and req.generated[-1] == self.eos_id)
         if req.done or hit_eos:
+            req.done_tick = self.tick
             self._release(idx)
             finished.append(req)
+
+    # -- decode --------------------------------------------------------------
+
+    def _tenant_decode_args(self) -> list:
+        """Per-slot/per-page key selections for one decode tick."""
+        s, p = self.max_slots, self.pages_per_slot
+        key_idx = np.zeros((s, p), np.int32)
+        owners = np.zeros((s,), np.uint32)
+        key_epochs = np.zeros((s, p), np.uint32)
+        cur_key_idx = np.zeros((s,), np.int32)
+        cur_epochs = np.zeros((s,), np.uint32)
+        for i, slot in enumerate(self.slots):
+            if slot is None or slot.tenant is None:
+                continue
+            tenant = slot.tenant
+            owners[i] = tenant.index
+            cur_epochs[i] = tenant.current_epoch
+            cur_key_idx[i] = self.registry.key_row(tenant.index,
+                                                   tenant.current_epoch)
+            for j, epoch in enumerate(slot.page_epochs):
+                key_epochs[i, j] = epoch
+                try:
+                    key_idx[i, j] = self.registry.key_row(tenant.index,
+                                                          epoch)
+                except KeyError as e:
+                    # A resident page claiming an epoch its tenant has
+                    # no retained key for is an integrity violation
+                    # (stale-epoch replay / page-table tamper), not a
+                    # scheduling error.
+                    raise IntegrityError(
+                        f"slot {i} page {j}: {e.args[0]}") from e
+        return [self.registry.bank, jnp.asarray(key_idx),
+                jnp.asarray(owners), jnp.asarray(key_epochs),
+                jnp.asarray(cur_key_idx), jnp.asarray(cur_epochs)]
 
     def _decode(self, active_idx: list, finished: list) -> None:
         page_table = np.full((self.max_slots, self.pages_per_slot), -1,
@@ -394,10 +749,12 @@ class SecureServingEngine:
             lengths[i] = slot.length
             active[i] = True
             tokens[i, 0] = slot.req.generated[-1]
-        self.pool, self.onchip, toks, ok = self._decode_fn(
-            self.params, self.pool, self.onchip, jnp.asarray(page_table),
-            jnp.asarray(lengths), jnp.asarray(active), jnp.asarray(tokens),
-            self._next_epoch())
+        args = [self.params, self.pool, self.onchip, jnp.asarray(page_table),
+                jnp.asarray(lengths), jnp.asarray(active),
+                jnp.asarray(tokens), self._next_epoch()]
+        if self.registry is not None:
+            args += self._tenant_decode_args()
+        self.pool, self.onchip, toks, ok = self._decode_fn(*args)
         self.stats["decode_steps"] += 1
         if self.verify_every_step:
             if not bool(ok):
@@ -409,6 +766,12 @@ class SecureServingEngine:
         toks = np.asarray(toks)
         for i in active_idx:
             slot = self.slots[i]
+            if slot.tenant is not None:
+                # The dirty page was just re-encrypted under the
+                # tenant's CURRENT epoch (lazy rotation lands here).
+                dirty = slot.length // self.page_tokens
+                if dirty < len(slot.page_epochs):
+                    slot.page_epochs[dirty] = slot.tenant.current_epoch
             slot.length += 1
             slot.req.generated.append(int(toks[i, 0]))
             self._maybe_finish(i, finished)

@@ -33,6 +33,25 @@ can run through the fused Pallas decrypt+hash kernel
 (:func:`repro.kernels.fused_crypt_mac.ops.secure_read_kernel`) and the
 write path through the ``otp_xor``-based
 :func:`repro.kernels.otp_xor.ops.baes_encrypt_kernel`.
+
+**Multi-tenant pages.**  Every boundary crossing optionally takes a
+:class:`PageKeyCtx`: a stacked key bank (one row per retained
+(tenant, epoch) — see :mod:`repro.tenancy.registry`) plus per-page row
+indices and (tenant, epoch) identities.  With a ctx, each page is
+encrypted/MACed under *its own tenant-epoch keys* (gathered from the
+bank inside the traced computation and applied via ``vmap``), and the
+tenant identity is folded into the RePA tuple twice over:
+
+* the MAC binding's ``fmap`` word carries ``tenant_idx`` and the key
+  epoch alongside the leaf index, and
+* the CTR counter gains the tenant-epoch VN salt (word 0) and a
+  ``tenant_idx ‖ epoch`` word (word 2),
+
+so a page written under tenant A's keys fails verification when read
+under tenant B's — or under a stale epoch — even before the key
+mismatch scrambles the plaintext.  ``ctx=None`` keeps the single-key
+fast path (including the fused-kernel route) bit-identical to the
+single-tenant engine.
 """
 
 from __future__ import annotations
@@ -50,6 +69,7 @@ __all__ = [
     "LeafPageSpec",
     "PageSpec",
     "PagedKVPool",
+    "PageKeyCtx",
     "PAGED_FIELDS",
     "paged_flags",
     "length_flags",
@@ -121,6 +141,38 @@ class PagedKVPool(NamedTuple):
     #                          (n_pages + 1, n_blocks, MAC_BYTES) u8; else ()
     page_vns: jax.Array      # (n_pages + 1,) u32
     pool_mac: jax.Array      # (MAC_BYTES,) u8 — deferred model-level MAC
+
+
+class PageKeyCtx(NamedTuple):
+    """Per-page tenant key selection for one boundary crossing.
+
+    The four ``bank_*`` arrays are the registry's stacked key bank
+    (K rows, one per retained (tenant, epoch)); the three per-page
+    arrays select a row and carry the identity folded into the RePA
+    binding.  All seven are ordinary traced arrays, so the same
+    compiled step serves any tenant mix / post-rotation key state.
+    """
+
+    bank_key: jax.Array          # (K, 16) u8 cipher keys
+    bank_round_keys: jax.Array   # (K, 11, 16) u8 schedules
+    bank_hash_key: jax.Array     # (K, n_lanes) u32 NH lanes
+    bank_salt: jax.Array         # (K,) u32 CTR-counter salts
+    key_idx: jax.Array           # (N,) i32 bank row per page
+    owners: jax.Array            # (N,) u32 tenant index per page
+    epochs: jax.Array            # (N,) u32 key epoch per page
+
+    @classmethod
+    def make(cls, bank, key_idx, owners, epochs) -> "PageKeyCtx":
+        """Build from a registry ``KeyBank`` + per-page selections."""
+        return cls(bank.key, bank.round_keys, bank.hash_key, bank.salt,
+                   jnp.asarray(key_idx, jnp.int32),
+                   jnp.asarray(owners, jnp.uint32),
+                   jnp.asarray(epochs, jnp.uint32))
+
+    def take(self, n: int) -> "PageKeyCtx":
+        """Ctx for the first ``n`` pages (static prefix slice)."""
+        return self._replace(key_idx=self.key_idx[:n],
+                             owners=self.owners[:n], epochs=self.epochs[:n])
 
 
 # ---------------------------------------------------------------------------
@@ -247,40 +299,87 @@ def _block_pa(spec: PageSpec, leaf: LeafPageSpec,
             + blk[None, :])
 
 
+def _tenant_words(ctx: PageKeyCtx, per_page: int):
+    """Per-entry (salt, tenant ‖ epoch) u32 words, repeated ``per_page``."""
+    salts = jnp.repeat(ctx.bank_salt[ctx.key_idx], per_page)
+    tenant = jnp.repeat((ctx.owners << jnp.uint32(16))
+                        | (ctx.epochs & jnp.uint32(0xFFFF)), per_page)
+    return salts, tenant
+
+
 def _block_counters(spec: PageSpec, leaf: LeafPageSpec, page_ids: jax.Array,
-                    vns: jax.Array) -> jax.Array:
-    """PA||VN counter words per optBlk: (N * n_blocks, 4) u32."""
+                    vns: jax.Array,
+                    ctx: PageKeyCtx | None = None) -> jax.Array:
+    """PA||VN counter words per optBlk: (N * n_blocks, 4) u32.
+
+    With a tenant ctx, word 0 carries the tenant-epoch VN salt and
+    word 2 the ``tenant_idx ‖ epoch`` identity, so CTR streams never
+    collide across tenants or epochs even at equal (PA, VN).
+    """
     pa = _block_pa(spec, leaf, page_ids).reshape(-1)
     vn_col = jnp.repeat(vns.astype(jnp.uint32), leaf.n_blocks)
-    zeros = jnp.zeros_like(pa)
-    return jnp.stack([zeros, pa, zeros, vn_col], axis=-1)
+    if ctx is None:
+        zeros = jnp.zeros_like(pa)
+        return jnp.stack([zeros, pa, zeros, vn_col], axis=-1)
+    salts, tenant = _tenant_words(ctx, leaf.n_blocks)
+    return jnp.stack([salts, pa, tenant, vn_col], axis=-1)
 
 
 def _block_binding(spec: PageSpec, leaf: LeafPageSpec, page_ids: jax.Array,
-                   vns: jax.Array) -> mac.Binding:
-    """MAC binding tuple for every optBlk of N pages (flattened)."""
+                   vns: jax.Array,
+                   ctx: PageKeyCtx | None = None) -> mac.Binding:
+    """MAC binding tuple for every optBlk of N pages (flattened).
+
+    With a tenant ctx the ``fmap`` word is extended to
+    ``leaf_idx | tenant_idx << 8 | key_epoch << 16`` — the RePA tuple
+    then binds each block MAC to its owner and key epoch, so relocating
+    a page across tenants (or replaying a stale-epoch page) breaks the
+    binding independently of the key mismatch.
+    """
     n = page_ids.shape[0]
     bb = spec.cfg.block_bytes
     blocks_per_layer = leaf.lp_bytes // bb
     blk = jnp.arange(leaf.n_blocks, dtype=jnp.uint32)
     layer = jnp.uint32(leaf.base_layer) + blk // jnp.uint32(blocks_per_layer)
     pa = _block_pa(spec, leaf, page_ids).reshape(-1)
+    fmap = jnp.uint32(leaf.leaf_idx)
+    if ctx is not None:
+        fmap = jnp.repeat(
+            fmap | (ctx.owners << jnp.uint32(8))
+            | ((ctx.epochs & jnp.uint32(0xFFF)) << jnp.uint32(16)),
+            leaf.n_blocks)
     return mac.Binding.make(
         pa,
         jnp.repeat(vns.astype(jnp.uint32), leaf.n_blocks),
         jnp.tile(layer, n),
-        jnp.uint32(leaf.leaf_idx),
+        fmap,
         jnp.tile(blk, n))
 
 
 def _crypt(spec: PageSpec, leaf: LeafPageSpec, buf: jax.Array,
-           page_ids: jax.Array, vns: jax.Array, keys) -> jax.Array:
-    """XOR-crypt (enc == dec) page payloads.  buf: (N, page_bytes) u8."""
+           page_ids: jax.Array, vns: jax.Array, keys,
+           ctx: PageKeyCtx | None = None) -> jax.Array:
+    """XOR-crypt (enc == dec) page payloads.  buf: (N, page_bytes) u8.
+
+    ``ctx=None``: every page under the engine-wide ``keys``.  With a
+    ctx, each page's keys are gathered from the bank row it selects and
+    the crypt is vmapped over pages (per-page key schedules).
+    """
     cfg = spec.cfg
     if cfg.name == "off":
         return buf
     if cfg.baes:
-        counters = _block_counters(spec, leaf, page_ids, vns)
+        counters = _block_counters(spec, leaf, page_ids, vns, ctx)
+        if ctx is not None:
+            rks = ctx.bank_round_keys[ctx.key_idx]         # (N, 11, 16)
+            kks = ctx.bank_key[ctx.key_idx]                # (N, 16)
+            per_page = counters.reshape(-1, leaf.n_blocks, 4)
+
+            def one(buf1, rk1, kk1, ctr1):
+                return baes.baes_encrypt(buf1, rk1, ctr1,
+                                         block_bytes=cfg.block_bytes, key=kk1)
+
+            return jax.vmap(one)(buf, rks, kks, per_page)
         narrow = cfg.block_bytes // SEGMENT_BYTES <= 11
         if spec.use_kernel and narrow:
             from repro.kernels.otp_xor.ops import baes_encrypt_kernel
@@ -296,21 +395,43 @@ def _crypt(spec: PageSpec, leaf: LeafPageSpec, buf: jax.Array,
           + page_ids.astype(jnp.uint32)[:, None] * jnp.uint32(segs_per_page)
           + jnp.arange(segs_per_page, dtype=jnp.uint32)[None, :]).reshape(-1)
     vn_col = jnp.repeat(vns.astype(jnp.uint32), segs_per_page)
-    zeros = jnp.zeros_like(pa)
-    counters = jnp.stack([zeros, pa, zeros, vn_col], axis=-1)
-    otp = ctr.ctr_keystream(keys.round_keys, counters)
-    return (buf.reshape(-1, SEGMENT_BYTES) ^ otp).reshape(buf.shape)
+    if ctx is None:
+        zeros = jnp.zeros_like(pa)
+        counters = jnp.stack([zeros, pa, zeros, vn_col], axis=-1)
+        otp = ctr.ctr_keystream(keys.round_keys, counters)
+        return (buf.reshape(-1, SEGMENT_BYTES) ^ otp).reshape(buf.shape)
+    salts, tenant = _tenant_words(ctx, segs_per_page)
+    counters = jnp.stack([salts, pa, tenant, vn_col], axis=-1)
+    per_page = counters.reshape(-1, segs_per_page, 4)
+    otp = jax.vmap(ctr.ctr_keystream)(
+        ctx.bank_round_keys[ctx.key_idx], per_page)
+    return (buf.reshape(-1, segs_per_page, SEGMENT_BYTES) ^ otp).reshape(
+        buf.shape)
 
 
 def _page_block_macs(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
-                     page_ids: jax.Array, vns: jax.Array, keys) -> jax.Array:
+                     page_ids: jax.Array, vns: jax.Array, keys,
+                     ctx: PageKeyCtx | None = None) -> jax.Array:
     """optBlk MACs of N ciphertext pages: (N, n_blocks, MAC_BYTES) u8."""
     cfg = spec.cfg
-    binding = _block_binding(spec, leaf, page_ids, vns)
+    binding = _block_binding(spec, leaf, page_ids, vns, ctx)
+    n = page_ids.shape[0]
+    if ctx is not None:
+        per_page = mac.Binding(
+            *(jnp.broadcast_to(f, (n * leaf.n_blocks,))
+              .reshape(n, leaf.n_blocks) for f in binding))
+
+        def one(ct1, binding1, hk1, rk1):
+            return mac.block_macs(ct1.reshape(-1, cfg.block_bytes), binding1,
+                                  hash_key_u32=hk1, round_keys=rk1,
+                                  engine=cfg.mac_engine)
+
+        return jax.vmap(one)(ct, per_page, ctx.bank_hash_key[ctx.key_idx],
+                             ctx.bank_round_keys[ctx.key_idx])
     blocks = ct.reshape(-1, cfg.block_bytes)
     macs = mac.block_macs(blocks, binding, hash_key_u32=keys.hash_key,
                           round_keys=keys.round_keys, engine=cfg.mac_engine)
-    return macs.reshape(page_ids.shape[0], leaf.n_blocks, mac.MAC_BYTES)
+    return macs.reshape(n, leaf.n_blocks, mac.MAC_BYTES)
 
 
 def _fused_read(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
@@ -383,12 +504,14 @@ def _dense_to_pages(spec: PageSpec, leaf: LeafPageSpec,
 
 
 def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
-               lengths: jax.Array):
+               lengths: jax.Array, ctx: PageKeyCtx | None = None):
     """Gather + decrypt + verify the paged leaves for a batched decode.
 
     Args:
       page_table: (max_slots, pages_per_slot) int32; -1 = unallocated.
       lengths: (max_slots,) int32 valid tokens per slot.
+      ctx: optional per-page tenant keys (N = max_slots *
+        pages_per_slot entries, row-major over the page table).
 
     Returns ``(dense_leaves, ok)`` — one dense (steps, S, max_len,
     *rest) array per paged leaf, and the AND of every gated MAC check
@@ -408,19 +531,21 @@ def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
     for li, leaf in enumerate(spec.leaves):
         ct = pool.cts[li][flat_ids].reshape(s, p, leaf.page_bytes)
         need_macs = cfg.verify != "none"
-        if need_macs and _kernel_read_ok(spec):
+        if need_macs and ctx is None and _kernel_read_ok(spec):
             pt, macs = _fused_read(spec, leaf, ct.reshape(-1, leaf.page_bytes),
                                    flat_ids, vns, keys)
             pt = pt.reshape(s, p, leaf.page_bytes)
             macs = macs.reshape(s, p, leaf.n_blocks, mac.MAC_BYTES)
         else:
             pt = _crypt(spec, leaf, ct.reshape(-1, leaf.page_bytes),
-                        flat_ids, vns, keys).reshape(s, p, leaf.page_bytes)
+                        flat_ids, vns, keys, ctx).reshape(s, p,
+                                                          leaf.page_bytes)
             macs = None
             if need_macs:
                 macs = _page_block_macs(
                     spec, leaf, ct.reshape(-1, leaf.page_bytes), flat_ids,
-                    vns, keys).reshape(s, p, leaf.n_blocks, mac.MAC_BYTES)
+                    vns, keys, ctx).reshape(s, p, leaf.n_blocks,
+                                            mac.MAC_BYTES)
         if cfg.verify == "block":
             stored = pool.block_macs[li][flat_ids].reshape(macs.shape)
             ok = ok & jnp.all((macs == stored) | ~touched[..., None, None])
@@ -436,7 +561,8 @@ def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
 
 
 def write_pages(pool: PagedKVPool, spec: PageSpec, keys, page_ids: jax.Array,
-                leaf_pages: list, vn, real_mask: jax.Array) -> PagedKVPool:
+                leaf_pages: list, vn, real_mask: jax.Array,
+                ctx: PageKeyCtx | None = None) -> PagedKVPool:
     """Encrypt + MAC N pages and scatter them into the pool.
 
     Args:
@@ -447,6 +573,7 @@ def write_pages(pool: PagedKVPool, spec: PageSpec, keys, page_ids: jax.Array,
       vn: scalar uint32 version number for this write event.
       real_mask: (N,) bool — writes that land on real (non-scratch)
         pages and therefore participate in the deferred pool MAC.
+      ctx: optional per-page tenant keys (N entries).
     """
     cfg = spec.cfg
     n = page_ids.shape[0]
@@ -456,10 +583,10 @@ def write_pages(pool: PagedKVPool, spec: PageSpec, keys, page_ids: jax.Array,
     new_block_macs = list(pool.block_macs)
     for li, leaf in enumerate(spec.leaves):
         buf = _dense_to_pages(spec, leaf, leaf_pages[li])
-        ct = _crypt(spec, leaf, buf, page_ids, vns, keys)
+        ct = _crypt(spec, leaf, buf, page_ids, vns, keys, ctx)
         new_cts.append(pool.cts[li].at[page_ids].set(ct))
         if cfg.verify != "none":
-            macs = _page_block_macs(spec, leaf, ct, page_ids, vns, keys)
+            macs = _page_block_macs(spec, leaf, ct, page_ids, vns, keys, ctx)
             if cfg.verify == "block":
                 new_block_macs[li] = pool.block_macs[li].at[page_ids].set(macs)
             agg = agg ^ mac.xor_aggregate(macs, axis=1)
@@ -476,7 +603,7 @@ def write_pages(pool: PagedKVPool, spec: PageSpec, keys, page_ids: jax.Array,
 
 def write_prefill(pool: PagedKVPool, spec: PageSpec, keys,
                   page_ids: jax.Array, dense_leaves: list, n_write_pages: int,
-                  vn) -> PagedKVPool:
+                  vn, ctx: PageKeyCtx | None = None) -> PagedKVPool:
     """Protect the first ``n_write_pages`` pages of one freshly-prefilled
     slot.  ``dense_leaves``: per paged leaf, (steps, 1, max_len, *rest).
     """
@@ -488,17 +615,24 @@ def write_prefill(pool: PagedKVPool, spec: PageSpec, keys,
         leaf_pages.append(jnp.moveaxis(pages, 1, 0))   # (N, steps, ptok, rest)
     ids = page_ids[:n_write_pages]
     real = ids < spec.n_pages
-    return write_pages(pool, spec, keys, ids, leaf_pages, vn, real)
+    if ctx is not None:
+        ctx = ctx.take(n_write_pages)
+    return write_pages(pool, spec, keys, ids, leaf_pages, vn, real, ctx)
 
 
 def write_dirty(pool: PagedKVPool, spec: PageSpec, keys,
                 page_table: jax.Array, dense_leaves: list,
-                lengths: jax.Array, active: jax.Array, vn) -> PagedKVPool:
+                lengths: jax.Array, active: jax.Array, vn,
+                ctx: PageKeyCtx | None = None) -> PagedKVPool:
     """Re-encrypt + re-MAC the ONE dirty page per active slot.
 
     ``lengths`` are the pre-increment lengths: the decode step just
     wrote its token at position ``length``, so the dirty page is
     ``length // page_tokens``.  Inactive slots write to the scratch row.
+
+    ``ctx`` (one entry per slot) carries each slot's *current* tenant
+    epoch — this is where lazy rotation lands: a page's next dirty
+    write re-encrypts it under the new epoch keys.
     """
     s = page_table.shape[0]
     ptok = spec.page_tokens
@@ -512,7 +646,7 @@ def write_dirty(pool: PagedKVPool, spec: PageSpec, keys,
         idx = tok_idx.reshape((1, s, ptok) + (1,) * len(leaf.rest))
         page = jnp.take_along_axis(dense_leaf, idx, axis=2)
         leaf_pages.append(jnp.moveaxis(page, 0, 1))    # (S, steps, ptok, rest)
-    return write_pages(pool, spec, keys, pid, leaf_pages, vn, real)
+    return write_pages(pool, spec, keys, pid, leaf_pages, vn, real, ctx)
 
 
 def deferred_pool_check(pool: PagedKVPool, spec: PageSpec) -> jax.Array:

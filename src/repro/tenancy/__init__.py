@@ -1,0 +1,16 @@
+"""Multi-tenant key management for the secure serving engine.
+
+`keys`     — hierarchical AES-based KDF: root key -> per-tenant master
+             -> purpose-split {encrypt, MAC, VN} keys -> numbered epoch
+             keys, with explicit epoch rotation.
+`registry` — tenant registration, per-tenant page quotas / weights,
+             session handles, and the device-resident key bank the
+             serving data plane gathers per-page keys from.
+"""
+
+from repro.tenancy.keys import KeyHierarchy, TenantKeySet
+from repro.tenancy.registry import (KeyBank, SessionHandle, Tenant,
+                                    TenantRegistry)
+
+__all__ = ["KeyHierarchy", "TenantKeySet", "KeyBank", "SessionHandle",
+           "Tenant", "TenantRegistry"]

@@ -1,0 +1,203 @@
+"""Tenant registry: identities, quotas, sessions, and the key bank.
+
+The registry is the control plane of the tenancy subsystem:
+
+* **registration** assigns each tenant a dense index, a scheduling
+  weight, and a page quota (the hard cap on its resident KV pages);
+* **session handles** are the capability requests must carry into
+  :meth:`repro.serve.engine.SecureServingEngine.submit` — an opaque
+  token bound to a tenant, revocable without touching key material;
+* the **key bank** is the device-resident view of every retained
+  (tenant, epoch) data-plane key set.  The jitted decode step gathers
+  per-page keys from the bank by row index, so one traced computation
+  serves pages of many tenants and epochs at once;
+* **rotation** bumps a tenant's epoch: the new epoch's keys land in
+  the bank row of the epoch leaving the retained window, the dropped
+  epoch's host-side key material is destroyed, and pages still
+  encrypted under retained older epochs keep verifying until their
+  next dirty write re-encrypts them (lazy rotation).
+
+Bank row layout: ``row(tenant, epoch) = tenant.index * retain +
+epoch % retain`` — with the default ``retain=2`` each tenant owns two
+rows that current/previous epochs ping-pong between.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tenancy.keys import KeyHierarchy
+
+__all__ = ["KeyBank", "SessionHandle", "Tenant", "TenantRegistry"]
+
+
+class KeyBank(NamedTuple):
+    """Stacked per-row data-plane key material (device arrays).
+
+    Rows indexed by :meth:`TenantRegistry.key_row`; unregistered rows
+    are zero (any page claiming them fails its MAC gate).
+    """
+
+    key: jnp.ndarray         # (K, 16) u8 cipher keys
+    round_keys: jnp.ndarray  # (K, 11, 16) u8 schedules
+    hash_key: jnp.ndarray    # (K, n_lanes) u32 NH lanes
+    salt: jnp.ndarray        # (K,) u32 CTR-counter salts
+
+
+class SessionHandle(NamedTuple):
+    """Capability a request carries: who it is + a revocable token."""
+
+    tenant_id: str
+    index: int
+    token: int
+
+
+@dataclasses.dataclass
+class Tenant:
+    tenant_id: str
+    index: int
+    weight: float
+    page_quota: int
+    keyset: "object"         # tenancy.keys.TenantKeySet
+
+    @property
+    def current_epoch(self) -> int:
+        return self.keyset.current_epoch
+
+
+class TenantRegistry:
+    """Control plane over a :class:`~repro.tenancy.keys.KeyHierarchy`."""
+
+    def __init__(self, hierarchy: Optional[KeyHierarchy] = None, *,
+                 max_tenants: int = 8, retain: int = 2,
+                 default_quota: Optional[int] = None):
+        if retain < 2:
+            raise ValueError("retain < 2 would drop the previous epoch key "
+                             "lazy rotation still needs for reads")
+        self.hierarchy = hierarchy or KeyHierarchy(0)
+        self.max_tenants = max_tenants
+        self.retain = retain
+        self.default_quota = default_quota
+        self.tenants: dict[str, Tenant] = {}
+        self._by_index: list[Tenant] = []
+        self._sessions: dict[int, str] = {}
+        self._next_token = 0
+        self._rotation_hooks: list = []
+        k = max_tenants * retain
+        lanes = self.hierarchy.nh_lanes
+        self._bank = KeyBank(
+            key=jnp.zeros((k, 16), jnp.uint8),
+            round_keys=jnp.zeros((k, 11, 16), jnp.uint8),
+            hash_key=jnp.zeros((k, lanes), jnp.uint32),
+            salt=jnp.zeros((k,), jnp.uint32))
+
+    # -- registration / sessions --------------------------------------------
+
+    def register(self, tenant_id: str, *, weight: float = 1.0,
+                 page_quota: Optional[int] = None) -> Tenant:
+        if tenant_id in self.tenants:
+            raise ValueError(f"tenant {tenant_id!r} already registered")
+        if len(self._by_index) >= self.max_tenants:
+            raise ValueError(f"registry full ({self.max_tenants} tenants)")
+        if weight <= 0:
+            raise ValueError("tenant weight must be positive")
+        quota = page_quota if page_quota is not None else self.default_quota
+        tenant = Tenant(tenant_id=tenant_id, index=len(self._by_index),
+                        weight=weight,
+                        page_quota=quota if quota is not None else 1 << 30,
+                        keyset=self.hierarchy.derive_tenant(tenant_id))
+        self.tenants[tenant_id] = tenant
+        self._by_index.append(tenant)
+        self._install_epoch(tenant, tenant.current_epoch)
+        return tenant
+
+    def open_session(self, tenant_id: str) -> SessionHandle:
+        tenant = self.tenants[tenant_id]
+        token = self._next_token
+        self._next_token += 1
+        self._sessions[token] = tenant_id
+        return SessionHandle(tenant_id, tenant.index, token)
+
+    def revoke(self, handle: SessionHandle) -> None:
+        self._sessions.pop(handle.token, None)
+
+    def validate(self, handle: SessionHandle) -> Tenant:
+        if self._sessions.get(handle.token) != handle.tenant_id:
+            raise PermissionError(
+                f"invalid or revoked session for tenant {handle.tenant_id!r}")
+        tenant = self.tenants[handle.tenant_id]
+        if tenant.index != handle.index:
+            raise PermissionError("session handle/tenant index mismatch")
+        return tenant
+
+    def by_index(self, index: int) -> Tenant:
+        return self._by_index[index]
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self._by_index)
+
+    # -- key bank / rotation -------------------------------------------------
+
+    @property
+    def bank(self) -> KeyBank:
+        return self._bank
+
+    def key_row(self, index: int, epoch: int) -> int:
+        """Bank row for (tenant index, epoch); KeyError outside retention."""
+        tenant = self._by_index[index]
+        if not (tenant.current_epoch - self.retain < epoch
+                <= tenant.current_epoch):
+            raise KeyError(
+                f"tenant {tenant.tenant_id!r}: epoch {epoch} outside the "
+                f"retained window (current {tenant.current_epoch}, "
+                f"retain {self.retain})")
+        return index * self.retain + epoch % self.retain
+
+    def attach_rotation_hook(self, hook) -> None:
+        """Register ``hook(tenant, new_epoch)`` to run after rotations.
+
+        Every serving engine built on this registry attaches one so
+        that a rotation — no matter which engine (or operator) triggers
+        it — lets *all* engines preempt slots whose pages fall out of
+        the retained key window.  The registry holds a strong reference
+        to each hook, so its lifetime bounds the engines'.
+        """
+        self._rotation_hooks.append(hook)
+
+    def rotate(self, tenant_id: str) -> int:
+        """Bump ``tenant_id``'s epoch (live rotation).
+
+        The new epoch's keys overwrite the bank row of the epoch that
+        just left the retained window, whose host-side material is
+        destroyed.  Pages written under the *previous* epoch keep
+        verifying (its keys are retained) until their next dirty write
+        re-encrypts them under the new epoch.  Attached rotation hooks
+        run last, so every engine sharing this registry reacts.
+        """
+        tenant = self.tenants[tenant_id]
+        new_epoch = tenant.keyset.rotate()
+        tenant.keyset.drop_before(new_epoch - self.retain + 1)
+        self._install_epoch(tenant, new_epoch)
+        for hook in self._rotation_hooks:
+            hook(tenant, new_epoch)
+        return new_epoch
+
+    def keys_for(self, index: int, epoch: int):
+        """Host-side ``SecureKeys`` for (tenant index, epoch)."""
+        return self._by_index[index].keyset.epoch_keys(epoch)
+
+    def _install_epoch(self, tenant: Tenant, epoch: int) -> None:
+        row = self.key_row(tenant.index, epoch)
+        keys = tenant.keyset.epoch_keys(epoch)
+        salt = tenant.keyset.epoch_salt(epoch)
+        self._bank = KeyBank(
+            key=self._bank.key.at[row].set(keys.key),
+            round_keys=self._bank.round_keys.at[row].set(keys.round_keys),
+            hash_key=self._bank.hash_key.at[row].set(
+                keys.hash_key[: self._bank.hash_key.shape[1]]),
+            salt=self._bank.salt.at[row].set(np.uint32(salt)))

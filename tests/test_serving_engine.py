@@ -214,6 +214,47 @@ class TestTamper:
         assert not eng.deferred_check()
 
 
+class TestPrefillBuckets:
+    def test_bucketing_is_token_identical_and_caps_compiles(self, smoke,
+                                                            prompts):
+        exact = _engine(smoke, scheme="seda", prefill_buckets=False)
+        rids = [exact.submit(p, max_new_tokens=5) for p in prompts]
+        want = [exact.run()[r].generated for r in rids]
+        assert exact.stats["prefill_compiles"] == 3   # one per length
+
+        bucketed = _engine(smoke, scheme="seda")      # buckets on (default)
+        assert bucketed.prefill_buckets
+        rids = [bucketed.submit(p, max_new_tokens=5) for p in prompts]
+        done = bucketed.run()
+        assert [done[r].generated for r in rids] == want
+        # Lengths 5 and 7 share the 8-bucket; 9 rides the 16-bucket.
+        assert bucketed.stats["prefill_compiles"] == 2
+
+    def test_power_of_two_bucket_capped_at_max_len(self, smoke):
+        from repro.serve.engine import _bucket_len
+        assert _bucket_len(5, 16) == 8
+        assert _bucket_len(8, 16) == 8
+        assert _bucket_len(9, 16) == 16
+        assert _bucket_len(9, 12) == 12
+
+
+class TestLatencyStats:
+    def test_run_result_carries_percentiles(self, smoke, prompts):
+        eng = _engine(smoke, scheme="off")
+        rids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+        done = eng.run()
+        lat = done.latency
+        assert set(lat) == {"p50_ttft_ticks", "p95_ttft_ticks",
+                            "p50_ticks_per_token", "p95_ticks_per_token"}
+        assert lat["p50_ttft_ticks"] >= 0
+        assert lat["p95_ttft_ticks"] >= lat["p50_ttft_ticks"]
+        assert lat["p50_ticks_per_token"] > 0
+        for rid in rids:
+            req = done[rid]
+            assert req.first_tick is not None
+            assert req.done_tick >= req.first_tick >= req.submit_tick
+
+
 class TestPoolUnit:
     """kv_pages roundtrip without a model in the loop."""
 
