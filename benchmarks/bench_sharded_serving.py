@@ -1,0 +1,157 @@
+"""Sharded secure serving: cluster throughput + shard balance.
+
+Sweeps the cluster engine's shard axis {1, 2, 4} across protection
+schemes, reporting
+
+* steady-state decode throughput (tokens/s, compile excluded) — every
+  shard's jitted decode is dispatched before any is collected, so the
+  per-tick device work overlaps;
+* per-shard page occupancy (mean + peak over ticks) — how well
+  least-loaded routing with tenant affinity balances the pools;
+* scheduler counters (migrations, preemptions) and p50/p95/p99 latency
+  percentiles.
+
+Sharding on one host needs forced CPU devices; the module sets
+``--xla_force_host_platform_device_count`` before jax initializes
+(the CI perf-smoke job also exports it).  Standalone JSON mode::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python benchmarks/bench_sharded_serving.py \
+        --shard-counts 1,2 --gen-len 6 --json results.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+if __name__ == "__main__" and "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4"
+                               ).strip()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.core.secure_exec import SCHEMES  # noqa: E402
+from repro.models import lm as lm_mod  # noqa: E402
+from repro.models.layers import init_params  # noqa: E402
+from repro.serve.cluster import ClusterEngine  # noqa: E402
+
+DEFAULT_SHARDS = (1, 2, 4)
+
+
+def _measure(arch, cfg, params, scheme: str, shards: int, *, batch: int,
+             page_tokens: int, pages_per_slot: int, gen_len: int,
+             prompt_len: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    per_shard = -(-batch // shards)
+    cluster = ClusterEngine(
+        arch, cfg, params, shards=shards, scheme=scheme,
+        max_slots=per_shard, page_tokens=page_tokens,
+        pages_per_slot=pages_per_slot)
+    for _ in range(batch):
+        prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
+        cluster.submit(prompt, max_new_tokens=gen_len)
+    cluster.step()                  # admission + first decode (compiles)
+    occ = [cluster.sharded.occupancy()]
+    t0 = time.perf_counter()
+    steps = 0
+    while cluster._busy():
+        cluster.step()
+        occ.append(cluster.sharded.occupancy())
+        steps += 1
+    dt = time.perf_counter() - t0
+    occ_arr = np.asarray(occ, np.float64)
+    stats = cluster.engine_stats
+    return {
+        "scheme": scheme,
+        "shards": shards,
+        "decode_steps_timed": steps,
+        "tok_per_s": batch * steps / max(dt, 1e-9),
+        "us_per_step": dt / max(steps, 1) * 1e6,
+        "occupancy_mean": occ_arr.mean(axis=0).tolist(),
+        "occupancy_peak": occ_arr.max(axis=0).tolist(),
+        "migrations": cluster.stats["migrations"],
+        "preemptions": stats["preemptions"],
+        "root_mac_ok": cluster.deferred_check(),
+        "latency": cluster.run().latency,
+    }
+
+
+def collect(schemes=tuple(SCHEMES), shard_counts=DEFAULT_SHARDS, *,
+            arch_name: str = "minitron-4b", batch: int = 4,
+            page_tokens: int = 8, pages_per_slot: int = 4,
+            gen_len: int = 8, prompt_len: int = 9) -> list:
+    arch = get_arch(arch_name)
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    n_dev = jax.local_device_count()
+    results = []
+    for shards in shard_counts:
+        for scheme in schemes:
+            r = _measure(arch, cfg, params, scheme, shards, batch=batch,
+                         page_tokens=page_tokens,
+                         pages_per_slot=pages_per_slot, gen_len=gen_len,
+                         prompt_len=prompt_len)
+            r["devices"] = min(shards, n_dev)
+            results.append(r)
+    return results
+
+
+def run() -> list:
+    """benchmarks.run suite hook: CSV rows for a reduced sweep."""
+    rows = []
+    for r in collect(schemes=("off", "seda", "mgx64"), shard_counts=(1, 2),
+                     gen_len=6):
+        occ = ";".join(f"{o:.1f}" for o in r["occupancy_peak"])
+        rows.append({
+            "name": f"sharded_{r['scheme']}_s{r['shards']}",
+            "us_per_call": r["us_per_step"],
+            "derived": (f"tok/s={r['tok_per_s']:.1f} peak_occ={occ} "
+                        f"migrations={r['migrations']}"),
+        })
+    return rows
+
+
+def main(argv=None) -> list:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="minitron-4b")
+    ap.add_argument("--schemes", default=",".join(SCHEMES))
+    ap.add_argument("--shard-counts",
+                    default=",".join(map(str, DEFAULT_SHARDS)))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--pages-per-slot", type=int, default=4)
+    ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=9)
+    ap.add_argument("--json", default=None, help="write results to this file")
+    args = ap.parse_args(argv)
+
+    results = collect(
+        schemes=tuple(args.schemes.split(",")),
+        shard_counts=tuple(int(s) for s in args.shard_counts.split(",")),
+        arch_name=args.arch, batch=args.batch, page_tokens=args.page_tokens,
+        pages_per_slot=args.pages_per_slot, gen_len=args.gen_len,
+        prompt_len=args.prompt_len)
+    for r in results:
+        occ = "/".join(f"{o:.1f}" for o in r["occupancy_mean"])
+        print(f"[sharded-bench] scheme={r['scheme']:<8} "
+              f"shards={r['shards']:<2} devices={r['devices']} "
+              f"tok/s={r['tok_per_s']:9.1f} occ={occ} "
+              f"migrations={r['migrations']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "sharded_serving",
+                       "device_count": jax.local_device_count(),
+                       "results": results}, f, indent=2)
+        print(f"[sharded-bench] wrote {args.json}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

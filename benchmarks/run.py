@@ -14,7 +14,8 @@ import traceback
 from benchmarks import (bench_area_power, bench_crypt_kernels,
                         bench_memory_traffic, bench_multi_tenant,
                         bench_performance, bench_secure_serving,
-                        bench_secure_step, bench_table3)
+                        bench_secure_step, bench_sharded_serving,
+                        bench_table3)
 
 SUITES = {
     "fig4_area_power": bench_area_power,
@@ -25,6 +26,7 @@ SUITES = {
     "secure_step": bench_secure_step,
     "secure_serving": bench_secure_serving,
     "multi_tenant_serving": bench_multi_tenant,
+    "sharded_serving": bench_sharded_serving,
 }
 
 

@@ -25,24 +25,62 @@ scheduler ticks (round-robin), exercising live lazy rotation::
     PYTHONPATH=src python -m repro.launch.serve --arch minitron-4b \
         --smoke --engine paged --scheme seda --batch 8 --gen-len 16 \
         --tenants 4 --rotate-every 8
+
+``--shards N`` serves through the cluster engine instead: one shard
+engine (and one paged pool, shard-bound RePA/CTR identity included)
+per device, least-loaded routing with tenant affinity, and secure page
+migration under imbalance.  On CPU the N devices are conjured via
+``--xla_force_host_platform_device_count`` (set below, before jax
+initializes)::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch minitron-4b \
+        --smoke --engine paged --scheme seda --batch 8 --gen-len 16 \
+        --shards 2
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+# Must run before jax initializes its backends: a --shards run on a
+# single-device host forces that many CPU devices into existence.
+# Both argparse spellings (--shards N and --shards=N) must match here.
+def _sniff_shards(argv) -> int:
+    n = 1
+    for i, arg in enumerate(argv):
+        val = None
+        if arg == "--shards" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif arg.startswith("--shards="):
+            val = arg.split("=", 1)[1]
+        if val is not None:
+            try:
+                n = int(val)
+            except ValueError:
+                pass
+    return n
 
-from repro.checkpoint.secure_ckpt import latest_step, load_checkpoint
-from repro.configs import get_arch
-from repro.core.secure_memory import SecureKeys
-from repro.models import lm as lm_mod
-from repro.models.layers import init_params, shape_structs
-from repro.serve.serve_step import (greedy_sample, make_decode_step,
+
+_n = _sniff_shards(sys.argv)
+if _n > 1 and "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_n}").strip()
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.checkpoint.secure_ckpt import latest_step, load_checkpoint  # noqa: E402
+from repro.configs import get_arch                     # noqa: E402
+from repro.core.secure_memory import SecureKeys        # noqa: E402
+from repro.models import lm as lm_mod                  # noqa: E402
+from repro.models.layers import init_params, shape_structs  # noqa: E402
+from repro.serve.serve_step import (greedy_sample, make_decode_step,  # noqa: E402
                                     make_prefill_step)
 
 
@@ -69,9 +107,15 @@ def main(argv=None) -> dict:
     ap.add_argument("--rotate-every", type=int, default=0,
                     help="rotate one tenant's keys every K ticks "
                          "(round-robin; needs --tenants)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve through an N-shard cluster engine, one "
+                         "paged pool per device (--engine paged only; "
+                         "0 = single shard engine)")
     args = ap.parse_args(argv)
     if args.tenants and args.engine != "paged":
         raise SystemExit("--tenants needs --engine paged")
+    if args.shards and args.engine != "paged":
+        raise SystemExit("--shards needs --engine paged")
     if args.rotate_every and not args.tenants:
         raise SystemExit("--rotate-every needs --tenants (there are no "
                          "tenant keys to rotate otherwise)")
@@ -135,11 +179,24 @@ def _serve_paged(arch, cfg, params, args) -> dict:
         for t in range(args.tenants):
             registry.register(f"tenant-{t}")
             sessions.append(registry.open_session(f"tenant-{t}"))
-    eng = SecureServingEngine(
-        arch, cfg, params, scheme=args.scheme, max_slots=args.batch,
-        page_tokens=args.page_tokens, pages_per_slot=pages_per_slot,
-        n_pages=n_pages, keys=SecureKeys.derive(args.seed),
-        registry=registry, rotate_every=args.rotate_every)
+    if args.shards:
+        from repro.serve.cluster import ClusterEngine
+        per_shard = -(-args.batch // args.shards)
+        eng = ClusterEngine(
+            arch, cfg, params, shards=args.shards, scheme=args.scheme,
+            max_slots=per_shard, page_tokens=args.page_tokens,
+            pages_per_slot=pages_per_slot,
+            n_pages=-(-n_pages // args.shards),
+            keys=SecureKeys.derive(args.seed),
+            registry=registry, rotate_every=args.rotate_every)
+        stats_of = lambda: dict(eng.engine_stats, **eng.stats)  # noqa: E731
+    else:
+        eng = SecureServingEngine(
+            arch, cfg, params, scheme=args.scheme, max_slots=args.batch,
+            page_tokens=args.page_tokens, pages_per_slot=pages_per_slot,
+            n_pages=n_pages, keys=SecureKeys.derive(args.seed),
+            registry=registry, rotate_every=args.rotate_every)
+        stats_of = lambda: eng.stats  # noqa: E731
     rng = np.random.default_rng(args.seed)
     rids = []
     for i in range(args.batch):
@@ -152,19 +209,24 @@ def _serve_paged(arch, cfg, params, args) -> dict:
     dt = time.perf_counter() - t0
     n_tokens = sum(len(done[r].generated) for r in rids)
     rate = n_tokens / max(dt, 1e-9)
+    stats = stats_of()
     mode = f"paged/{args.scheme}" + (
-        f"/{args.tenants} tenants" if args.tenants else "")
+        f"/{args.tenants} tenants" if args.tenants else "") + (
+        f"/{args.shards} shards" if args.shards else "")
+    extra = (f", {stats['migrations']} migrations" if args.shards else "")
     print(f"[serve] {mode}: {n_tokens} tokens over "
           f"{args.batch} requests ({rate:.1f} tok/s incl. compile), "
-          f"{eng.stats['preemptions']} preemptions, "
-          f"{eng.stats['rotations']} key rotations, "
-          f"deferred pool MAC {'OK' if eng.deferred_check() else 'FAIL'}")
+          f"{stats['preemptions']} preemptions, "
+          f"{stats['rotations']} key rotations{extra}, "
+          f"deferred {'root' if args.shards else 'pool'} MAC "
+          f"{'OK' if eng.deferred_check() else 'FAIL'}")
     if done.latency:
         print(f"[serve] latency (ticks): "
               f"ttft p50={done.latency['p50_ttft_ticks']:.1f} "
-              f"p95={done.latency['p95_ttft_ticks']:.1f}")
+              f"p95={done.latency['p95_ttft_ticks']:.1f} "
+              f"p99={done.latency['p99_ttft_ticks']:.1f}")
     toks = np.asarray([done[r].generated for r in rids], np.int32)
-    return {"tokens": toks, "tok_per_s": rate, "stats": eng.stats,
+    return {"tokens": toks, "tok_per_s": rate, "stats": stats,
             "latency": done.latency}
 
 

@@ -1,0 +1,387 @@
+"""Cluster scheduler: sharded secure serving across many devices.
+
+A :class:`ClusterEngine` serves one logical request stream over N
+shards, each shard a full
+:class:`~repro.serve.engine.SecureServingEngine` (continuous batching,
+paged MAC-protected pool, optional per-tenant key domains) pinned to
+its own accelerator:
+
+* **routing** — :meth:`submit` places each request on the least-loaded
+  shard, with tenant affinity: among near-tied shards, one already
+  holding the tenant's pages wins (its key rows are hot and its quota
+  accounting is local);
+* **one multi-device dispatch per tick** — every shard's jitted decode
+  is *dispatched* before any shard is *collected* (the engine tick is
+  split into begin/dispatch/collect/end phases), so the per-tick
+  device work of all shards overlaps instead of serializing;
+* **shard-bound integrity** — every shard's pool carries the shard id
+  in its RePA bindings and CTR counters (:mod:`repro.serve.kv_pages`),
+  and the per-shard deferred pool MACs roll up into a cluster root MAC
+  (:mod:`repro.serve.sharded_pool`) checked off the critical path;
+* **secure page migration** — when a shard starves (queued work it
+  cannot admit, or imminent page-growth pressure) while another has
+  room, the starved shard's youngest running slot MOVES: its pages are
+  decrypted + verified under the source shard's binding, hop devices
+  as plaintext inside the trusted computation, and are re-encrypted +
+  re-MACed under the destination's binding — no eviction, no prefill
+  recompute, and the source-shard ciphertext is useless at the
+  destination;
+* **cluster-wide rotation** — :meth:`rotate` runs through the shared
+  registry, whose pre/post hooks fan out to every shard engine: pages
+  about to leave the retained key window are eagerly resealed on
+  whichever shard holds them.
+
+Works on one host: ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+gives N CPU devices; with a single device the shards stay logical
+(separate pools, same device) and everything — including cross-shard
+replay rejection — behaves identically.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import jax
+
+from repro.core import secure_memory as sm
+from repro.serve.engine import (IntegrityError, RunResult,
+                                SecureServingEngine, latency_percentiles)
+from repro.serve.sharded_pool import ShardedKVPool
+
+__all__ = ["ClusterEngine"]
+
+
+class ClusterEngine:
+    """N shard engines behind one ``submit()``/``run()`` plane.
+
+    Single-tenant use::
+
+        cluster = ClusterEngine(arch, cfg, params, shards=2,
+                                scheme="seda", max_slots=2,
+                                page_tokens=8, pages_per_slot=4)
+        rids = [cluster.submit(p, max_new_tokens=8) for p in prompts]
+        done = cluster.run()        # RunResult, same shape as Engine's
+
+    Multi-tenant: pass ``registry=`` exactly as for the single engine;
+    sessions are cluster-wide (the registry is shared by every shard).
+    ``max_slots`` / ``n_pages`` are PER SHARD — a cluster of 4 shards
+    with ``max_slots=4`` decodes up to 16 slots per tick.
+    """
+
+    def __init__(self, arch, cfg, params, *, shards: int = 2,
+                 scheme: str = "seda", max_slots: int = 4,
+                 page_tokens: int = 8, pages_per_slot: int = 8,
+                 n_pages: Optional[int] = None,
+                 keys: Optional[sm.SecureKeys] = None,
+                 registry=None, rotate_every: int = 0,
+                 defer_interval: int = 16, devices=None,
+                 migrate: bool = True, **engine_kw):
+        if shards < 1:
+            raise ValueError("need at least one shard")
+        if rotate_every and registry is None:
+            raise ValueError("rotate_every needs a tenant registry")
+        if devices is None:
+            local = jax.local_devices()
+            # One physical device: keep the shards logical (no committed
+            # placement) — bit-identical to the single-device engine.
+            devices = ([None] * shards if len(local) == 1
+                       else [local[s % len(local)] for s in range(shards)])
+        elif len(devices) != shards:
+            raise ValueError(f"{len(devices)} devices for {shards} shards")
+        self.registry = registry
+        self.rotate_every = rotate_every
+        self.defer_interval = defer_interval
+        self.migrate = migrate
+        if keys is None:
+            keys = sm.SecureKeys.derive(0)
+        self.engines = []
+        for s in range(shards):
+            dev = devices[s]
+            self.engines.append(SecureServingEngine(
+                arch, cfg,
+                params if dev is None else jax.device_put(params, dev),
+                scheme=scheme, max_slots=max_slots, page_tokens=page_tokens,
+                pages_per_slot=pages_per_slot, n_pages=n_pages,
+                keys=keys if dev is None else jax.device_put(keys, dev),
+                registry=registry, rotate_every=0,
+                shard_id=s, n_shards=shards, device=dev,
+                preempt_hook=self._take_preempted,
+                defer_interval=defer_interval, **engine_kw))
+        self.sharded = ShardedKVPool(self.engines)
+        self.devices = devices
+        self.tick = 0
+        self.requests: dict = {}            # cluster rid -> Request
+        self._next_rid = 0
+        self._rotate_rr = 0
+        self._orphans: deque = deque()      # preempted, awaiting re-route
+        self.stats = {"migrations": 0, "root_checks": 0,
+                      "rerouted_preemptions": 0}
+
+    # -- submission / routing ------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 16, *,
+               session=None) -> int:
+        """Route one request to a shard; returns a cluster-wide rid."""
+        shard = self._route(session.index if session is not None else None)
+        engine = self.engines[shard]
+        local_rid = engine.submit(prompt, max_new_tokens=max_new_tokens,
+                                  session=session)
+        rid = self._next_rid
+        self._next_rid += 1
+        self.requests[rid] = engine.requests[local_rid]
+        return rid
+
+    def _load(self, engine) -> int:
+        return (engine._n_waiting()
+                + sum(1 for s in engine.slots if s is not None))
+
+    def _has_tenant(self, engine, tenant_index: int) -> bool:
+        if engine._tenant_waiting.get(tenant_index):
+            return True
+        return any(s is not None and s.tenant is not None
+                   and s.tenant.index == tenant_index
+                   for s in engine.slots)
+
+    def _route(self, tenant_index: Optional[int]) -> int:
+        """Least-loaded shard, tenant affinity breaking near-ties."""
+        best = None
+        for s, engine in enumerate(self.engines):
+            score = float(self._load(engine))
+            if tenant_index is not None and \
+                    self._has_tenant(engine, tenant_index):
+                score -= 0.5
+            if best is None or score < best[0]:
+                best = (score, s)
+        return best[1]
+
+    def _take_preempted(self, req) -> bool:
+        """Engine preempt hook: the cluster re-routes evicted work."""
+        self._orphans.append(req)
+        return True
+
+    def _requeue_orphans(self) -> None:
+        while self._orphans:
+            req = self._orphans.popleft()
+            shard = self._route(req.tenant_idx)
+            engine = self.engines[shard]
+            if req.tenant_idx is not None:
+                if not engine._tenant_active(req.tenant_idx):
+                    engine._activate_vtime(req.tenant_idx)
+                engine._tenant_waiting.setdefault(
+                    req.tenant_idx, deque()).appendleft(req)
+            else:
+                engine.waiting.appendleft(req)
+            self.stats["rerouted_preemptions"] += 1
+
+    # -- the cluster tick ----------------------------------------------------
+
+    def step(self) -> list:
+        """One cluster tick: every shard admits, then every shard's
+        decode is dispatched, then every shard is collected — one
+        multi-device dispatch wave per tick.  Returns finished
+        requests across all shards."""
+        self.tick += 1
+        if (self.registry is not None and self.rotate_every
+                and self.tick % self.rotate_every == 0
+                and self.registry.n_tenants):
+            idx = self._rotate_rr % self.registry.n_tenants
+            self._rotate_rr += 1
+            self.rotate(self.registry.by_index(idx).tenant_id)
+        finished: list = []
+        actives = [e._tick_begin(finished) for e in self.engines]
+        pendings = [e._decode_dispatch(a) if a else None
+                    for e, a in zip(self.engines, actives)]
+        for engine, active, pending in zip(self.engines, actives, pendings):
+            if pending is not None:
+                engine._decode_collect(active, pending, finished)
+        for engine in self.engines:
+            engine._tick_end()
+        if self.migrate and len(self.engines) > 1:
+            self._maybe_migrate()
+        self._requeue_orphans()
+        if self.defer_interval and self.tick % self.defer_interval == 0:
+            self._root_check()
+        return finished
+
+    def run(self, max_ticks: int = 100_000) -> RunResult:
+        """Drive cluster ticks until every submitted request finished."""
+        for _ in range(max_ticks):
+            if not self._busy():
+                break
+            self.step()
+        else:
+            raise RuntimeError("run() exceeded max_ticks")
+        for engine in self.engines:
+            if engine.policy.deferred_model_mac:
+                engine._deferred_check()
+            if not engine.verify_every_step and not bool(engine._ok_accum):
+                raise IntegrityError(
+                    "accumulated page-MAC verification failed "
+                    f"(shard {engine.shard_id})")
+        self._root_check()
+        result = RunResult({rid: req for rid, req in self.requests.items()
+                            if req.state == "finished"})
+        result.latency = latency_percentiles(self.requests.values())
+        return result
+
+    def _busy(self) -> bool:
+        if self._orphans:
+            return True
+        return any(e._n_waiting() or any(s is not None for s in e.slots)
+                   for e in self.engines)
+
+    def rotate(self, tenant_id: str) -> int:
+        """Cluster-wide live rotation (fans out to every shard)."""
+        if self.registry is None:
+            raise ValueError("rotate() needs a tenant registry")
+        return self.registry.rotate(tenant_id)
+
+    def _root_check(self) -> None:
+        self.stats["root_checks"] += 1
+        if not self.sharded.deferred_root_check():
+            raise IntegrityError(
+                f"cluster root MAC check failed (tick {self.tick})")
+
+    def deferred_check(self) -> bool:
+        """Cluster root MAC + every shard's deferred pool MAC."""
+        return self.sharded.deferred_root_check()
+
+    @property
+    def engine_stats(self) -> dict:
+        """Per-shard engine stats, summed — except ``rotations``:
+        every engine's post-rotation hook observes every registry
+        rotation, so summing would multiply the count by the shard
+        fan-out; the max IS the cluster-wide rotation count."""
+        agg: dict = {}
+        for engine in self.engines:
+            for k, v in engine.stats.items():
+                agg[k] = agg.get(k, 0) + v
+        if "rotations" in agg:
+            agg["rotations"] = max(e.stats["rotations"]
+                                   for e in self.engines)
+        return agg
+
+    # -- secure page migration ----------------------------------------------
+
+    def _growth_pressure(self, engine) -> bool:
+        """Queued work the shard cannot admit, or imminent page growth
+        its free list cannot cover."""
+        free = len(engine.free_pages)
+        heads = []
+        if engine.registry is None:
+            if engine.waiting:
+                heads.append(engine.waiting[0])
+        else:
+            heads += [q[0] for q in engine._tenant_waiting.values() if q]
+        if heads and any(engine._admission_pages(r) > free for r in heads):
+            return True
+        need_soon = sum(
+            1 for s in engine.slots if s is not None
+            and (s.length + 1) // engine.page_tokens >= len(s.pages))
+        return need_soon > free
+
+    def _pick_migration(self, src: int):
+        """(victim slot, destination shard) for one starved shard."""
+        engine = self.engines[src]
+        candidates = [i for i, s in enumerate(engine.slots) if s is not None]
+        if not candidates:
+            return None
+        victim = max(candidates, key=lambda i: engine.slots[i].admit_seq)
+        slot = engine.slots[victim]
+        n = len(slot.pages)
+        best = None
+        for d, dst in enumerate(self.engines):
+            if d == src or None not in dst.slots:
+                continue
+            # Headroom: the slot must land AND keep growing a while.
+            if len(dst.free_pages) < n + 1:
+                continue
+            if slot.tenant is not None and \
+                    dst.tenant_resident_pages(slot.tenant.index) + n > \
+                    slot.tenant.page_quota:
+                continue
+            if best is None or len(dst.free_pages) > best[0]:
+                best = (len(dst.free_pages), d)
+        if best is None:
+            return None
+        return victim, best[1]
+
+    def _maybe_migrate(self) -> None:
+        for src in range(len(self.engines)):
+            if not self._growth_pressure(self.engines[src]):
+                continue
+            pick = self._pick_migration(src)
+            if pick is None:
+                continue
+            self._migrate_slot(src, *pick)
+
+    def _migrate_slot(self, src: int, slot_idx: int, dst: int) -> None:
+        """Move one running slot's pages src -> dst, resealing them
+        under the destination shard's binding (no recompute)."""
+        import jax.numpy as jnp
+        import numpy as np
+
+        es, ed = self.engines[src], self.engines[dst]
+        slot = es.slots[slot_idx]
+        n = len(slot.pages)
+        p = es.pages_per_slot                         # bucketed dispatch size
+        src_ids = np.full((p,), es.spec.scratch_page, np.int32)
+        src_ids[:n] = slot.pages
+        tenant = slot.tenant
+        if tenant is None:
+            leaf_pages, ok = es._page_reader(p)(es.pool,
+                                                jnp.asarray(src_ids))
+        else:
+            rows = np.zeros((p,), np.int32)
+            epochs = np.zeros((p,), np.uint32)
+            for j, e in enumerate(slot.page_epochs):
+                epochs[j] = e
+                try:
+                    rows[j] = self.registry.key_row(tenant.index, e)
+                except KeyError as exc:
+                    raise IntegrityError(
+                        f"migration source shard {src} slot {slot_idx} "
+                        f"page {j}: {exc.args[0]}") from exc
+            owners = np.full((p,), tenant.index, np.uint32)
+            leaf_pages, ok = es._page_reader(p)(
+                es.pool, jnp.asarray(src_ids), es._bank(),
+                jnp.asarray(rows), jnp.asarray(owners), jnp.asarray(epochs))
+        if not bool(ok):
+            raise IntegrityError(
+                f"secure migration: source shard {src} page verification "
+                f"failed (slot {slot_idx}, scheme={es.scheme})")
+        dst_pages = [ed.free_pages.pop() for _ in range(n)]
+        dst_ids = np.full((p,), ed.spec.scratch_page, np.int32)
+        dst_ids[:n] = dst_pages
+        if ed._device is not None and ed._device != es._device:
+            leaf_pages = jax.device_put(leaf_pages, ed._device)
+        if tenant is None:
+            ed.pool = ed._page_writer(p)(ed.pool, jnp.asarray(dst_ids),
+                                         leaf_pages, ed._next_epoch())
+            page_epochs = []
+        else:
+            cur = tenant.current_epoch
+            row = self.registry.key_row(tenant.index, cur)
+            ed.pool = ed._page_writer(p)(
+                ed.pool, jnp.asarray(dst_ids), leaf_pages, ed._next_epoch(),
+                ed._bank(), jnp.full((p,), row, jnp.int32),
+                jnp.full((p,), tenant.index, jnp.uint32),
+                jnp.full((p,), np.uint32(cur), jnp.uint32))
+            page_epochs = [cur] * n
+        # Host state: the slot moves wholesale; its request never
+        # leaves the "running" state and nothing is recomputed.
+        dst_slot = ed.slots.index(None)
+        for j in range(len(ed.onchip)):
+            col = es.onchip[j][:, slot_idx]
+            if ed._device is not None and ed._device != es._device:
+                col = jax.device_put(col, ed._device)
+            ed.onchip[j] = ed.onchip[j].at[:, dst_slot].set(col)
+        es.slots[slot_idx] = None
+        es.free_pages.extend(slot.pages)
+        ed._admit_seq += 1
+        slot.pages = dst_pages
+        slot.page_epochs = page_epochs
+        slot.admit_seq = ed._admit_seq
+        ed.slots[dst_slot] = slot
+        self.stats["migrations"] += 1

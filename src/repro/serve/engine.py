@@ -41,8 +41,19 @@ domains:
 * :meth:`rotate` bumps a tenant's key epoch **live**: resident pages
   re-encrypt to the new epoch lazily on their next dirty write, reads
   of previous-epoch pages keep verifying against the retained key, and
-  slots still holding pages about to fall out of the retention window
-  are preempted (their KV recomputes under fresh keys on re-admission).
+  pages about to fall out of the retention window are **eagerly
+  resealed** (one jitted decrypt-old → re-encrypt-new crossing, via
+  :func:`repro.serve.kv_pages.reseal_pages`) — no slot is preempted
+  and no KV is recomputed.
+
+**Sharded mode.**  Constructed with ``shard_id``/``n_shards`` (and
+optionally ``device``), the engine becomes one shard of a
+:class:`repro.serve.cluster.ClusterEngine`: its pool's RePA bindings
+and CTR counters carry the shard id (pages are cryptographically
+pinned to this device), its tick is split into dispatch/collect halves
+so the cluster can overlap every shard's decode in one multi-device
+dispatch, and pool updates are observable (``attach_pool_listener``)
+so the cluster can roll per-shard deferred pool MACs into a root MAC.
 
 Host-side scheduling state (free list, queues, lengths, page epochs)
 is plain Python; everything that touches tensor data stays inside jit.
@@ -66,7 +77,8 @@ from repro.models import lm as lm_mod
 from repro.serve import kv_pages as kvp
 from repro.serve.serve_step import greedy_sample
 
-__all__ = ["IntegrityError", "Request", "RunResult", "SecureServingEngine"]
+__all__ = ["IntegrityError", "Request", "RunResult", "SecureServingEngine",
+           "latency_percentiles"]
 
 
 class IntegrityError(RuntimeError):
@@ -97,6 +109,34 @@ class RunResult(dict):
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
         self.latency: dict = {}
+
+
+def latency_percentiles(requests) -> dict:
+    """p50/p95/p99 latency over finished requests.
+
+    Interpolated (``np.percentile``, linear) rather than nearest-rank:
+    cluster benchmarks read tail latency off handfuls of requests,
+    where nearest-rank p95/p99 degenerate to the max and hide real
+    movement between runs.
+    """
+    ttft, tpt = [], []
+    for r in requests:
+        if r.state != "finished" or r.first_tick is None:
+            continue
+        ttft.append(r.first_tick - r.submit_tick)
+        if r.done_tick is not None and len(r.generated) > 1:
+            tpt.append((r.done_tick - r.first_tick) / (len(r.generated) - 1))
+    if not ttft:
+        return {}
+    out = {}
+    for q in (50, 95, 99):
+        out[f"p{q}_ttft_ticks"] = float(
+            np.percentile(ttft, q, method="linear"))
+    for q in (50, 95, 99):
+        if tpt:
+            out[f"p{q}_ticks_per_token"] = float(
+                np.percentile(tpt, q, method="linear"))
+    return out
 
 
 @dataclasses.dataclass
@@ -151,20 +191,18 @@ class SecureServingEngine:
                  eos_id: Optional[int] = None,
                  verify_every_step: bool = True,
                  registry=None, rotate_every: int = 0,
-                 prefill_buckets: Optional[bool] = None):
+                 prefill_buckets: Optional[bool] = None,
+                 shard_id: int = 0, n_shards: int = 1,
+                 device=None, preempt_hook=None):
         if arch.kind != "lm":
             raise ValueError("the paged serving engine supports decoder-only "
                              "LMs (enc-dec serving stays on serve_step)")
         if scheme not in SCHEMES:
             raise KeyError(f"unknown scheme {scheme!r}")
-        if registry is not None and use_kernel:
-            raise ValueError("the fused-kernel read path supports a single "
-                             "key domain; multi-tenant mode gathers per-page "
-                             "keys (use_kernel=False)")
         if rotate_every and registry is None:
             raise ValueError("rotate_every needs a tenant registry — there "
                              "is no key hierarchy to rotate without one")
-        self.arch, self.cfg, self.params = arch, cfg, params
+        self.arch, self.cfg = arch, cfg
         self.scheme = scheme
         self.max_slots = max_slots
         self.page_tokens = page_tokens
@@ -179,6 +217,16 @@ class SecureServingEngine:
         self.verify_every_step = verify_every_step
         self.registry = registry
         self.rotate_every = rotate_every
+        self.shard_id = shard_id
+        self.n_shards = n_shards
+        self._device = device
+        # Called as preempt_hook(request) on eviction; returning True
+        # means the caller (the cluster scheduler) took ownership and
+        # the request must NOT be requeued locally — it may be re-routed
+        # to a less loaded shard instead.
+        self._preempt_hook = preempt_hook
+        self.params = (params if device is None
+                       else jax.device_put(params, device))
 
         cache_tree = lm_mod.cache_specs(cfg, max_slots, self.max_len)
         flat, self.treedef = jax.tree_util.tree_flatten(cache_tree)
@@ -193,7 +241,7 @@ class SecureServingEngine:
         self.spec = kvp.build_page_spec(
             cache_tree, scheme=scheme, page_tokens=page_tokens,
             n_pages=n_pages, max_slots=max_slots, max_len=self.max_len,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, shard=shard_id, n_shards=n_shards)
         self.policy = (multilevel.SEDA_DEFAULT
                        if SCHEMES[scheme].verify == "layer"
                        else multilevel.SGX_LIKE if SCHEMES[scheme].emulate_tree
@@ -207,9 +255,15 @@ class SecureServingEngine:
         self.prefill_buckets = prefill_buckets
 
         # Device state.
-        self.pool = kvp.init_pool(self.spec)
-        self.onchip = [jnp.zeros(flat[i].shape, flat[i].dtype)
-                       for i in self.onchip_idx]
+        self._pool_listeners: list = []
+        pool = kvp.init_pool(self.spec)
+        onchip = [jnp.zeros(flat[i].shape, flat[i].dtype)
+                  for i in self.onchip_idx]
+        if device is not None:
+            pool = jax.device_put(pool, device)
+            onchip = [jax.device_put(a, device) for a in onchip]
+        self.pool = pool
+        self.onchip = onchip
         self._ok_accum = jnp.asarray(True)
 
         # Host scheduling state.
@@ -227,15 +281,44 @@ class SecureServingEngine:
         self._prefill_shapes: set = set()
         self.stats = {"admitted": 0, "preemptions": 0, "decode_steps": 0,
                       "deferred_checks": 0, "rotations": 0,
-                      "prefill_compiles": 0}
+                      "prefill_compiles": 0, "reseals": 0,
+                      "uniform_fast_ticks": 0}
 
         self._decode_fn = jax.jit(self._build_decode_fn())
+        self._decode_fn_uniform = (jax.jit(self._build_decode_fn(True))
+                                   if registry is not None else None)
         self._prefill_fn = jax.jit(self._build_prefill_fn())
         self._writers: dict = {}
+        self._resealers: dict = {}
+        self._page_readers: dict = {}
+        self._page_writers: dict = {}
         if registry is not None:
             # Rotations repair every engine sharing the registry, no
-            # matter which one (or which operator call) triggered them.
+            # matter which one (or which operator call) triggered them:
+            # the pre hook reseals pages that would leave the retained
+            # window (while the dying epoch's keys are still banked),
+            # the post hook preempts anything a reseal could not save.
+            registry.attach_rotation_hook(self._pre_rotation, pre=True)
             registry.attach_rotation_hook(self._on_rotation)
+
+    # -- pool indirection (sharded-pool observability) ----------------------
+
+    @property
+    def pool(self) -> kvp.PagedKVPool:
+        return self._pool
+
+    @pool.setter
+    def pool(self, new_pool: kvp.PagedKVPool) -> None:
+        old = getattr(self, "_pool", None)
+        self._pool = new_pool
+        for listener in self._pool_listeners:
+            listener(old, new_pool)
+
+    def attach_pool_listener(self, listener) -> None:
+        """``listener(old_pool, new_pool)`` runs on every pool update —
+        the cluster's sharded pool mirrors per-shard deferred MACs into
+        its root MAC this way, without syncing the device."""
+        self._pool_listeners.append(listener)
 
     # -- traced builders ----------------------------------------------------
 
@@ -250,7 +333,7 @@ class SecureServingEngine:
             leaves[idx] = onchip[j]
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
-    def _build_decode_fn(self):
+    def _build_decode_fn(self, uniform: bool = False):
         cfg, spec, keys = self.cfg, self.spec, self.keys
         tenant_mode = self.registry is not None
         pages_per_slot = self.pages_per_slot
@@ -258,7 +341,7 @@ class SecureServingEngine:
         def core(params, pool, onchip, page_table, lengths, active, tokens,
                  epoch, read_ctx, write_ctx):
             dense, ok = kvp.read_pages(pool, spec, keys, page_table, lengths,
-                                       read_ctx)
+                                       read_ctx, uniform)
             caches = self._merge_cache_leaves(dense, onchip, lengths)
             logits, new_caches = lm_mod.lm_decode(cfg, params, tokens, caches)
             tok = greedy_sample(logits)                    # (S, 1)
@@ -267,7 +350,7 @@ class SecureServingEngine:
             new_pool = kvp.write_dirty(
                 pool, spec, keys, page_table,
                 [new_leaves[i] for i in self.paged_idx], lengths, active, vn,
-                write_ctx)
+                write_ctx, uniform)
             new_onchip = []
             for j, idx in enumerate(self.onchip_idx):
                 leaf = new_leaves[idx]
@@ -328,6 +411,49 @@ class SecureServingEngine:
 
             self._writers[n_write_pages] = jax.jit(write)
         return self._writers[n_write_pages]
+
+    # Migration halves (used by the cluster engine): decrypt+verify N
+    # whole pages on THIS shard / re-protect N transferred pages into
+    # THIS shard's pool.  Split in two so the plaintext can hop devices
+    # between the dispatches.
+
+    def _page_reader(self, n: int):
+        if n not in self._page_readers:
+            spec, keys = self.spec, self.keys
+
+            if self.registry is None:
+                def read(pool, page_ids):
+                    return kvp.read_pages_raw(pool, spec, keys, page_ids)
+            else:
+                def read(pool, page_ids, bank, rows, owners, epochs):
+                    ctx = kvp.PageKeyCtx.make(bank, rows, owners, epochs)
+                    return kvp.read_pages_raw(pool, spec, keys, page_ids,
+                                              ctx)
+
+            self._page_readers[n] = jax.jit(read)
+        return self._page_readers[n]
+
+    def _page_writer(self, n: int):
+        if n not in self._page_writers:
+            spec, keys = self.spec, self.keys
+
+            if self.registry is None:
+                def write(pool, page_ids, leaf_pages, epoch):
+                    vn = vn_mod.kv_page_vn(epoch)
+                    real = page_ids < spec.n_pages
+                    return kvp.write_pages(pool, spec, keys, page_ids,
+                                           leaf_pages, vn, real)
+            else:
+                def write(pool, page_ids, leaf_pages, epoch, bank, rows,
+                          owners, epochs):
+                    ctx = kvp.PageKeyCtx.make(bank, rows, owners, epochs)
+                    vn = vn_mod.kv_page_vn(epoch)
+                    real = page_ids < spec.n_pages
+                    return kvp.write_pages(pool, spec, keys, page_ids,
+                                           leaf_pages, vn, real, ctx)
+
+            self._page_writers[n] = jax.jit(write)
+        return self._page_writers[n]
 
     # -- public API ---------------------------------------------------------
 
@@ -403,18 +529,93 @@ class SecureServingEngine:
         Bumps the tenant's epoch in the registry.  Pages written under
         the *previous* epoch keep verifying (its keys stay in the
         bank); each re-encrypts to the new epoch on its next dirty
-        write.  The registry's rotation hooks then run on every
-        attached engine (:meth:`_on_rotation`), preempting slots still
-        holding pages of the epoch that just left the retained window —
-        their KV recomputes under fresh keys on re-admission, so no
-        page ever needs a dropped key.
+        write.  Before any key material moves, every attached engine's
+        pre-rotation hook (:meth:`_pre_rotation`) eagerly reseals pages
+        that would leave the retained window — decrypt under the dying
+        epoch, re-encrypt under the current one, in one jitted crossing
+        — so no slot is preempted and no KV recomputed.
         """
         if self.registry is None:
             raise ValueError("rotate() needs a tenant registry")
         return self.registry.rotate(tenant_id)
 
+    def _pre_rotation(self, tenant, new_epoch: int) -> None:
+        """Eagerly reseal pages about to fall out of the key window.
+
+        Runs while the dying epoch's keys are still in the bank.  All
+        such pages across this engine's slots are resealed to the
+        tenant's CURRENT epoch (which stays retained after the bump) in
+        one batched ``reseal_pages`` dispatch per slot.
+        """
+        oldest_after = new_epoch - self.registry.retain + 1
+        cur = tenant.current_epoch
+        for i, slot in enumerate(self.slots):
+            if slot is None or slot.tenant is not tenant:
+                continue
+            stale = [j for j, e in enumerate(slot.page_epochs)
+                     if e < oldest_after]
+            if not stale:
+                continue
+            self._reseal_slot(i, stale, cur)
+
+    def _reseal_slot(self, slot_idx: int, page_pos: list,
+                     to_epoch: int) -> None:
+        """Reseal the given page positions of one slot to ``to_epoch``."""
+        slot = self.slots[slot_idx]
+        tenant = slot.tenant
+        n = self.pages_per_slot                       # padded/bucketed size
+        page_ids = np.full((n,), self.spec.scratch_page, np.int32)
+        old_rows = np.zeros((n,), np.int32)
+        old_epochs = np.zeros((n,), np.uint32)
+        new_row = self.registry.key_row(tenant.index, to_epoch)
+        for k, j in enumerate(page_pos):
+            page_ids[k] = slot.pages[j]
+            old_epochs[k] = slot.page_epochs[j]
+            old_rows[k] = self.registry.key_row(tenant.index,
+                                                slot.page_epochs[j])
+        owners = np.full((n,), tenant.index, np.uint32)
+        new_pool, ok = self._resealer(n)(
+            self.pool, self._bank(), jnp.asarray(page_ids),
+            jnp.asarray(old_rows), jnp.asarray(old_epochs),
+            jnp.asarray(owners),
+            jnp.full((n,), new_row, jnp.int32),
+            jnp.full((n,), np.uint32(to_epoch), jnp.uint32),
+            self._next_epoch())
+        # Gate BEFORE committing: a failed decrypt means the old bytes
+        # were tampered, and storing their reseal would launder them
+        # under fresh, valid MACs.
+        if not bool(ok):
+            raise IntegrityError(
+                f"reseal of slot {slot_idx} pages {page_pos} failed "
+                f"verification (tenant {tenant.tenant_id!r})")
+        self.pool = new_pool
+        for j in page_pos:
+            slot.page_epochs[j] = to_epoch
+        self.stats["reseals"] += 1
+
+    def _resealer(self, n: int):
+        if n not in self._resealers:
+            spec, keys = self.spec, self.keys
+
+            def reseal(pool, bank, page_ids, old_rows, old_epochs, owners,
+                       new_rows, new_epochs, epoch):
+                old_ctx = kvp.PageKeyCtx.make(bank, old_rows, owners,
+                                              old_epochs)
+                new_ctx = kvp.PageKeyCtx.make(bank, new_rows, owners,
+                                              new_epochs)
+                vn = vn_mod.kv_page_vn(epoch)
+                return kvp.reseal_pages(pool, spec, keys, page_ids, vn,
+                                        old_ctx, new_ctx)
+
+            self._resealers[n] = jax.jit(reseal)
+        return self._resealers[n]
+
     def _on_rotation(self, tenant, new_epoch: int) -> None:
-        """Registry rotation hook: preempt slots leaving the window."""
+        """Post-rotation hook: preempt anything a reseal missed.
+
+        After an eager reseal nothing should be left outside the
+        window; this is the belt-and-braces fallback (e.g. a slot whose
+        page-epoch mirror was tampered between the hooks)."""
         oldest_retained = new_epoch - self.registry.retain + 1
         for i, slot in enumerate(self.slots):
             if (slot is not None and slot.tenant is tenant
@@ -425,8 +626,25 @@ class SecureServingEngine:
     def step(self) -> list:
         """One scheduler tick: admit, grow/evict, batched decode.
 
-        Returns the requests that finished during this tick.
+        Returns the requests that finished during this tick.  The tick
+        is split into :meth:`_tick_begin` (host scheduling + prefill),
+        dispatch/collect decode halves, and :meth:`_tick_end` (deferred
+        verification), so a cluster scheduler can interleave the phases
+        of many shard engines — dispatching every shard's decode before
+        blocking on any of them.
         """
+        finished: list = []
+        active_idx = self._tick_begin(finished)
+        if active_idx:
+            pending = self._decode_dispatch(active_idx)
+            self._decode_collect(active_idx, pending, finished)
+        self._tick_end()
+        return finished
+
+    def _tick_begin(self, finished: list) -> list:
+        """Advance the tick: rotation policy, admission, growth.
+
+        Returns the slot indices active for this tick's decode."""
         self.tick += 1
         if (self.registry is not None and self.rotate_every
                 and self.tick % self.rotate_every == 0
@@ -434,16 +652,14 @@ class SecureServingEngine:
             idx = self._rotate_rr % self.registry.n_tenants
             self._rotate_rr += 1
             self.rotate(self.registry.by_index(idx).tenant_id)
-        finished: list = []
         self._admit(finished)
         self._ensure_growth()
-        active_idx = [i for i, s in enumerate(self.slots) if s is not None]
-        if active_idx:
-            self._decode(active_idx, finished)
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def _tick_end(self) -> None:
         if (self.policy.deferred_model_mac and self.defer_interval
                 and self.tick % self.defer_interval == 0):
             self._deferred_check()
-        return finished
 
     def run(self, max_ticks: int = 100_000) -> RunResult:
         """Drive ticks until every submitted request finished.
@@ -468,23 +684,8 @@ class SecureServingEngine:
         return result
 
     def latency_stats(self) -> dict:
-        """p50/p95 ticks-to-first-token and ticks-per-token, finished reqs."""
-        ttft, tpt = [], []
-        for r in self.requests.values():
-            if r.state != "finished" or r.first_tick is None:
-                continue
-            ttft.append(r.first_tick - r.submit_tick)
-            if r.done_tick is not None and len(r.generated) > 1:
-                tpt.append((r.done_tick - r.first_tick)
-                           / (len(r.generated) - 1))
-        if not ttft:
-            return {}
-        out = {"p50_ttft_ticks": float(np.percentile(ttft, 50)),
-               "p95_ttft_ticks": float(np.percentile(ttft, 95))}
-        if tpt:
-            out["p50_ticks_per_token"] = float(np.percentile(tpt, 50))
-            out["p95_ticks_per_token"] = float(np.percentile(tpt, 95))
-        return out
+        """p50/p95/p99 ticks-to-first-token + ticks-per-token (finished)."""
+        return latency_percentiles(self.requests.values())
 
     def deferred_check(self) -> bool:
         """Model-level deferred MAC over the whole pool (paper Table I)."""
@@ -507,7 +708,7 @@ class SecureServingEngine:
         ]
         if self.registry is not None:
             args += [
-                self.registry.bank,
+                self._bank(),
                 jnp.zeros((self.max_slots, self.pages_per_slot), jnp.int32),
                 jnp.zeros((self.max_slots,), jnp.uint32),
                 jnp.zeros((self.max_slots, self.pages_per_slot), jnp.uint32),
@@ -618,7 +819,7 @@ class SecureServingEngine:
             epoch = tenant.current_epoch
             row = self.registry.key_row(tenant.index, epoch)
             ctx = kvp.PageKeyCtx.make(
-                self.registry.bank,
+                self._bank(),
                 np.full((self.pages_per_slot,), row, np.int32),
                 np.full((self.pages_per_slot,), tenant.index, np.uint32),
                 np.full((self.pages_per_slot,), epoch, np.uint32))
@@ -682,6 +883,8 @@ class SecureServingEngine:
         slot.req.state = "waiting"
         slot.req.n_evictions += 1
         self.stats["preemptions"] += 1
+        if self._preempt_hook is not None and self._preempt_hook(slot.req):
+            return          # the cluster took it (re-routes across shards)
         if slot.tenant is not None:               # preempted go to the front
             self._tenant_waiting[slot.tenant.index].appendleft(slot.req)
         else:
@@ -705,9 +908,53 @@ class SecureServingEngine:
 
     # -- decode --------------------------------------------------------------
 
-    def _tenant_decode_args(self) -> list:
-        """Per-slot/per-page key selections for one decode tick."""
+    def _bank(self):
+        """The registry key bank, replicated onto this shard's device."""
+        return self.registry.bank_for(self._device)
+
+    def _uniform_row(self, active_idx: list):
+        """The single bank row serving every page this tick, or None.
+
+        The host-side single-key fast-path gate: when every resident
+        page AND every dirty write of the tick resolves to one
+        (tenant, epoch) bank row, the vmapped per-page crypt is
+        overkill — the uniform decode fn runs the flat single-key route
+        (fused kernels included) with bit-identical RePA metadata.
+        """
+        tenant, row = None, None
+        for i in active_idx:
+            slot = self.slots[i]
+            t = slot.tenant
+            if t is None:
+                return None
+            if any(e != t.current_epoch for e in slot.page_epochs):
+                return None
+            r = self.registry.key_row(t.index, t.current_epoch)
+            if row is None:
+                tenant, row = t, r
+            elif r != row:
+                return None
+        return (tenant, row)
+
+    def _tenant_decode_args(self, active_idx: list) -> tuple:
+        """Per-slot/per-page key selections for one decode tick.
+
+        Returns ``(args, uniform)`` — when ``uniform`` the whole batch
+        resolves to one bank row (arrays are filled uniformly so the
+        single gathered key covers scratch writes of inactive slots
+        too) and the caller dispatches the single-key decode fn.
+        """
         s, p = self.max_slots, self.pages_per_slot
+        uni = self._uniform_row(active_idx)
+        if uni is not None:
+            tenant, row = uni
+            epoch = np.uint32(tenant.current_epoch)
+            return ([self._bank(),
+                     jnp.full((s, p), row, jnp.int32),
+                     jnp.full((s,), tenant.index, jnp.uint32),
+                     jnp.full((s, p), epoch, jnp.uint32),
+                     jnp.full((s,), row, jnp.int32),
+                     jnp.full((s,), epoch, jnp.uint32)], True)
         key_idx = np.zeros((s, p), np.int32)
         owners = np.zeros((s,), np.uint32)
         key_epochs = np.zeros((s, p), np.uint32)
@@ -733,11 +980,21 @@ class SecureServingEngine:
                     # scheduling error.
                     raise IntegrityError(
                         f"slot {i} page {j}: {e.args[0]}") from e
-        return [self.registry.bank, jnp.asarray(key_idx),
-                jnp.asarray(owners), jnp.asarray(key_epochs),
-                jnp.asarray(cur_key_idx), jnp.asarray(cur_epochs)]
+        return ([self._bank(), jnp.asarray(key_idx),
+                 jnp.asarray(owners), jnp.asarray(key_epochs),
+                 jnp.asarray(cur_key_idx), jnp.asarray(cur_epochs)], False)
 
     def _decode(self, active_idx: list, finished: list) -> None:
+        pending = self._decode_dispatch(active_idx)
+        self._decode_collect(active_idx, pending, finished)
+
+    def _decode_dispatch(self, active_idx: list):
+        """Launch this tick's batched decode; no host sync.
+
+        Returns the (still-async) ``(toks, ok)`` device values; the
+        pool/onchip state is already swapped to the new (async) arrays,
+        so a cluster can dispatch every shard before collecting any.
+        """
         page_table = np.full((self.max_slots, self.pages_per_slot), -1,
                              np.int32)
         lengths = np.zeros((self.max_slots,), np.int32)
@@ -752,15 +1009,26 @@ class SecureServingEngine:
         args = [self.params, self.pool, self.onchip, jnp.asarray(page_table),
                 jnp.asarray(lengths), jnp.asarray(active),
                 jnp.asarray(tokens), self._next_epoch()]
+        decode_fn = self._decode_fn
         if self.registry is not None:
-            args += self._tenant_decode_args()
-        self.pool, self.onchip, toks, ok = self._decode_fn(*args)
+            tenant_args, uniform = self._tenant_decode_args(active_idx)
+            args += tenant_args
+            if uniform:
+                decode_fn = self._decode_fn_uniform
+                self.stats["uniform_fast_ticks"] += 1
+        self.pool, self.onchip, toks, ok = decode_fn(*args)
         self.stats["decode_steps"] += 1
+        return toks, ok
+
+    def _decode_collect(self, active_idx: list, pending,
+                        finished: list) -> None:
+        """Sync on a dispatched decode and apply host bookkeeping."""
+        toks, ok = pending
         if self.verify_every_step:
             if not bool(ok):
                 raise IntegrityError(
                     f"page MAC verification failed at tick {self.tick} "
-                    f"(scheme={self.scheme})")
+                    f"(scheme={self.scheme}, shard={self.shard_id})")
         else:
             self._ok_accum = self._ok_accum & ok
         toks = np.asarray(toks)

@@ -51,7 +51,23 @@ so a page written under tenant A's keys fails verification when read
 under tenant B's — or under a stale epoch — even before the key
 mismatch scrambles the plaintext.  ``ctx=None`` keeps the single-key
 fast path (including the fused-kernel route) bit-identical to the
-single-tenant engine.
+single-tenant engine.  When every page of a crossing resolves to ONE
+bank row, ``uniform=True`` keeps the per-page (tenant, epoch) words in
+the RePA binding but dispatches the flat single-key crypt/MAC route
+(including the fused kernels) instead of the vmapped per-page one —
+bit-identical metadata, single-key speed.
+
+**Sharded pools.**  A :class:`PageSpec` additionally carries a
+``(shard, n_shards)`` identity.  The shard id is folded into the RePA
+binding (``fmap`` bits 28–31) and XORed into CTR counter word 0, so a
+page is cryptographically pinned to its device: a byte-identical page
+(ciphertext + MAC + VN) captured on shard 0 and replayed into shard
+1's pool recomputes a different MAC under shard 1's binding and fails
+its gate.  ``shard=0, n_shards=1`` (the default) is bit-identical to
+the unsharded layout.  :func:`reseal_pages` (decrypt old keys →
+re-encrypt new, one fused crossing) and :func:`migrate_pages` (reseal
+across pools/shards) are the primitives live rotation and secure
+cross-shard migration build on.
 """
 
 from __future__ import annotations
@@ -79,8 +95,15 @@ __all__ = [
     "write_pages",
     "write_prefill",
     "write_dirty",
+    "read_pages_raw",
+    "reseal_pages",
+    "migrate_pages",
     "deferred_pool_check",
 ]
+
+# fmap-word bit budget: leaf idx (0-7) | tenant (8-15) | epoch (16-27)
+# | shard (28-31).  The shard field caps a sharded pool's fan-out.
+MAX_SHARDS = 16
 
 # Cache NamedTuple fields whose leaves have a (steps, B, max_len, ...)
 # sequence layout and cross the untrusted boundary.  Everything else
@@ -115,6 +138,8 @@ class PageSpec(NamedTuple):
     max_len: int         # page_tokens * pages_per_slot
     scheme: str          # key into core.secure_exec.SCHEMES
     use_kernel: bool     # route crypto through the Pallas kernels
+    shard: int = 0       # this pool's shard id (folded into RePA/CTR)
+    n_shards: int = 1    # cluster fan-out this pool belongs to
 
     @property
     def cfg(self) -> SchemeConfig:
@@ -211,7 +236,8 @@ def length_flags(cache_tree: Any) -> list:
 
 def build_page_spec(cache_tree: Any, *, scheme: str, page_tokens: int,
                     n_pages: int, max_slots: int, max_len: int,
-                    use_kernel: bool = False) -> PageSpec:
+                    use_kernel: bool = False, shard: int = 0,
+                    n_shards: int = 1) -> PageSpec:
     """Lay the paged leaves of a cache pytree out as a protected pool.
 
     ``cache_tree`` is the ShapeDtypeStruct tree from
@@ -225,6 +251,9 @@ def build_page_spec(cache_tree: Any, *, scheme: str, page_tokens: int,
     if max_len % page_tokens:
         raise ValueError(f"max_len {max_len} not a multiple of "
                          f"page_tokens {page_tokens}")
+    if not 0 < n_shards <= MAX_SHARDS or not 0 <= shard < n_shards:
+        raise ValueError(f"shard {shard} / n_shards {n_shards} outside the "
+                         f"{MAX_SHARDS}-shard fmap-word budget")
     cfg = SCHEMES[scheme]
     flags = paged_flags(cache_tree)
     leaves = jax.tree_util.tree_leaves(cache_tree)
@@ -262,7 +291,8 @@ def build_page_spec(cache_tree: Any, *, scheme: str, page_tokens: int,
                          "the paged engine needs at least one attention "
                          "or MLA layer")
     return PageSpec(tuple(specs), page_tokens, max_len // page_tokens,
-                    n_pages, max_slots, max_len, scheme, use_kernel)
+                    n_pages, max_slots, max_len, scheme, use_kernel,
+                    shard, n_shards)
 
 
 def init_pool(spec: PageSpec) -> PagedKVPool:
@@ -307,6 +337,11 @@ def _tenant_words(ctx: PageKeyCtx, per_page: int):
     return salts, tenant
 
 
+def _shard_ctr_word(spec: PageSpec) -> jnp.ndarray:
+    """Shard id XORed into CTR counter word 0 (zero for shard 0)."""
+    return jnp.uint32(spec.shard) << jnp.uint32(24)
+
+
 def _block_counters(spec: PageSpec, leaf: LeafPageSpec, page_ids: jax.Array,
                     vns: jax.Array,
                     ctx: PageKeyCtx | None = None) -> jax.Array:
@@ -314,15 +349,18 @@ def _block_counters(spec: PageSpec, leaf: LeafPageSpec, page_ids: jax.Array,
 
     With a tenant ctx, word 0 carries the tenant-epoch VN salt and
     word 2 the ``tenant_idx ‖ epoch`` identity, so CTR streams never
-    collide across tenants or epochs even at equal (PA, VN).
+    collide across tenants or epochs even at equal (PA, VN).  On a
+    sharded pool the shard id is XORed into word 0 — the keystream of a
+    page never repeats across shards even under one engine-wide key.
     """
     pa = _block_pa(spec, leaf, page_ids).reshape(-1)
     vn_col = jnp.repeat(vns.astype(jnp.uint32), leaf.n_blocks)
+    shard_w = _shard_ctr_word(spec)
     if ctx is None:
-        zeros = jnp.zeros_like(pa)
-        return jnp.stack([zeros, pa, zeros, vn_col], axis=-1)
+        word0 = jnp.full_like(pa, shard_w)
+        return jnp.stack([word0, pa, jnp.zeros_like(pa), vn_col], axis=-1)
     salts, tenant = _tenant_words(ctx, leaf.n_blocks)
-    return jnp.stack([salts, pa, tenant, vn_col], axis=-1)
+    return jnp.stack([salts ^ shard_w, pa, tenant, vn_col], axis=-1)
 
 
 def _block_binding(spec: PageSpec, leaf: LeafPageSpec, page_ids: jax.Array,
@@ -334,7 +372,9 @@ def _block_binding(spec: PageSpec, leaf: LeafPageSpec, page_ids: jax.Array,
     ``leaf_idx | tenant_idx << 8 | key_epoch << 16`` — the RePA tuple
     then binds each block MAC to its owner and key epoch, so relocating
     a page across tenants (or replaying a stale-epoch page) breaks the
-    binding independently of the key mismatch.
+    binding independently of the key mismatch.  Bits 28-31 carry the
+    pool's shard id, pinning every MAC to its device: a byte-identical
+    page replayed onto another shard fails its gate.
     """
     n = page_ids.shape[0]
     bb = spec.cfg.block_bytes
@@ -342,7 +382,8 @@ def _block_binding(spec: PageSpec, leaf: LeafPageSpec, page_ids: jax.Array,
     blk = jnp.arange(leaf.n_blocks, dtype=jnp.uint32)
     layer = jnp.uint32(leaf.base_layer) + blk // jnp.uint32(blocks_per_layer)
     pa = _block_pa(spec, leaf, page_ids).reshape(-1)
-    fmap = jnp.uint32(leaf.leaf_idx)
+    fmap = jnp.uint32(leaf.leaf_idx) | (jnp.uint32(spec.shard)
+                                        << jnp.uint32(28))
     if ctx is not None:
         fmap = jnp.repeat(
             fmap | (ctx.owners << jnp.uint32(8))
@@ -356,21 +397,32 @@ def _block_binding(spec: PageSpec, leaf: LeafPageSpec, page_ids: jax.Array,
         jnp.tile(blk, n))
 
 
+def _uniform_keys(ctx: PageKeyCtx):
+    """Single-row key view for the uniform fast path (row of page 0)."""
+    row = ctx.key_idx[0]
+    return (ctx.bank_key[row], ctx.bank_round_keys[row],
+            ctx.bank_hash_key[row])
+
+
 def _crypt(spec: PageSpec, leaf: LeafPageSpec, buf: jax.Array,
            page_ids: jax.Array, vns: jax.Array, keys,
-           ctx: PageKeyCtx | None = None) -> jax.Array:
+           ctx: PageKeyCtx | None = None,
+           uniform: bool = False) -> jax.Array:
     """XOR-crypt (enc == dec) page payloads.  buf: (N, page_bytes) u8.
 
     ``ctx=None``: every page under the engine-wide ``keys``.  With a
     ctx, each page's keys are gathered from the bank row it selects and
-    the crypt is vmapped over pages (per-page key schedules).
+    the crypt is vmapped over pages (per-page key schedules); with
+    ``uniform=True`` every page is known (host-side) to select the same
+    bank row, so a single gathered key runs the flat single-key route —
+    counters/bindings are unchanged, only the dispatch shape is.
     """
     cfg = spec.cfg
     if cfg.name == "off":
         return buf
     if cfg.baes:
         counters = _block_counters(spec, leaf, page_ids, vns, ctx)
-        if ctx is not None:
+        if ctx is not None and not uniform:
             rks = ctx.bank_round_keys[ctx.key_idx]         # (N, 11, 16)
             kks = ctx.bank_key[ctx.key_idx]                # (N, 16)
             per_page = counters.reshape(-1, leaf.n_blocks, 4)
@@ -380,14 +432,18 @@ def _crypt(spec: PageSpec, leaf: LeafPageSpec, buf: jax.Array,
                                          block_bytes=cfg.block_bytes, key=kk1)
 
             return jax.vmap(one)(buf, rks, kks, per_page)
+        if ctx is None:
+            key, round_keys = keys.key, keys.round_keys
+        else:
+            key, round_keys, _ = _uniform_keys(ctx)
         narrow = cfg.block_bytes // SEGMENT_BYTES <= 11
         if spec.use_kernel and narrow:
             from repro.kernels.otp_xor.ops import baes_encrypt_kernel
-            out = baes_encrypt_kernel(buf.reshape(-1), keys.round_keys,
+            out = baes_encrypt_kernel(buf.reshape(-1), round_keys,
                                       counters, block_bytes=cfg.block_bytes)
         else:
-            out = baes.baes_encrypt(buf.reshape(-1), keys.round_keys, counters,
-                                    block_bytes=cfg.block_bytes, key=keys.key)
+            out = baes.baes_encrypt(buf.reshape(-1), round_keys, counters,
+                                    block_bytes=cfg.block_bytes, key=key)
         return out.reshape(buf.shape)
     # T-AES: one AES invocation per 16B segment, PA advancing per segment.
     segs_per_page = leaf.page_bytes // SEGMENT_BYTES
@@ -395,13 +451,18 @@ def _crypt(spec: PageSpec, leaf: LeafPageSpec, buf: jax.Array,
           + page_ids.astype(jnp.uint32)[:, None] * jnp.uint32(segs_per_page)
           + jnp.arange(segs_per_page, dtype=jnp.uint32)[None, :]).reshape(-1)
     vn_col = jnp.repeat(vns.astype(jnp.uint32), segs_per_page)
+    shard_w = _shard_ctr_word(spec)
     if ctx is None:
-        zeros = jnp.zeros_like(pa)
-        counters = jnp.stack([zeros, pa, zeros, vn_col], axis=-1)
+        word0 = jnp.full_like(pa, shard_w)
+        counters = jnp.stack([word0, pa, jnp.zeros_like(pa), vn_col], axis=-1)
         otp = ctr.ctr_keystream(keys.round_keys, counters)
         return (buf.reshape(-1, SEGMENT_BYTES) ^ otp).reshape(buf.shape)
     salts, tenant = _tenant_words(ctx, segs_per_page)
-    counters = jnp.stack([salts, pa, tenant, vn_col], axis=-1)
+    counters = jnp.stack([salts ^ shard_w, pa, tenant, vn_col], axis=-1)
+    if uniform:
+        _, round_keys, _ = _uniform_keys(ctx)
+        otp = ctr.ctr_keystream(round_keys, counters)
+        return (buf.reshape(-1, SEGMENT_BYTES) ^ otp).reshape(buf.shape)
     per_page = counters.reshape(-1, segs_per_page, 4)
     otp = jax.vmap(ctr.ctr_keystream)(
         ctx.bank_round_keys[ctx.key_idx], per_page)
@@ -411,12 +472,13 @@ def _crypt(spec: PageSpec, leaf: LeafPageSpec, buf: jax.Array,
 
 def _page_block_macs(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
                      page_ids: jax.Array, vns: jax.Array, keys,
-                     ctx: PageKeyCtx | None = None) -> jax.Array:
+                     ctx: PageKeyCtx | None = None,
+                     uniform: bool = False) -> jax.Array:
     """optBlk MACs of N ciphertext pages: (N, n_blocks, MAC_BYTES) u8."""
     cfg = spec.cfg
     binding = _block_binding(spec, leaf, page_ids, vns, ctx)
     n = page_ids.shape[0]
-    if ctx is not None:
+    if ctx is not None and not uniform:
         per_page = mac.Binding(
             *(jnp.broadcast_to(f, (n * leaf.n_blocks,))
               .reshape(n, leaf.n_blocks) for f in binding))
@@ -428,21 +490,35 @@ def _page_block_macs(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
 
         return jax.vmap(one)(ct, per_page, ctx.bank_hash_key[ctx.key_idx],
                              ctx.bank_round_keys[ctx.key_idx])
+    if ctx is None:
+        hash_key, round_keys = keys.hash_key, keys.round_keys
+    else:
+        _, round_keys, hash_key = _uniform_keys(ctx)
     blocks = ct.reshape(-1, cfg.block_bytes)
-    macs = mac.block_macs(blocks, binding, hash_key_u32=keys.hash_key,
-                          round_keys=keys.round_keys, engine=cfg.mac_engine)
+    macs = mac.block_macs(blocks, binding, hash_key_u32=hash_key,
+                          round_keys=round_keys, engine=cfg.mac_engine)
     return macs.reshape(n, leaf.n_blocks, mac.MAC_BYTES)
 
 
 def _fused_read(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
-                page_ids: jax.Array, vns: jax.Array, keys):
-    """Kernel-fused decrypt + optBlk MACs in one pass over the bytes."""
+                page_ids: jax.Array, vns: jax.Array, keys,
+                ctx: PageKeyCtx | None = None):
+    """Kernel-fused decrypt + optBlk MACs in one pass over the bytes.
+
+    Single-key only: either ``ctx=None`` (engine-wide keys) or a
+    uniform ctx whose pages all resolve to one bank row — the tenant
+    words still land in the binding/counters either way.
+    """
     from repro.kernels.fused_crypt_mac.ops import secure_read_kernel
     cfg = spec.cfg
-    binding = _block_binding(spec, leaf, page_ids, vns)
-    counters = _block_counters(spec, leaf, page_ids, vns)
+    binding = _block_binding(spec, leaf, page_ids, vns, ctx)
+    counters = _block_counters(spec, leaf, page_ids, vns, ctx)
+    if ctx is None:
+        round_keys, hash_key = keys.round_keys, keys.hash_key
+    else:
+        _, round_keys, hash_key = _uniform_keys(ctx)
     pt, macs = secure_read_kernel(
-        ct.reshape(-1), binding, keys.round_keys, counters, keys.hash_key,
+        ct.reshape(-1), binding, round_keys, counters, hash_key,
         block_bytes=cfg.block_bytes)
     return (pt.reshape(ct.shape),
             macs.reshape(page_ids.shape[0], leaf.n_blocks, mac.MAC_BYTES))
@@ -504,7 +580,8 @@ def _dense_to_pages(spec: PageSpec, leaf: LeafPageSpec,
 
 
 def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
-               lengths: jax.Array, ctx: PageKeyCtx | None = None):
+               lengths: jax.Array, ctx: PageKeyCtx | None = None,
+               uniform: bool = False):
     """Gather + decrypt + verify the paged leaves for a batched decode.
 
     Args:
@@ -512,6 +589,9 @@ def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
       lengths: (max_slots,) int32 valid tokens per slot.
       ctx: optional per-page tenant keys (N = max_slots *
         pages_per_slot entries, row-major over the page table).
+      uniform: host-side promise that every ctx entry selects one bank
+        row — dispatches the flat single-key route (incl. the fused
+        kernel) with unchanged per-page bindings.
 
     Returns ``(dense_leaves, ok)`` — one dense (steps, S, max_len,
     *rest) array per paged leaf, and the AND of every gated MAC check
@@ -531,21 +611,21 @@ def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
     for li, leaf in enumerate(spec.leaves):
         ct = pool.cts[li][flat_ids].reshape(s, p, leaf.page_bytes)
         need_macs = cfg.verify != "none"
-        if need_macs and ctx is None and _kernel_read_ok(spec):
+        if need_macs and (ctx is None or uniform) and _kernel_read_ok(spec):
             pt, macs = _fused_read(spec, leaf, ct.reshape(-1, leaf.page_bytes),
-                                   flat_ids, vns, keys)
+                                   flat_ids, vns, keys, ctx)
             pt = pt.reshape(s, p, leaf.page_bytes)
             macs = macs.reshape(s, p, leaf.n_blocks, mac.MAC_BYTES)
         else:
             pt = _crypt(spec, leaf, ct.reshape(-1, leaf.page_bytes),
-                        flat_ids, vns, keys, ctx).reshape(s, p,
-                                                          leaf.page_bytes)
+                        flat_ids, vns, keys, ctx,
+                        uniform).reshape(s, p, leaf.page_bytes)
             macs = None
             if need_macs:
                 macs = _page_block_macs(
                     spec, leaf, ct.reshape(-1, leaf.page_bytes), flat_ids,
-                    vns, keys, ctx).reshape(s, p, leaf.n_blocks,
-                                            mac.MAC_BYTES)
+                    vns, keys, ctx, uniform).reshape(s, p, leaf.n_blocks,
+                                                     mac.MAC_BYTES)
         if cfg.verify == "block":
             stored = pool.block_macs[li][flat_ids].reshape(macs.shape)
             ok = ok & jnp.all((macs == stored) | ~touched[..., None, None])
@@ -562,7 +642,8 @@ def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
 
 def write_pages(pool: PagedKVPool, spec: PageSpec, keys, page_ids: jax.Array,
                 leaf_pages: list, vn, real_mask: jax.Array,
-                ctx: PageKeyCtx | None = None) -> PagedKVPool:
+                ctx: PageKeyCtx | None = None,
+                uniform: bool = False) -> PagedKVPool:
     """Encrypt + MAC N pages and scatter them into the pool.
 
     Args:
@@ -583,10 +664,11 @@ def write_pages(pool: PagedKVPool, spec: PageSpec, keys, page_ids: jax.Array,
     new_block_macs = list(pool.block_macs)
     for li, leaf in enumerate(spec.leaves):
         buf = _dense_to_pages(spec, leaf, leaf_pages[li])
-        ct = _crypt(spec, leaf, buf, page_ids, vns, keys, ctx)
+        ct = _crypt(spec, leaf, buf, page_ids, vns, keys, ctx, uniform)
         new_cts.append(pool.cts[li].at[page_ids].set(ct))
         if cfg.verify != "none":
-            macs = _page_block_macs(spec, leaf, ct, page_ids, vns, keys, ctx)
+            macs = _page_block_macs(spec, leaf, ct, page_ids, vns, keys, ctx,
+                                    uniform)
             if cfg.verify == "block":
                 new_block_macs[li] = pool.block_macs[li].at[page_ids].set(macs)
             agg = agg ^ mac.xor_aggregate(macs, axis=1)
@@ -603,7 +685,8 @@ def write_pages(pool: PagedKVPool, spec: PageSpec, keys, page_ids: jax.Array,
 
 def write_prefill(pool: PagedKVPool, spec: PageSpec, keys,
                   page_ids: jax.Array, dense_leaves: list, n_write_pages: int,
-                  vn, ctx: PageKeyCtx | None = None) -> PagedKVPool:
+                  vn, ctx: PageKeyCtx | None = None,
+                  uniform: bool = False) -> PagedKVPool:
     """Protect the first ``n_write_pages`` pages of one freshly-prefilled
     slot.  ``dense_leaves``: per paged leaf, (steps, 1, max_len, *rest).
     """
@@ -617,13 +700,15 @@ def write_prefill(pool: PagedKVPool, spec: PageSpec, keys,
     real = ids < spec.n_pages
     if ctx is not None:
         ctx = ctx.take(n_write_pages)
-    return write_pages(pool, spec, keys, ids, leaf_pages, vn, real, ctx)
+    return write_pages(pool, spec, keys, ids, leaf_pages, vn, real, ctx,
+                       uniform)
 
 
 def write_dirty(pool: PagedKVPool, spec: PageSpec, keys,
                 page_table: jax.Array, dense_leaves: list,
                 lengths: jax.Array, active: jax.Array, vn,
-                ctx: PageKeyCtx | None = None) -> PagedKVPool:
+                ctx: PageKeyCtx | None = None,
+                uniform: bool = False) -> PagedKVPool:
     """Re-encrypt + re-MAC the ONE dirty page per active slot.
 
     ``lengths`` are the pre-increment lengths: the decode step just
@@ -646,7 +731,119 @@ def write_dirty(pool: PagedKVPool, spec: PageSpec, keys,
         idx = tok_idx.reshape((1, s, ptok) + (1,) * len(leaf.rest))
         page = jnp.take_along_axis(dense_leaf, idx, axis=2)
         leaf_pages.append(jnp.moveaxis(page, 0, 1))    # (S, steps, ptok, rest)
-    return write_pages(pool, spec, keys, pid, leaf_pages, vn, real, ctx)
+    return write_pages(pool, spec, keys, pid, leaf_pages, vn, real, ctx,
+                       uniform)
+
+
+def _bytes_to_tokens(spec: PageSpec, leaf: LeafPageSpec,
+                     buf: jax.Array) -> jax.Array:
+    """(N, page_bytes) u8 -> (N, steps, ptok, *rest) token data
+    (inverse of :func:`_dense_to_pages`, padding stripped)."""
+    n = buf.shape[0]
+    ptok = spec.page_tokens
+    per_layer = buf.reshape(n, leaf.steps, leaf.lp_bytes)
+    payload = per_layer[..., : ptok * leaf.tok_bytes]
+    itemsize = jnp.dtype(leaf.dtype).itemsize
+    elems = leaf.tok_bytes // itemsize
+    grouped = payload.reshape(n, leaf.steps, ptok, elems, itemsize)
+    vals = jax.lax.bitcast_convert_type(grouped, jnp.dtype(leaf.dtype))
+    return vals.reshape((n, leaf.steps, ptok) + leaf.rest)
+
+
+def read_pages_raw(pool: PagedKVPool, spec: PageSpec, keys,
+                   page_ids: jax.Array, ctx: PageKeyCtx | None = None,
+                   uniform: bool = False):
+    """Decrypt + verify N whole pages, returning their token payloads.
+
+    Unlike :func:`read_pages` this is page-shaped, not slot-shaped: it
+    returns per paged leaf a (N, steps, page_tokens, *rest) array — the
+    exact ``leaf_pages`` layout :func:`write_pages` consumes — plus the
+    AND of every gated MAC check over the *real* pages (scratch-page
+    entries are ignored, so callers can pad to a bucketed size).  This
+    is the read half of resealing and secure migration.
+    """
+    cfg = spec.cfg
+    n = page_ids.shape[0]
+    vns = pool.page_vns[page_ids]
+    real = page_ids < spec.n_pages
+    ok = jnp.asarray(True)
+    agg = jnp.zeros((n, mac.MAC_BYTES), jnp.uint8)
+    out = []
+    for li, leaf in enumerate(spec.leaves):
+        ct = pool.cts[li][page_ids]
+        need_macs = cfg.verify != "none"
+        if need_macs and (ctx is None or uniform) and _kernel_read_ok(spec):
+            pt, macs = _fused_read(spec, leaf, ct, page_ids, vns, keys, ctx)
+        else:
+            pt = _crypt(spec, leaf, ct, page_ids, vns, keys, ctx, uniform)
+            macs = None
+            if need_macs:
+                macs = _page_block_macs(spec, leaf, ct, page_ids, vns, keys,
+                                        ctx, uniform)
+        if cfg.verify == "block":
+            stored = pool.block_macs[li][page_ids]
+            ok = ok & jnp.all((macs == stored) | ~real[:, None, None])
+        elif cfg.verify == "layer":
+            agg = agg ^ mac.xor_aggregate(macs, axis=1)
+        out.append(_bytes_to_tokens(spec, leaf, pt))
+    if cfg.verify == "layer":
+        stored = pool.page_macs[page_ids]
+        ok = ok & jnp.all((agg == stored) | ~real[:, None])
+    if cfg.emulate_tree:
+        ok = ok & emulated_tree_probe(
+            n * sum(leaf.n_blocks for leaf in spec.leaves))
+    return out, ok
+
+
+def reseal_pages(pool: PagedKVPool, spec: PageSpec, keys,
+                 page_ids: jax.Array, vn,
+                 old_ctx: PageKeyCtx | None = None,
+                 new_ctx: PageKeyCtx | None = None,
+                 uniform: bool = False):
+    """Decrypt N pages under ``old_ctx`` and re-protect under ``new_ctx``
+    in place — the eager-rotation primitive.
+
+    One fused crossing: gather → decrypt+verify (old keys/epoch words)
+    → re-encrypt + re-MAC (new keys/epoch words, fresh ``vn``) →
+    scatter back to the SAME page ids.  Plaintext is bit-preserved, so
+    decode output is unchanged; the pool/page metadata moves to the new
+    epoch without preempting any slot.  Returns ``(new_pool, ok)`` —
+    the caller must gate on ``ok`` (a failed decrypt means the old
+    bytes were tampered; writing their reseal would launder them).
+    """
+    leaf_pages, ok = read_pages_raw(pool, spec, keys, page_ids, old_ctx,
+                                    uniform)
+    real = page_ids < spec.n_pages
+    new_pool = write_pages(pool, spec, keys, page_ids, leaf_pages, vn, real,
+                           new_ctx, uniform)
+    return new_pool, ok
+
+
+def migrate_pages(src_pool: PagedKVPool, src_spec: PageSpec,
+                  dst_pool: PagedKVPool, dst_spec: PageSpec, keys,
+                  src_ids: jax.Array, dst_ids: jax.Array, vn,
+                  src_ctx: PageKeyCtx | None = None,
+                  dst_ctx: PageKeyCtx | None = None):
+    """Secure page migration: reseal N pages from one shard's pool into
+    another's (single-dispatch form, for pools on one device).
+
+    Decrypts under the *source* shard binding (shard id in the RePA
+    fmap + CTR words), verifies, then re-encrypts + re-MACs under the
+    *destination* binding — the page arrives cryptographically pinned
+    to its new device and the old ciphertext is useless there.  For
+    pools on different devices, run :func:`read_pages_raw` on the
+    source device, transfer the plaintext leaf pages, and
+    :func:`write_pages` on the destination (what the cluster engine
+    does).  Returns ``(new_dst_pool, ok)``.
+    """
+    if src_spec.leaves != dst_spec.leaves:
+        raise ValueError("migration needs identically-laid-out pools")
+    leaf_pages, ok = read_pages_raw(src_pool, src_spec, keys, src_ids,
+                                    src_ctx)
+    real = dst_ids < dst_spec.n_pages
+    new_dst = write_pages(dst_pool, dst_spec, keys, dst_ids, leaf_pages, vn,
+                          real, dst_ctx)
+    return new_dst, ok
 
 
 def deferred_pool_check(pool: PagedKVPool, spec: PageSpec) -> jax.Array:

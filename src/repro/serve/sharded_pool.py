@@ -1,0 +1,126 @@
+"""Multi-device sharded view over per-shard paged KV pools.
+
+One :class:`~repro.serve.engine.SecureServingEngine` per accelerator
+owns a :class:`~repro.serve.kv_pages.PagedKVPool` whose RePA bindings
+and CTR counters carry that shard's id (see :mod:`repro.serve.kv_pages`
+"Sharded pools").  This module is the level *above*: a
+:class:`ShardedKVPool` aggregates the per-shard pools into one logical
+cache with
+
+* **shard-local free lists** — page allocation never crosses a device
+  or takes a cluster-wide lock; each shard engine allocates from its
+  own list and the cluster scheduler only moves *requests* (or, via
+  secure migration, whole pages) between shards;
+* **a cluster root MAC** — SeDA's integrity hierarchy (block MAC →
+  page VN → deferred pool MAC) extended one level up: each shard's
+  deferred pool MAC is XOR-folded into a root maintained incrementally
+  from pool-MAC deltas on every pool update.  The root update is a
+  listener on each engine's pool assignment, so it stays off the
+  decode critical path and never forces a device sync (deltas hop to
+  the root's device as async 8-byte transfers);
+* **a deferred root check** — off the critical path, verify every
+  shard's pool MAC against its page MACs AND the XOR of all shard pool
+  MACs against the root.  A shard silently swapping its whole pool
+  state (a cross-shard variant of the splicing attack the pool MAC
+  defeats within one device) fails the root.
+
+Cross-device replay is defeated one level down (shard-id binding in
+:mod:`kv_pages`); this module's job is aggregate bookkeeping and the
+secure-migration plumbing between two shards' pools.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mac
+
+__all__ = ["ShardedKVPool"]
+
+
+class ShardedKVPool:
+    """Aggregate view + root MAC over the pools of N shard engines.
+
+    Built by :class:`repro.serve.cluster.ClusterEngine`; usable
+    standalone over any list of engines whose specs agree on layout::
+
+        sharded = ShardedKVPool(engines)
+        ...  # engines serve; every pool update folds into the root
+        assert sharded.deferred_root_check()
+    """
+
+    def __init__(self, engines, *, root_device=None):
+        if not engines:
+            raise ValueError("a sharded pool needs at least one shard")
+        layouts = {(e.spec.leaves, e.spec.page_tokens, e.spec.n_pages,
+                    e.spec.scheme) for e in engines}
+        if len(layouts) != 1:
+            raise ValueError("shard engines must share one pool layout "
+                             "(leaves, page_tokens, n_pages, scheme)")
+        shards = sorted(e.spec.shard for e in engines)
+        if shards != list(range(len(engines))):
+            raise ValueError(f"engines carry shard ids {shards}, expected "
+                             f"0..{len(engines) - 1}")
+        self.engines = sorted(engines, key=lambda e: e.spec.shard)
+        self._root_dev = root_device or jax.devices()[0]
+        self._root = jnp.zeros((mac.MAC_BYTES,), jnp.uint8)
+        for engine in self.engines:
+            engine.attach_pool_listener(self._listener)
+            # Fold in whatever state the pool already carries.
+            self._fold(None, engine.pool)
+
+    # -- root MAC maintenance -----------------------------------------------
+
+    def _listener(self, old_pool, new_pool) -> None:
+        self._fold(old_pool, new_pool)
+
+    def _fold(self, old_pool, new_pool) -> None:
+        delta = (new_pool.pool_mac if old_pool is None
+                 else old_pool.pool_mac ^ new_pool.pool_mac)
+        # Async 8-byte hop to the root's device; no host sync.
+        self._root = self._root ^ jax.device_put(delta, self._root_dev)
+
+    @property
+    def root_mac(self) -> jax.Array:
+        """The incrementally-maintained cluster root MAC."""
+        return self._root
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.engines)
+
+    @property
+    def pools(self) -> list:
+        return [e.pool for e in self.engines]
+
+    @property
+    def specs(self) -> list:
+        return [e.spec for e in self.engines]
+
+    # -- aggregate bookkeeping ----------------------------------------------
+
+    def free_pages(self, shard: int) -> int:
+        """Shard-local free list depth (allocation never leaves a shard)."""
+        return len(self.engines[shard].free_pages)
+
+    def occupancy(self) -> list:
+        """Per-shard resident page count (n_pages - free)."""
+        return [e.n_pages - len(e.free_pages) for e in self.engines]
+
+    # -- deferred verification ----------------------------------------------
+
+    def deferred_root_check(self) -> bool:
+        """Whole-cluster deferred MAC: every shard's pool MAC verifies
+        against its page MACs, and the XOR of all shard pool MACs
+        matches the incrementally-maintained root.  Off the critical
+        path (cluster tick interval / end of run)."""
+        from repro.serve import kv_pages as kvp
+        for engine in self.engines:
+            if not bool(kvp.deferred_pool_check(engine.pool, engine.spec)):
+                return False
+        agg = np.zeros((mac.MAC_BYTES,), np.uint8)
+        for engine in self.engines:
+            agg ^= np.asarray(engine.pool.pool_mac)
+        return bool(np.array_equal(agg, np.asarray(self._root)))

@@ -87,6 +87,8 @@ class TenantRegistry:
         self._sessions: dict[int, str] = {}
         self._next_token = 0
         self._rotation_hooks: list = []
+        self._pre_rotation_hooks: list = []
+        self._bank_replicas: dict = {}      # device -> KeyBank copy
         k = max_tenants * retain
         lanes = self.hierarchy.nh_lanes
         self._bank = KeyBank(
@@ -147,6 +149,26 @@ class TenantRegistry:
     def bank(self) -> KeyBank:
         return self._bank
 
+    def bank_for(self, device=None) -> KeyBank:
+        """Device-resident replica of the key bank.
+
+        Sharded serving runs one engine per accelerator; each shard's
+        jitted step needs the bank *on its own device* (committed
+        arrays from different devices cannot meet in one computation).
+        Replicas are cached per device and invalidated whenever the
+        bank changes (registration / rotation), so a rotation fans the
+        new row out to every shard on its next tick.
+        """
+        if device is None:
+            return self._bank
+        replica = self._bank_replicas.get(device)
+        if replica is None:
+            import jax
+            replica = KeyBank(*(jax.device_put(a, device)
+                                for a in self._bank))
+            self._bank_replicas[device] = replica
+        return replica
+
     def key_row(self, index: int, epoch: int) -> int:
         """Bank row for (tenant index, epoch); KeyError outside retention."""
         tenant = self._by_index[index]
@@ -158,29 +180,41 @@ class TenantRegistry:
                 f"retain {self.retain})")
         return index * self.retain + epoch % self.retain
 
-    def attach_rotation_hook(self, hook) -> None:
-        """Register ``hook(tenant, new_epoch)`` to run after rotations.
+    def attach_rotation_hook(self, hook, *, pre: bool = False) -> None:
+        """Register ``hook(tenant, new_epoch)`` to run around rotations.
 
-        Every serving engine built on this registry attaches one so
+        Every serving engine built on this registry attaches hooks so
         that a rotation — no matter which engine (or operator) triggers
-        it — lets *all* engines preempt slots whose pages fall out of
-        the retained key window.  The registry holds a strong reference
-        to each hook, so its lifetime bounds the engines'.
+        it — lets *all* engines react.  ``pre=True`` hooks run BEFORE
+        any key material moves: the epoch about to leave the retained
+        window is still in the bank, so engines can eagerly reseal its
+        resident pages to a surviving epoch (no preemption, no KV
+        recompute).  Post hooks run after the new keys are installed.
+        The registry holds a strong reference to each hook, so its
+        lifetime bounds the engines'.
         """
-        self._rotation_hooks.append(hook)
+        (self._pre_rotation_hooks if pre else self._rotation_hooks).append(
+            hook)
 
     def rotate(self, tenant_id: str) -> int:
         """Bump ``tenant_id``'s epoch (live rotation).
 
-        The new epoch's keys overwrite the bank row of the epoch that
-        just left the retained window, whose host-side material is
+        Pre-rotation hooks run first, while the epoch about to fall out
+        of the retained window still has its keys in the bank (eager
+        reseal happens there).  Then the new epoch's keys overwrite the
+        bank row of the dropped epoch, whose host-side material is
         destroyed.  Pages written under the *previous* epoch keep
         verifying (its keys are retained) until their next dirty write
-        re-encrypts them under the new epoch.  Attached rotation hooks
-        run last, so every engine sharing this registry reacts.
+        re-encrypts them under the new epoch.  Post-rotation hooks run
+        last, so every engine sharing this registry reacts.
         """
         tenant = self.tenants[tenant_id]
-        new_epoch = tenant.keyset.rotate()
+        new_epoch = tenant.current_epoch + 1
+        for hook in self._pre_rotation_hooks:
+            hook(tenant, new_epoch)
+        if tenant.keyset.rotate() != new_epoch:
+            raise RuntimeError("keyset rotation desynced from the epoch "
+                               "announced to pre-rotation hooks")
         tenant.keyset.drop_before(new_epoch - self.retain + 1)
         self._install_epoch(tenant, new_epoch)
         for hook in self._rotation_hooks:
@@ -201,3 +235,4 @@ class TenantRegistry:
             hash_key=self._bank.hash_key.at[row].set(
                 keys.hash_key[: self._bank.hash_key.shape[1]]),
             salt=self._bank.salt.at[row].set(np.uint32(salt)))
+        self._bank_replicas.clear()         # shard replicas re-fan-out lazily

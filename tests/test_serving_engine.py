@@ -245,9 +245,11 @@ class TestLatencyStats:
         done = eng.run()
         lat = done.latency
         assert set(lat) == {"p50_ttft_ticks", "p95_ttft_ticks",
-                            "p50_ticks_per_token", "p95_ticks_per_token"}
+                            "p99_ttft_ticks", "p50_ticks_per_token",
+                            "p95_ticks_per_token", "p99_ticks_per_token"}
         assert lat["p50_ttft_ticks"] >= 0
         assert lat["p95_ttft_ticks"] >= lat["p50_ttft_ticks"]
+        assert lat["p99_ttft_ticks"] >= lat["p95_ttft_ticks"]
         assert lat["p50_ticks_per_token"] > 0
         for rid in rids:
             req = done[rid]

@@ -1,0 +1,447 @@
+"""Sharded secure serving: shard-bound integrity + cluster scheduling.
+
+Covers the distributed subsystem's guarantees:
+  * shard binding — a byte-identical page (ciphertext + MAC + VN)
+    replayed between shards fails verification, at the pool level and
+    through a running cluster; ``shard=0, n_shards=1`` stays
+    bit-identical to the unsharded layout;
+  * parity — a ``shards=1`` cluster is token-identical to the plain
+    engine for every scheme; ``shards in {2, 4}`` decode
+    token-identically to ``shards=1`` (placement never changes
+    tokens);
+  * secure migration — under shard imbalance a running slot's pages
+    move (decrypt under source binding, reseal under destination)
+    with zero preemptions and zero recomputed prefills, for every
+    scheme;
+  * eager reseal — key rotation reseals pages leaving the retained
+    window instead of preempting their slots (ROADMAP item);
+  * uniform fast path — single-bank-row ticks dispatch the flat
+    single-key route, token- and bit-identical to the vmapped one;
+  * root MAC — per-shard deferred pool MACs roll into a cluster root;
+    pool-state swaps that bypass the trusted increment fail the check.
+
+The in-process tests run the shards logically on the 1-device CPU
+(conftest forces no XLA flags by design); a subprocess test covers
+real forced multi-device placement.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.secure_exec import SCHEMES
+from repro.models import lm as lm_mod
+from repro.models.layers import init_params
+from repro.serve import kv_pages as kvp
+from repro.serve.cluster import ClusterEngine
+from repro.serve.engine import IntegrityError, SecureServingEngine
+from repro.tenancy import KeyHierarchy, TenantRegistry
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    arch = get_arch("minitron-4b")
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    return arch, cfg, params
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(0)
+    return [list(map(int, rng.integers(1, 256, n))) for n in (5, 7, 9)]
+
+
+def _cluster(smoke, **kw):
+    arch, cfg, params = smoke
+    kw.setdefault("shards", 2)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_tokens", 4)
+    kw.setdefault("pages_per_slot", 4)
+    kw.setdefault("scheme", "seda")
+    return ClusterEngine(arch, cfg, params, **kw)
+
+
+def _engine(smoke, **kw):
+    arch, cfg, params = smoke
+    kw.setdefault("max_slots", 3)
+    kw.setdefault("page_tokens", 4)
+    kw.setdefault("pages_per_slot", 4)
+    kw.setdefault("scheme", "seda")
+    return SecureServingEngine(arch, cfg, params, **kw)
+
+
+class TestShardedPoolUnit:
+    """kv_pages-level shard binding, no model in the loop."""
+
+    def _spec(self, scheme, shard, n_shards=2):
+        from repro.models.attention import KVCache
+        tree = [[KVCache(
+            k=jax.ShapeDtypeStruct((2, 2, 16, 2, 8), jnp.float32),
+            v=jax.ShapeDtypeStruct((2, 2, 16, 2, 8), jnp.float32),
+            length=jax.ShapeDtypeStruct((2,), jnp.int32))]]
+        return tree, kvp.build_page_spec(
+            tree, scheme=scheme, page_tokens=4, n_pages=6, max_slots=2,
+            max_len=16, shard=shard, n_shards=n_shards)
+
+    def _filled(self, spec, keys, rng):
+        pool = kvp.init_pool(spec)
+        data = [jnp.asarray(rng.standard_normal((2, 1, 16, 2, 8)),
+                            jnp.float32) for _ in spec.leaves]
+        ids = jnp.asarray([0, 1, 2, 3], jnp.int32)
+        return kvp.write_prefill(pool, spec, keys, ids, data, 4,
+                                 jnp.uint32(1)), data, ids
+
+    @pytest.mark.parametrize("scheme", ["seda", "sgx64", "mgx512"])
+    def test_byte_identical_replay_across_shards_fails(self, rng, keys,
+                                                       scheme):
+        _, spec0 = self._spec(scheme, 0)
+        _, spec1 = self._spec(scheme, 1)
+        pool0, _, ids = self._filled(spec0, keys, rng)
+        pool1 = kvp.init_pool(spec1)
+        # Everything the untrusted side could capture moves verbatim:
+        # ciphertext, per-page/per-block MACs, VNs.
+        pool1 = kvp.PagedKVPool(
+            cts=tuple(c1.at[ids].set(c0[ids])
+                      for c0, c1 in zip(pool0.cts, pool1.cts)),
+            page_macs=pool1.page_macs.at[ids].set(pool0.page_macs[ids]),
+            block_macs=tuple(b1.at[ids].set(b0[ids]) for b0, b1 in
+                             zip(pool0.block_macs, pool1.block_macs)),
+            page_vns=pool1.page_vns.at[ids].set(pool0.page_vns[ids]),
+            pool_mac=pool1.pool_mac)
+        # On its own shard the data verifies; replayed on shard 1 the
+        # binding (fmap bits 28-31) no longer matches.
+        _, ok_own = kvp.read_pages_raw(pool0, spec0, keys, ids)
+        _, ok_replay = kvp.read_pages_raw(pool1, spec1, keys, ids)
+        assert bool(ok_own)
+        assert not bool(ok_replay)
+
+    def test_shard0_bit_identical_to_unsharded(self, rng, keys):
+        from repro.models.attention import KVCache
+        tree = [[KVCache(
+            k=jax.ShapeDtypeStruct((2, 2, 16, 2, 8), jnp.float32),
+            v=jax.ShapeDtypeStruct((2, 2, 16, 2, 8), jnp.float32),
+            length=jax.ShapeDtypeStruct((2,), jnp.int32))]]
+        plain = kvp.build_page_spec(tree, scheme="seda", page_tokens=4,
+                                    n_pages=6, max_slots=2, max_len=16)
+        sharded = plain._replace(n_shards=4)      # shard 0 of 4
+        p_plain, data, ids = self._filled(plain, keys, rng)
+        p_shard, _, _ = self._filled(sharded, keys,
+                                     np.random.default_rng(0))
+        for a, b in zip(p_plain.cts, p_shard.cts):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(p_plain.page_macs),
+                                      np.asarray(p_shard.page_macs))
+
+    def test_spec_rejects_out_of_budget_shards(self):
+        from repro.models.attention import KVCache
+        tree = [[KVCache(
+            k=jax.ShapeDtypeStruct((2, 2, 16, 2, 8), jnp.float32),
+            v=jax.ShapeDtypeStruct((2, 2, 16, 2, 8), jnp.float32),
+            length=jax.ShapeDtypeStruct((2,), jnp.int32))]]
+        with pytest.raises(ValueError):
+            kvp.build_page_spec(tree, scheme="seda", page_tokens=4,
+                                n_pages=6, max_slots=2, max_len=16,
+                                shard=0, n_shards=kvp.MAX_SHARDS + 1)
+        with pytest.raises(ValueError):
+            kvp.build_page_spec(tree, scheme="seda", page_tokens=4,
+                                n_pages=6, max_slots=2, max_len=16,
+                                shard=2, n_shards=2)
+
+    @pytest.mark.parametrize("scheme", ["seda", "sgx64", "mgx512"])
+    def test_migrate_pages_roundtrips_and_rebinds(self, rng, keys, scheme):
+        _, spec0 = self._spec(scheme, 0)
+        _, spec1 = self._spec(scheme, 1)
+        pool0, data, ids = self._filled(spec0, keys, rng)
+        want, ok = kvp.read_pages_raw(pool0, spec0, keys, ids)
+        assert bool(ok)
+        dst = jnp.asarray([2, 3, 4, 5], jnp.int32)
+        pool1, ok_mig = kvp.migrate_pages(pool0, spec0, kvp.init_pool(spec1),
+                                          spec1, keys, ids, dst,
+                                          jnp.uint32(9))
+        assert bool(ok_mig)
+        got, ok_dst = kvp.read_pages_raw(pool1, spec1, keys, dst)
+        assert bool(ok_dst)
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want[0]))
+
+    def test_reseal_preserves_plaintext_and_reverifies(self, rng, keys):
+        _, spec = self._spec("seda", 0)
+        pool, data, ids = self._filled(spec, keys, rng)
+        want, _ = kvp.read_pages_raw(pool, spec, keys, ids)
+        resealed, ok = kvp.reseal_pages(pool, spec, keys, ids,
+                                        jnp.uint32(7))
+        assert bool(ok)
+        assert not np.array_equal(np.asarray(pool.cts[0][0]),
+                                  np.asarray(resealed.cts[0][0]))
+        got, ok2 = kvp.read_pages_raw(resealed, spec, keys, ids)
+        assert bool(ok2)
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want[0]))
+
+
+class TestClusterParity:
+    def _baseline(self, smoke, prompts, scheme, gen=4):
+        eng = _engine(smoke, scheme=scheme)
+        rids = [eng.submit(p, max_new_tokens=gen) for p in prompts]
+        return [eng.run()[r].generated for r in rids]
+
+    @pytest.mark.parametrize("scheme", sorted(SCHEMES))
+    def test_one_shard_token_identical_to_engine(self, smoke, prompts,
+                                                 scheme):
+        want = self._baseline(smoke, prompts, scheme)
+        cluster = _cluster(smoke, shards=1, max_slots=3, scheme=scheme)
+        rids = [cluster.submit(p, max_new_tokens=4) for p in prompts]
+        done = cluster.run()
+        assert [done[r].generated for r in rids] == want
+        assert cluster.deferred_check()
+
+    @pytest.mark.parametrize("shards", [2, 4])
+    def test_multi_shard_token_identical(self, smoke, prompts, shards):
+        want = self._baseline(smoke, prompts, "seda")
+        cluster = _cluster(smoke, shards=shards)
+        rids = [cluster.submit(p, max_new_tokens=4) for p in prompts]
+        done = cluster.run()
+        assert [done[r].generated for r in rids] == want
+        assert cluster.deferred_check()
+
+    def test_multi_tenant_cluster_token_identical(self, smoke, prompts):
+        want = self._baseline(smoke, prompts, "seda")
+        reg = TenantRegistry(KeyHierarchy(3), max_tenants=3)
+        sess = []
+        for i in range(3):
+            reg.register(f"t{i}")
+            sess.append(reg.open_session(f"t{i}"))
+        cluster = _cluster(smoke, shards=2, registry=reg, rotate_every=2)
+        rids = [cluster.submit(p, max_new_tokens=4, session=s)
+                for p, s in zip(prompts, sess)]
+        done = cluster.run()
+        assert [done[r].generated for r in rids] == want
+        assert cluster.engine_stats["rotations"] > 0
+        assert cluster.deferred_check()
+
+    def test_tenant_affinity_routing(self, smoke, prompts):
+        reg = TenantRegistry(KeyHierarchy(4), max_tenants=2)
+        reg.register("a")
+        reg.register("b")
+        sa, sb = reg.open_session("a"), reg.open_session("b")
+        cluster = _cluster(smoke, shards=2, registry=reg)
+        cluster.submit(prompts[0], max_new_tokens=8, session=sa)
+        cluster.submit(prompts[1], max_new_tokens=8, session=sb)
+        cluster.step()
+        # Distinct tenants spread over distinct shards; a follow-up
+        # request of tenant a joins a's shard despite the load tie.
+        a_shard = next(s for s, e in enumerate(cluster.engines)
+                       if any(sl is not None and sl.tenant is not None
+                              and sl.tenant.tenant_id == "a"
+                              for sl in e.slots))
+        assert cluster._route(sa.index) == a_shard
+
+
+class TestSecureMigration:
+    @pytest.mark.parametrize("scheme", sorted(SCHEMES))
+    def test_migration_under_load_zero_recompute(self, smoke, prompts,
+                                                 scheme):
+        # Two long decodes route to shard 0, a short one to shard 1;
+        # when the short one drains, shard 0's page pressure migrates
+        # its youngest slot — nothing is preempted or recomputed.
+        cluster = _cluster(smoke, scheme=scheme, shards=2, max_slots=2,
+                           pages_per_slot=8, n_pages=8)
+        r0 = cluster.submit(prompts[0], max_new_tokens=20)
+        r1 = cluster.submit(prompts[1], max_new_tokens=2)
+        r2 = cluster.submit(prompts[2], max_new_tokens=20)
+        done = cluster.run()
+        stats = cluster.engine_stats
+        assert cluster.stats["migrations"] > 0
+        assert stats["preemptions"] == 0
+        assert stats["admitted"] == 3          # zero recomputed prefills
+        assert cluster.deferred_check()
+        eng = _engine(smoke, scheme=scheme, max_slots=3, pages_per_slot=8,
+                      n_pages=24)
+        b0 = eng.submit(prompts[0], max_new_tokens=20)
+        b1 = eng.submit(prompts[1], max_new_tokens=2)
+        b2 = eng.submit(prompts[2], max_new_tokens=20)
+        base = eng.run()
+        assert [done[r].generated for r in (r0, r1, r2)] == \
+               [base[b].generated for b in (b0, b1, b2)]
+
+    def test_migrated_tenant_pages_reseal_to_destination(self, smoke,
+                                                         prompts):
+        reg = TenantRegistry(KeyHierarchy(5), max_tenants=2)
+        reg.register("a")
+        reg.register("b")
+        sa, sb = reg.open_session("a"), reg.open_session("b")
+        cluster = _cluster(smoke, shards=2, max_slots=2, pages_per_slot=8,
+                           n_pages=8, registry=reg)
+        r0 = cluster.submit(prompts[0], max_new_tokens=20, session=sa)
+        r1 = cluster.submit(prompts[1], max_new_tokens=2, session=sb)
+        r2 = cluster.submit(prompts[2], max_new_tokens=20, session=sa)
+        done = cluster.run()
+        assert cluster.stats["migrations"] > 0
+        assert cluster.engine_stats["preemptions"] == 0
+        assert all(len(done[r].generated) == n
+                   for r, n in ((r0, 20), (r1, 2), (r2, 20)))
+        assert cluster.deferred_check()
+
+
+class TestResealRotation:
+    def test_rotation_reseals_instead_of_preempting(self, smoke, prompts):
+        reg = TenantRegistry(KeyHierarchy(3), max_tenants=2)
+        reg.register("t0")
+        s0 = reg.open_session("t0")
+        eng = _engine(smoke, max_slots=1, pages_per_slot=6, registry=reg)
+        rid = eng.submit(prompts[0], max_new_tokens=10, session=s0)
+        eng.step()
+        eng.step()
+        # Three rotations: epoch-0 (and then epoch-1) pages would fall
+        # out of the retained window — previously each exit preempted
+        # the slot and recomputed its KV.
+        for _ in range(3):
+            eng.rotate("t0")
+        done = eng.run()
+        assert eng.stats["preemptions"] == 0
+        assert eng.stats["reseals"] > 0
+        assert eng.stats["admitted"] == 1
+        reg2 = TenantRegistry(KeyHierarchy(3), max_tenants=2)
+        reg2.register("t0")
+        sx = reg2.open_session("t0")
+        eng2 = _engine(smoke, max_slots=1, pages_per_slot=6, registry=reg2)
+        r2 = eng2.submit(prompts[0], max_new_tokens=10, session=sx)
+        assert eng2.run()[r2].generated == done[rid].generated
+
+    def test_reseal_fans_out_to_every_engine(self, smoke, prompts):
+        # Rotation triggered through ONE engine reseals resident pages
+        # on EVERY engine sharing the registry.
+        reg = TenantRegistry(KeyHierarchy(8), max_tenants=2)
+        reg.register("t0")
+        s0 = reg.open_session("t0")
+        ea = _engine(smoke, max_slots=1, registry=reg)
+        eb = _engine(smoke, max_slots=1, registry=reg)
+        ra = ea.submit(prompts[0], max_new_tokens=8, session=s0)
+        rb = eb.submit(prompts[0], max_new_tokens=8, session=s0)
+        ea.step()
+        eb.step()
+        ea.rotate("t0")
+        ea.rotate("t0")               # epoch-0 keys are dropped now
+        assert eb.stats["reseals"] > 0
+        assert eb.stats["preemptions"] == 0
+        assert len(eb.run()[rb].generated) == 8
+        assert len(ea.run()[ra].generated) == 8
+
+
+class TestUniformFastPath:
+    def test_single_row_ticks_use_fast_path(self, smoke, prompts):
+        reg = TenantRegistry(KeyHierarchy(5), max_tenants=2)
+        reg.register("solo")
+        ss = reg.open_session("solo")
+        eng = _engine(smoke, registry=reg)
+        rids = [eng.submit(p, max_new_tokens=4, session=ss)
+                for p in prompts]
+        done = eng.run()
+        assert eng.stats["uniform_fast_ticks"] > 0
+        assert eng.stats["uniform_fast_ticks"] == eng.stats["decode_steps"]
+        base = _engine(smoke)
+        brids = [base.submit(p, max_new_tokens=4) for p in prompts]
+        bdone = base.run()
+        assert [done[r].generated for r in rids] == \
+               [bdone[r].generated for r in brids]
+
+    def test_mixed_tenants_fall_back_to_vmapped_path(self, smoke, prompts):
+        reg = TenantRegistry(KeyHierarchy(5), max_tenants=2)
+        reg.register("a")
+        reg.register("b")
+        sa, sb = reg.open_session("a"), reg.open_session("b")
+        eng = _engine(smoke, max_slots=2, registry=reg)
+        eng.submit(prompts[0], max_new_tokens=4, session=sa)
+        eng.submit(prompts[1], max_new_tokens=4, session=sb)
+        eng.run()
+        assert eng.stats["uniform_fast_ticks"] == 0
+
+
+class TestClusterIntegrity:
+    def test_cross_shard_replay_through_cluster_raises(self, smoke,
+                                                       prompts):
+        cluster = _cluster(smoke, max_slots=1)
+        cluster.submit(prompts[0], max_new_tokens=8)
+        cluster.submit(prompts[1], max_new_tokens=6)
+        cluster.step()
+        e0, e1 = cluster.engines
+        s0 = next(s for s in e0.slots if s is not None)
+        s1 = next(s for s in e1.slots if s is not None)
+        pid0, pid1 = s0.pages[0], s1.pages[0]
+        e1.pool = e1.pool._replace(
+            cts=tuple(c1.at[pid1].set(c0[pid0])
+                      for c0, c1 in zip(e0.pool.cts, e1.pool.cts)),
+            page_macs=e1.pool.page_macs.at[pid1].set(
+                e0.pool.page_macs[pid0]),
+            page_vns=e1.pool.page_vns.at[pid1].set(
+                e0.pool.page_vns[pid0]))
+        with pytest.raises(IntegrityError):
+            cluster.run()
+
+    def test_root_mac_catches_untracked_pool_swap(self, smoke, prompts):
+        cluster = _cluster(smoke)
+        for p in prompts:
+            cluster.submit(p, max_new_tokens=6)
+        cluster.step()
+        assert cluster.deferred_check()
+        # A whole-pool-MAC substitution that bypasses the trusted
+        # incremental maintenance (direct memory swap, not a pool
+        # update the listener sees).
+        e0 = cluster.engines[0]
+        tampered = np.asarray(e0.pool.pool_mac).copy()
+        tampered[0] ^= 0xFF
+        e0._pool = e0.pool._replace(pool_mac=jnp.asarray(tampered))
+        assert not cluster.deferred_check()
+
+
+class TestMultiDeviceCluster:
+    """Real multi-device placement needs forced host devices, which
+    must exist before jax initializes — subprocess, like the dry-run
+    infra tests."""
+
+    def test_four_forced_devices_parity_and_root(self):
+        code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+assert jax.local_device_count() == 4
+import numpy as np
+from repro.configs import get_arch
+from repro.models import lm as lm_mod
+from repro.models.layers import init_params
+from repro.serve.cluster import ClusterEngine
+from repro.serve.engine import SecureServingEngine
+
+arch = get_arch("minitron-4b")
+cfg = arch.make_smoke_config()
+params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+prompts = [list(map(int, rng.integers(1, 256, n))) for n in (5, 7, 9)]
+eng = SecureServingEngine(arch, cfg, params, scheme="seda", max_slots=3,
+                          page_tokens=4, pages_per_slot=4)
+want = None
+rids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+done = eng.run()
+want = [done[r].generated for r in rids]
+cl = ClusterEngine(arch, cfg, params, shards=4, scheme="seda",
+                   max_slots=2, page_tokens=4, pages_per_slot=4)
+assert len({str(e._device) for e in cl.engines}) == 4
+rids = [cl.submit(p, max_new_tokens=4) for p in prompts]
+done = cl.run()
+assert [done[r].generated for r in rids] == want
+assert cl.deferred_check()
+print("SHARDED4_OK")
+"""
+        env = dict(os.environ, PYTHONPATH=SRC)
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=500)
+        assert "SHARDED4_OK" in out.stdout, out.stderr[-2000:]
