@@ -10,10 +10,18 @@ batch sizes {1, 8, 32}, reporting
   batched decode step, minus the same measurement for the ``off``
   scheme (the paper's DRAM-traffic-overhead axis).
 
+A second sweep — **decode scaling** — pins the pool size and sweeps
+the live context length: with the two-level page table's pow2
+page-count bucketing, the decode's gather/crypt/MAC work follows the
+touched-page bucket, so tok/s and ``bytes accessed`` should track the
+context, not the pool.  The all-resident window (the pre-bucketing
+behaviour) is measured alongside as the baseline the bucketing beats.
+
 Standalone JSON mode for the CI perf-smoke job::
 
     PYTHONPATH=src python benchmarks/bench_secure_serving.py \
-        --batch-sizes 1,8 --gen-len 6 --json results.json
+        --batch-sizes 1,8 --gen-len 6 --json results.json \
+        --decode-scaling-json decode-scaling.json
 """
 
 from __future__ import annotations
@@ -28,10 +36,12 @@ import numpy as np
 from repro.configs import get_arch
 from repro.models import lm as lm_mod
 from repro.models.layers import init_params
+from repro.serve import kv_pages as kvp
 from repro.serve.engine import SecureServingEngine
 
 DEFAULT_SCHEMES = ("off", "seda", "seda512", "mgx64", "sgx64")
 DEFAULT_BATCHES = (1, 8, 32)
+DEFAULT_SCALING_CONTEXTS = (8, 24, 56)
 
 
 def _measure(arch, cfg, params, scheme: str, batch: int, *,
@@ -91,6 +101,92 @@ def collect(schemes=DEFAULT_SCHEMES, batch_sizes=DEFAULT_BATCHES, *,
     return results
 
 
+def _measure_decode_scaling(arch, cfg, params, scheme: str, *, batch: int,
+                            page_tokens: int, pages_per_slot: int,
+                            prompt_len: int, gen_len: int,
+                            seed: int = 0) -> dict:
+    """One decode-scaling point: fixed pool, one live context length."""
+    rng = np.random.default_rng(seed)
+    eng = SecureServingEngine(
+        arch, cfg, params, scheme=scheme, max_slots=batch,
+        page_tokens=page_tokens, pages_per_slot=pages_per_slot,
+        n_pages=batch * pages_per_slot)
+    for _ in range(batch):
+        prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
+        eng.submit(prompt, max_new_tokens=gen_len)
+    eng.step()                       # admission + first decode (compiles)
+    t0 = time.perf_counter()
+    steps = 0
+    while any(s is not None for s in eng.slots) or eng.waiting:
+        eng.step()
+        steps += 1
+    dt = time.perf_counter() - t0
+    # The last decode runs at the pre-increment length prompt+gen-1;
+    # that is the widest window the engine actually dispatched.
+    bucket = kvp.page_count_bucket(
+        (prompt_len + gen_len - 1) // page_tokens + 1, pages_per_slot)
+    cost_bucket = eng.decode_cost_analysis(bucket)
+    cost_full = eng.decode_cost_analysis()       # all-resident baseline
+    decode_steps = max(eng.stats["decode_steps"], 1)
+    return {
+        "scheme": scheme,
+        "batch": batch,
+        "context_len": prompt_len + gen_len,
+        "pool_pages_per_slot": pages_per_slot,
+        "peak_bucket": bucket,
+        "tok_per_s": batch * steps / max(dt, 1e-9),
+        "us_per_step": dt / max(steps, 1) * 1e6,
+        "page_reads_per_step": eng.stats["decode_page_reads"] / decode_steps,
+        "all_resident_page_reads_per_step": batch * pages_per_slot,
+        "bytes_accessed_bucket": float(
+            cost_bucket.get("bytes accessed", 0.0)),
+        "bytes_accessed_all_resident": float(
+            cost_full.get("bytes accessed", 0.0)),
+    }
+
+
+def collect_decode_scaling(context_lens=DEFAULT_SCALING_CONTEXTS, *,
+                           arch_name: str = "minitron-4b",
+                           scheme: str = "seda", batch: int = 2,
+                           page_tokens: int = 8, pages_per_slot: int = 8,
+                           gen_len: int = 6) -> list:
+    """tok/s + decode work vs. live context length at a FIXED pool size.
+
+    Every point serves from the same (batch * pages_per_slot)-page
+    pool; only the prompt length moves.  With touched-page bucketing
+    the per-step page reads and HLO bytes follow the context's pow2
+    bucket; the ``all_resident_*`` fields are the pre-bucketing
+    baseline (full ``pages_per_slot`` window every step).
+    """
+    arch = get_arch(arch_name)
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    results = []
+    for prompt_len in context_lens:
+        results.append(_measure_decode_scaling(
+            arch, cfg, params, scheme, batch=batch, page_tokens=page_tokens,
+            pages_per_slot=pages_per_slot, prompt_len=prompt_len,
+            gen_len=gen_len))
+    return results
+
+
+def run_decode_scaling() -> list:
+    """benchmarks.run suite hook for the decode-scaling sweep."""
+    rows = []
+    for r in collect_decode_scaling():
+        saved = 1.0 - (r["page_reads_per_step"]
+                       / max(r["all_resident_page_reads_per_step"], 1))
+        rows.append({
+            "name": f"decode_scaling_ctx{r['context_len']}",
+            "us_per_call": r["us_per_step"],
+            "derived": (f"tok/s={r['tok_per_s']:.1f} "
+                        f"bucket={r['peak_bucket']}/"
+                        f"{r['pool_pages_per_slot']} "
+                        f"page_reads_saved={saved:.1%}"),
+        })
+    return rows
+
+
 def run() -> list:
     """benchmarks.run suite hook: CSV rows for a reduced sweep."""
     rows = []
@@ -122,6 +218,12 @@ def main(argv=None) -> list:
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=9)
     ap.add_argument("--json", default=None, help="write results to this file")
+    ap.add_argument("--decode-scaling-json", default=None,
+                    help="also run the decode-scaling sweep (tok/s + decode "
+                         "work vs. context length at fixed pool size) and "
+                         "write its results to this file")
+    ap.add_argument("--scaling-contexts",
+                    default=",".join(map(str, DEFAULT_SCALING_CONTEXTS)))
     args = ap.parse_args(argv)
 
     results = collect(
@@ -139,6 +241,20 @@ def main(argv=None) -> list:
             json.dump({"benchmark": "secure_serving", "results": results}, f,
                       indent=2)
         print(f"[serve-bench] wrote {args.json}")
+    if args.decode_scaling_json:
+        scaling = collect_decode_scaling(
+            tuple(int(c) for c in args.scaling_contexts.split(",")),
+            arch_name=args.arch)
+        for r in scaling:
+            print(f"[serve-bench] decode-scaling ctx={r['context_len']:<4} "
+                  f"bucket={r['peak_bucket']}/{r['pool_pages_per_slot']} "
+                  f"tok/s={r['tok_per_s']:9.1f} "
+                  f"page_reads/step={r['page_reads_per_step']:.1f} "
+                  f"(all-resident {r['all_resident_page_reads_per_step']})")
+        with open(args.decode_scaling_json, "w") as f:
+            json.dump({"benchmark": "decode_scaling", "results": scaling}, f,
+                      indent=2)
+        print(f"[serve-bench] wrote {args.decode_scaling_json}")
     return results
 
 

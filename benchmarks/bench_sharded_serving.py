@@ -47,16 +47,32 @@ DEFAULT_SHARDS = (1, 2, 4)
 
 def _measure(arch, cfg, params, scheme: str, shards: int, *, batch: int,
              page_tokens: int, pages_per_slot: int, gen_len: int,
-             prompt_len: int, seed: int = 0) -> dict:
+             prompt_len: int, seed: int = 0, tenants: int = 0,
+             use_kernel: bool = False, label: str = None) -> dict:
+    """One cluster measurement; ``tenants > 0`` serves the batch
+    round-robin over that many tenant sessions (per-tenant key domains),
+    ``use_kernel`` turns the Pallas kernels on."""
+    from repro.tenancy.keys import KeyHierarchy
+    from repro.tenancy.registry import TenantRegistry
+
     rng = np.random.default_rng(seed)
+    registry, sessions = None, [None]
+    if tenants:
+        registry = TenantRegistry(KeyHierarchy(7), max_tenants=max(tenants,
+                                                                   2))
+        for i in range(tenants):
+            registry.register(f"t{i}")
+        sessions = [registry.open_session(f"t{i}") for i in range(tenants)]
     per_shard = -(-batch // shards)
     cluster = ClusterEngine(
         arch, cfg, params, shards=shards, scheme=scheme,
         max_slots=per_shard, page_tokens=page_tokens,
-        pages_per_slot=pages_per_slot)
-    for _ in range(batch):
+        pages_per_slot=pages_per_slot, registry=registry,
+        use_kernel=use_kernel)
+    for i in range(batch):
         prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
-        cluster.submit(prompt, max_new_tokens=gen_len)
+        cluster.submit(prompt, max_new_tokens=gen_len,
+                       session=sessions[i % len(sessions)])
     cluster.step()                  # admission + first decode (compiles)
     occ = [cluster.sharded.occupancy()]
     t0 = time.perf_counter()
@@ -69,7 +85,7 @@ def _measure(arch, cfg, params, scheme: str, shards: int, *, batch: int,
     occ_arr = np.asarray(occ, np.float64)
     stats = cluster.engine_stats
     return {
-        "scheme": scheme,
+        "scheme": label or scheme,
         "shards": shards,
         "decode_steps_timed": steps,
         "tok_per_s": batch * steps / max(dt, 1e-9),
@@ -78,6 +94,9 @@ def _measure(arch, cfg, params, scheme: str, shards: int, *, batch: int,
         "occupancy_peak": occ_arr.max(axis=0).tolist(),
         "migrations": cluster.stats["migrations"],
         "preemptions": stats["preemptions"],
+        "uniform_fast_ticks": stats["uniform_fast_ticks"],
+        "fused_mixed_ticks": stats["fused_mixed_ticks"],
+        "decode_steps": stats["decode_steps"],
         "root_mac_ok": cluster.deferred_check(),
         "latency": cluster.run().latency,
     }
@@ -86,7 +105,8 @@ def _measure(arch, cfg, params, scheme: str, shards: int, *, batch: int,
 def collect(schemes=tuple(SCHEMES), shard_counts=DEFAULT_SHARDS, *,
             arch_name: str = "minitron-4b", batch: int = 4,
             page_tokens: int = 8, pages_per_slot: int = 4,
-            gen_len: int = 8, prompt_len: int = 9) -> list:
+            gen_len: int = 8, prompt_len: int = 9,
+            fast_path_rows: bool = True) -> list:
     arch = get_arch(arch_name)
     cfg = arch.make_smoke_config()
     params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
@@ -99,6 +119,21 @@ def collect(schemes=tuple(SCHEMES), shard_counts=DEFAULT_SHARDS, *,
                          pages_per_slot=pages_per_slot, gen_len=gen_len,
                          prompt_len=prompt_len)
             r["devices"] = min(shards, n_dev)
+            results.append(r)
+    if fast_path_rows:
+        # Tenant-mode fast-path rows on one shard with the kernels on,
+        # for the CI gate: one tenant -> every tick single-row
+        # (uniform_fast_ticks); two tenants -> every tick mixed-row
+        # (fused_mixed_ticks).  A regression dropping either route
+        # zeroes its row's counter.
+        for tenants, label in ((1, "seda(uniform-tenant,fused)"),
+                               (2, "seda(mixed-tenant,fused)")):
+            r = _measure(arch, cfg, params, "seda", 1, batch=batch,
+                         page_tokens=page_tokens,
+                         pages_per_slot=pages_per_slot, gen_len=gen_len,
+                         prompt_len=prompt_len, tenants=tenants,
+                         use_kernel=True, label=label)
+            r["devices"] = 1
             results.append(r)
     return results
 
@@ -113,7 +148,9 @@ def run() -> list:
             "name": f"sharded_{r['scheme']}_s{r['shards']}",
             "us_per_call": r["us_per_step"],
             "derived": (f"tok/s={r['tok_per_s']:.1f} peak_occ={occ} "
-                        f"migrations={r['migrations']}"),
+                        f"migrations={r['migrations']} "
+                        f"uniform={r['uniform_fast_ticks']} "
+                        f"fused_mixed={r['fused_mixed_ticks']}"),
         })
     return rows
 

@@ -10,6 +10,7 @@ from __future__ import annotations
 import argparse
 import sys
 import traceback
+import types
 
 from benchmarks import (bench_area_power, bench_crypt_kernels,
                         bench_memory_traffic, bench_multi_tenant,
@@ -25,6 +26,8 @@ SUITES = {
     "crypt_kernels": bench_crypt_kernels,
     "secure_step": bench_secure_step,
     "secure_serving": bench_secure_serving,
+    "decode_scaling": types.SimpleNamespace(
+        run=bench_secure_serving.run_decode_scaling),
     "multi_tenant_serving": bench_multi_tenant,
     "sharded_serving": bench_sharded_serving,
 }

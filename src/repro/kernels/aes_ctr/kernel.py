@@ -33,7 +33,7 @@ from jax.experimental import pallas as pl
 from repro.core.aes import _RCON_NP, _SBOX_NP, _SHIFT_ROWS_PERM_NP  # noqa: F401
 from repro.kernels.common import cdiv, default_interpret
 
-__all__ = ["aes_ctr_keystream"]
+__all__ = ["aes_ctr_keystream", "aes_ctr_keystream_multi"]
 
 def _iota(n: int, dtype=jnp.int32) -> jax.Array:
     """1D iota built in-kernel (Pallas forbids captured array constants)."""
@@ -108,6 +108,70 @@ def _aes_ctr_kernel(counters_ref, rk_ref, sbox_ref, out_ref, *, subbytes: str):
     state = jnp.take(state, perm, axis=1)
     state = state ^ rk[10][None, :]
     out_ref[...] = _pack_lanes_le(state)
+
+
+def _aes_ctr_kernel_multi(counters_ref, rk_ref, sbox_ref, out_ref, *,
+                          subbytes: str):
+    """Per-block key schedules: rk_ref is (T, 11*16) — one schedule per
+    counter block, so one kernel pass serves a mixed-key batch (pages
+    owned by different tenant-epoch bank rows)."""
+    state = _unpack_counter_bytes(counters_ref[...])
+    t = state.shape[0]
+    rk = rk_ref[...].astype(jnp.int32).reshape(t, 11, 16)
+    if subbytes == "onehot":
+        sbox = sbox_ref[...].astype(jnp.float32)
+        sub = functools.partial(_sub_bytes_onehot, sbox_f32=sbox)
+    else:
+        sbox = sbox_ref[...].astype(jnp.int32)
+        sub = functools.partial(_sub_bytes_take, sbox=sbox)
+    idx = _iota(16)
+    r, c = idx % 4, idx // 4
+    perm = r + 4 * ((c + r) % 4)
+
+    state = state ^ rk[:, 0]
+    for rnd in range(1, 10):
+        state = sub(state)
+        state = jnp.take(state, perm, axis=1)
+        state = _mix_columns(state)
+        state = state ^ rk[:, rnd]
+    state = sub(state)
+    state = jnp.take(state, perm, axis=1)
+    state = state ^ rk[:, 10]
+    out_ref[...] = _pack_lanes_le(state)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "subbytes", "interpret"))
+def aes_ctr_keystream_multi(counter_words: jax.Array,
+                            round_keys_per: jax.Array, *, tile_n: int = 256,
+                            subbytes: str = "take",
+                            interpret: bool | None = None) -> jax.Array:
+    """(N, 4) u32 counters + PER-BLOCK (N, 11, 16) u8 schedules ->
+    (N, 4) u32 OTP lanes.  Mixed-key sibling of
+    :func:`aes_ctr_keystream`; bit-identical to running the single-key
+    kernel once per distinct schedule."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = counter_words.shape[0]
+    tile_n = min(tile_n, max(8, n))
+    n_pad = cdiv(n, tile_n) * tile_n
+    padded = jnp.zeros((n_pad, 4), jnp.uint32).at[:n].set(counter_words)
+    rk_flat = round_keys_per.reshape(n, 11 * 16)
+    rk_pad = jnp.zeros((n_pad, 11 * 16), jnp.uint8).at[:n].set(rk_flat)
+    sbox = jnp.asarray(_SBOX_NP, jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_aes_ctr_kernel_multi, subbytes=subbytes),
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, 4), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 11 * 16), lambda i: (i, 0)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 4), jnp.uint32),
+        interpret=interpret,
+    )(padded, rk_pad, sbox)
+    return out[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "subbytes", "interpret"))

@@ -5,9 +5,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.aes_ctr.kernel import aes_ctr_keystream
+from repro.kernels.aes_ctr.kernel import (aes_ctr_keystream,
+                                          aes_ctr_keystream_multi)
 
-__all__ = ["keystream_lanes", "keystream_bytes"]
+__all__ = ["keystream_lanes", "keystream_bytes", "keystream_lanes_multi",
+           "keystream_bytes_multi"]
 
 
 def keystream_lanes(counter_words: jax.Array, round_keys: jax.Array, *,
@@ -24,5 +26,25 @@ def keystream_bytes(counter_words: jax.Array, round_keys: jax.Array, *,
     """OTPs as (N, 16) uint8, matching :mod:`repro.core.ctr` layout."""
     lanes = keystream_lanes(counter_words, round_keys, subbytes=subbytes,
                             interpret=interpret)
+    return jax.lax.bitcast_convert_type(lanes[..., None], jnp.uint8).reshape(
+        lanes.shape[0], 16)
+
+
+def keystream_lanes_multi(counter_words: jax.Array,
+                          round_keys_per: jax.Array, *,
+                          subbytes: str = "take",
+                          interpret: bool | None = None) -> jax.Array:
+    """Mixed-key OTPs: per-block (N, 11, 16) schedules -> (N, 4) u32."""
+    return aes_ctr_keystream_multi(counter_words, round_keys_per,
+                                   subbytes=subbytes, interpret=interpret)
+
+
+def keystream_bytes_multi(counter_words: jax.Array,
+                          round_keys_per: jax.Array, *,
+                          subbytes: str = "take",
+                          interpret: bool | None = None) -> jax.Array:
+    """Mixed-key OTPs as (N, 16) uint8."""
+    lanes = keystream_lanes_multi(counter_words, round_keys_per,
+                                  subbytes=subbytes, interpret=interpret)
     return jax.lax.bitcast_convert_type(lanes[..., None], jnp.uint8).reshape(
         lanes.shape[0], 16)

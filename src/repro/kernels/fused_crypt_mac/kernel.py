@@ -27,7 +27,33 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.common import cdiv, default_interpret
 
-__all__ = ["fused_crypt_mac"]
+__all__ = ["fused_crypt_mac", "fused_crypt_mac_mixed"]
+
+
+def _nh_rows(m: jax.Array, k: jax.Array) -> jax.Array:
+    """NH over rows of ``m`` with PER-ROW keys ``k`` (both (T, L) u32);
+    returns (T, 2) u32 (hi, lo) with emulated 64-bit accumulation.
+
+    Shared by the single-key kernel (key row broadcast over the tile)
+    and the mixed-key kernel (one key row per block) — one copy of the
+    carry math, so the two paths cannot drift."""
+    a = m[:, 0::2] + k[:, 0::2]
+    b = m[:, 1::2] + k[:, 1::2]
+    mask = jnp.uint32(0xFFFF)
+    a_lo, a_hi = a & mask, a >> 16
+    b_lo, b_hi = b & mask, b >> 16
+    ll = a_lo * b_lo
+    mid = a_lo * b_hi + a_hi * b_lo
+    mid_carry = (mid < a_lo * b_hi).astype(jnp.uint32)
+    lo = ll + (mid << 16)
+    lo_carry = (lo < ll).astype(jnp.uint32)
+    hi = a_hi * b_hi + (mid >> 16) + (mid_carry << 16) + lo_carry
+    s0 = jnp.sum(lo & mask, axis=1, dtype=jnp.uint32)
+    s1 = jnp.sum(lo >> 16, axis=1, dtype=jnp.uint32)
+    tt = (s0 >> 16) + s1
+    lo_sum = (s0 & mask) | ((tt & mask) << 16)
+    hi_sum = jnp.sum(hi, axis=1, dtype=jnp.uint32) + (tt >> 16)
+    return jnp.stack([hi_sum, lo_sum], axis=-1)
 
 
 def _fused_kernel(ct_ref, base_ref, div_ref, bind_ref, key_ref,
@@ -47,23 +73,80 @@ def _fused_kernel(ct_ref, base_ref, div_ref, bind_ref, key_ref,
 
     # --- Integ engine: NH over ciphertext ‖ binding ------------------------
     m = jnp.concatenate([ct, bind], axis=-1)   # (T, L) with L = lanes + 8
-    a = m[:, 0::2] + k[None, 0::2]
-    b = m[:, 1::2] + k[None, 1::2]
-    mask = jnp.uint32(0xFFFF)
-    a_lo, a_hi = a & mask, a >> 16
-    b_lo, b_hi = b & mask, b >> 16
-    ll = a_lo * b_lo
-    mid = a_lo * b_hi + a_hi * b_lo
-    mid_carry = (mid < a_lo * b_hi).astype(jnp.uint32)
-    lo = ll + (mid << 16)
-    lo_carry = (lo < ll).astype(jnp.uint32)
-    hi = a_hi * b_hi + (mid >> 16) + (mid_carry << 16) + lo_carry
-    s0 = jnp.sum(lo & mask, axis=1, dtype=jnp.uint32)
-    s1 = jnp.sum(lo >> 16, axis=1, dtype=jnp.uint32)
-    tt = (s0 >> 16) + s1
-    lo_sum = (s0 & mask) | ((tt & mask) << 16)
-    hi_sum = jnp.sum(hi, axis=1, dtype=jnp.uint32) + (tt >> 16)
-    nh_ref[...] = jnp.stack([hi_sum, lo_sum], axis=-1)
+    nh_ref[...] = _nh_rows(m, jnp.broadcast_to(k[None, :], m.shape))
+
+
+def _fused_kernel_mixed(ct_ref, base_ref, div_ref, bind_ref, key_ref,
+                        pt_ref, nh_ref):
+    """Mixed-key variant: diversifiers and NH keys are PER BLOCK.
+
+    div_ref is (T, S*4) (each row that block's own key schedule rounds
+    1..S-1, flattened) and key_ref is (T, S*4 + 8) — one NH key row per
+    block — so one kernel pass serves pages that resolve to different
+    tenant-epoch bank rows.
+    """
+    ct = ct_ref[...]                           # (T, S*4) u32
+    base = base_ref[...]                       # (T, 4) u32
+    div = div_ref[...]                         # (T, S*4) u32
+    bind = bind_ref[...]                       # (T, 8) u32
+    k = key_ref[...]                           # (T, S*4 + 8) u32
+
+    t, lanes = ct.shape
+    s = lanes // 4
+
+    # --- Crypt engine: per-block diversified pad XOR -----------------------
+    pads = base[:, None, :] ^ div.reshape(t, s, 4)
+    pt_ref[...] = (ct.reshape(t, s, 4) ^ pads).reshape(t, lanes)
+
+    # --- Integ engine: NH over ciphertext ‖ binding, per-block keys --------
+    m = jnp.concatenate([ct, bind], axis=-1)   # (T, L) with L = lanes + 8
+    nh_ref[...] = _nh_rows(m, k)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def fused_crypt_mac_mixed(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
+                          div_lanes_per: jax.Array, bind_words: jax.Array,
+                          key_per_u32: jax.Array, *, tile_n: int = 256,
+                          interpret: bool | None = None):
+    """Mixed-key fused decrypt + NH: per-block diversifiers (N, S, 4)
+    and per-block NH keys (N, S*4 + 8).  Returns (plaintext lanes
+    (N, S*4) u32, NH hashes (N, 2) u32), bit-identical to vmapping
+    :func:`fused_crypt_mac` over per-key groups."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, lanes = ct_lanes.shape
+    s = div_lanes_per.shape[1]
+    assert lanes == 4 * s and key_per_u32.shape == (n, lanes + 8)
+    tile_n = min(tile_n, max(8, n))
+    n_pad = cdiv(n, tile_n) * tile_n
+    ct_p = jnp.zeros((n_pad, lanes), jnp.uint32).at[:n].set(ct_lanes)
+    base_p = jnp.zeros((n_pad, 4), jnp.uint32).at[:n].set(base_otp_lanes)
+    div_p = jnp.zeros((n_pad, lanes), jnp.uint32).at[:n].set(
+        div_lanes_per.reshape(n, lanes))
+    bind_p = jnp.zeros((n_pad, 8), jnp.uint32).at[:n].set(bind_words)
+    key_p = jnp.zeros((n_pad, lanes + 8), jnp.uint32).at[:n].set(key_per_u32)
+
+    pt, nh = pl.pallas_call(
+        _fused_kernel_mixed,
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 4), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 8), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, lanes + 8), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_n, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, lanes), jnp.uint32),
+            jax.ShapeDtypeStruct((n_pad, 2), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(ct_p, base_p, div_p, bind_p, key_p)
+    return pt[:n], nh[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))

@@ -3,14 +3,18 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import mac
 from repro.core.bytesutil import bytes_to_u32, u32_to_bytes
-from repro.kernels.aes_ctr.ops import keystream_bytes, keystream_lanes
-from repro.kernels.fused_crypt_mac.kernel import fused_crypt_mac
+from repro.kernels.aes_ctr.ops import (keystream_bytes, keystream_bytes_multi,
+                                       keystream_lanes, keystream_lanes_multi)
+from repro.kernels.fused_crypt_mac.kernel import (fused_crypt_mac,
+                                                  fused_crypt_mac_mixed)
 from repro.kernels.otp_xor.ops import _div_lanes
 
-__all__ = ["secure_read_kernel", "fused_crypt_mac"]
+__all__ = ["secure_read_kernel", "secure_read_kernel_mixed",
+           "fused_crypt_mac", "fused_crypt_mac_mixed"]
 
 
 def secure_read_kernel(ct_u8: jax.Array, binding: mac.Binding,
@@ -39,5 +43,49 @@ def secure_read_kernel(ct_u8: jax.Array, binding: mac.Binding,
     fin = mac.finalize_words(hashes[:, 0], hashes[:, 1], binding)
     pads = keystream_bytes(fin, round_keys, subbytes=subbytes,
                            interpret=interpret)
+    pt = u32_to_bytes(pt_lanes.reshape(-1)).reshape(ct_u8.shape)
+    return pt, pads[:, : mac.MAC_BYTES]
+
+
+def secure_read_kernel_mixed(ct_u8: jax.Array, binding: mac.Binding,
+                             bank_round_keys: jax.Array,
+                             counter_words: jax.Array,
+                             bank_hash_key: jax.Array, row_idx: jax.Array, *,
+                             block_bytes: int, subbytes: str = "take",
+                             interpret: bool | None = None):
+    """Mixed-key fused secure read: per-BLOCK keys gathered from a bank.
+
+    Args:
+      bank_round_keys: (K, 11, 16) u8 — the device key bank's schedules
+        (one row per retained (tenant, epoch)).
+      bank_hash_key: (K, n_lanes) u32 NH key rows.
+      row_idx: (N,) int32 bank row per optBlk (a page's row repeated
+        over its blocks).
+
+    Every block is decrypted and NH-hashed under its OWN bank row in
+    one fused pass — the route that keeps MIXED-row decode ticks on the
+    fused kernels instead of falling back to the vmapped per-page
+    reference.  Bit-identical to that vmapped path.
+    """
+    n_segments = block_bytes // 16
+    if n_segments - 1 > 10:
+        raise ValueError("kernel path supports narrow mode (<= 11 segments)")
+    rk_blocks = bank_round_keys[row_idx]                 # (N, 11, 16)
+    base = keystream_lanes_multi(counter_words, rk_blocks,
+                                 subbytes=subbytes, interpret=interpret)
+    ct = bytes_to_u32(ct_u8).reshape(-1, n_segments * 4)
+    n = ct.shape[0]
+    # Diversifiers are a pure function of a row's schedule: build the
+    # (K, S, 4) bank once, then gather rows per block.
+    div_bank = jax.vmap(lambda rk: _div_lanes(rk, n_segments))(
+        bank_round_keys)
+    div = div_bank[row_idx]                              # (N, S, 4)
+    bind_words = binding.words(n)
+    key = bank_hash_key[:, : ct.shape[1] + 8].astype(jnp.uint32)[row_idx]
+    pt_lanes, hashes = fused_crypt_mac_mixed(ct, base, div, bind_words, key,
+                                             interpret=interpret)
+    fin = mac.finalize_words(hashes[:, 0], hashes[:, 1], binding)
+    pads = keystream_bytes_multi(fin, rk_blocks, subbytes=subbytes,
+                                 interpret=interpret)
     pt = u32_to_bytes(pt_lanes.reshape(-1)).reshape(ct_u8.shape)
     return pt, pads[:, : mac.MAC_BYTES]

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 from repro.core import mac
 from repro.kernels.otp_xor.ref import otp_xor_ref
 
-__all__ = ["fused_crypt_mac_ref"]
+__all__ = ["fused_crypt_mac_ref", "fused_crypt_mac_mixed_ref"]
 
 
 def fused_crypt_mac_ref(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
@@ -29,3 +29,22 @@ def fused_crypt_mac_ref(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
     payload = jnp.concatenate([ct_lanes, bind_words], axis=-1)
     hi, lo = mac.nh_hash(payload, key_u32)
     return pt, jnp.stack([hi, lo], axis=-1)
+
+
+def fused_crypt_mac_mixed_ref(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
+                              div_lanes_per: jax.Array, bind_words: jax.Array,
+                              key_per_u32: jax.Array
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Mixed-key oracle: one single-key ref evaluation per block.
+
+    ``div_lanes_per`` is (N, S, 4) and ``key_per_u32`` (N, S*4 + 8) —
+    each block carries its own diversifiers and NH key (pages owned by
+    different tenant-epoch bank rows).
+    """
+    def one(ct1, base1, div1, bind1, key1):
+        pt, nh = fused_crypt_mac_ref(ct1[None], base1[None], div1,
+                                     bind1[None], key1)
+        return pt[0], nh[0]
+
+    return jax.vmap(one)(ct_lanes, base_otp_lanes, div_lanes_per,
+                         bind_words, key_per_u32)

@@ -378,10 +378,12 @@ class ClusterEngine:
                 col = jax.device_put(col, ed._device)
             ed.onchip[j] = ed.onchip[j].at[:, dst_slot].set(col)
         es.slots[slot_idx] = None
+        es.page_table.clear(slot_idx)
         es.free_pages.extend(slot.pages)
         ed._admit_seq += 1
         slot.pages = dst_pages
         slot.page_epochs = page_epochs
         slot.admit_seq = ed._admit_seq
         ed.slots[dst_slot] = slot
+        ed.page_table.install(dst_slot, slot)
         self.stats["migrations"] += 1

@@ -11,7 +11,12 @@ and a shared pool of MAC-protected KV pages (:mod:`repro.serve.kv_pages`):
 * **decode** — one jitted computation per tick batches every running
   slot: gather pages -> decrypt -> verify touched pages -> attend/append
   -> re-encrypt + re-MAC only the dirty page per slot.  All schemes from
-  :data:`repro.core.secure_exec.SCHEMES` run through the same step;
+  :data:`repro.core.secure_exec.SCHEMES` run through the same step.
+  The step runs over a pow2 **page-count-bucketed** window from the
+  two-level page table (:class:`repro.serve.kv_pages.TwoLevelPageTable`)
+  picked host-side per tick, so protection work scales with the pages
+  a tick actually touches (one compile per bucket), not with
+  ``pages_per_slot``;
 * **growth / eviction** — slots allocate pages on demand as decodes
   lengthen; under a full pool the youngest running request is preempted
   (pages freed, request requeued, KV recomputed on re-admission), so
@@ -282,11 +287,14 @@ class SecureServingEngine:
         self.stats = {"admitted": 0, "preemptions": 0, "decode_steps": 0,
                       "deferred_checks": 0, "rotations": 0,
                       "prefill_compiles": 0, "reseals": 0,
-                      "uniform_fast_ticks": 0}
+                      "uniform_fast_ticks": 0, "fused_mixed_ticks": 0,
+                      "decode_bucket_compiles": 0, "decode_page_reads": 0}
 
-        self._decode_fn = jax.jit(self._build_decode_fn())
-        self._decode_fn_uniform = (jax.jit(self._build_decode_fn(True))
-                                   if registry is not None else None)
+        # Two-level page table: the slot directory (level 1) feeds pow2
+        # page-count-bucketed decode windows (level 2); the decode step
+        # compiles once per (bucket, uniform) variant on demand.
+        self.page_table = kvp.TwoLevelPageTable(max_slots, pages_per_slot)
+        self._decode_fns: dict = {}
         self._prefill_fn = jax.jit(self._build_prefill_fn())
         self._writers: dict = {}
         self._resealers: dict = {}
@@ -333,10 +341,22 @@ class SecureServingEngine:
             leaves[idx] = onchip[j]
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
-    def _build_decode_fn(self, uniform: bool = False):
+    def _decode_fn_for(self, bucket: int, uniform: bool = False):
+        """The jitted decode step for one pow2 page-count bucket.
+
+        One compile per (bucket, uniform) pair — bounded by
+        2 * (log2(pages_per_slot) + 1) variants over an engine's life.
+        """
+        key = (bucket, uniform)
+        if key not in self._decode_fns:
+            self.stats["decode_bucket_compiles"] += 1
+            self._decode_fns[key] = jax.jit(
+                self._build_decode_fn(bucket, uniform))
+        return self._decode_fns[key]
+
+    def _build_decode_fn(self, bucket: int, uniform: bool = False):
         cfg, spec, keys = self.cfg, self.spec, self.keys
         tenant_mode = self.registry is not None
-        pages_per_slot = self.pages_per_slot
 
         def core(params, pool, onchip, page_table, lengths, active, tokens,
                  epoch, read_ctx, write_ctx):
@@ -371,7 +391,7 @@ class SecureServingEngine:
                       cur_key_idx, cur_epochs):
             read_ctx = kvp.PageKeyCtx.make(
                 bank, key_idx.reshape(-1),
-                jnp.repeat(owners, pages_per_slot), key_epochs.reshape(-1))
+                jnp.repeat(owners, bucket), key_epochs.reshape(-1))
             write_ctx = kvp.PageKeyCtx.make(bank, cur_key_idx, owners,
                                             cur_epochs)
             return core(params, pool, onchip, page_table, lengths, active,
@@ -691,16 +711,22 @@ class SecureServingEngine:
         """Model-level deferred MAC over the whole pool (paper Table I)."""
         return bool(kvp.deferred_pool_check(self.pool, self.spec))
 
-    def decode_cost_analysis(self) -> dict:
+    def decode_cost_analysis(self, bucket: Optional[int] = None) -> dict:
         """XLA cost analysis of the jitted batched decode step.
 
         ``bytes accessed`` makes the protection traffic HLO-visible:
         the delta vs. the ``off`` scheme is the metadata + crypto
-        traffic a scheme adds to one batched decode.
+        traffic a scheme adds to one batched decode.  ``bucket``
+        selects the page-count-bucketed variant to analyse (default:
+        the all-resident ``pages_per_slot`` window) — the delta across
+        buckets is the gather/crypt/MAC work touched-page bucketing
+        removes for short live contexts.
         """
+        if bucket is None:
+            bucket = self.pages_per_slot
         args = [
             self.params, self.pool, self.onchip,
-            jnp.zeros((self.max_slots, self.pages_per_slot), jnp.int32),
+            jnp.zeros((self.max_slots, bucket), jnp.int32),
             jnp.ones((self.max_slots,), jnp.int32),
             jnp.ones((self.max_slots,), bool),
             jnp.zeros((self.max_slots, 1), jnp.int32),
@@ -709,14 +735,15 @@ class SecureServingEngine:
         if self.registry is not None:
             args += [
                 self._bank(),
-                jnp.zeros((self.max_slots, self.pages_per_slot), jnp.int32),
+                jnp.zeros((self.max_slots, bucket), jnp.int32),
                 jnp.zeros((self.max_slots,), jnp.uint32),
-                jnp.zeros((self.max_slots, self.pages_per_slot), jnp.uint32),
+                jnp.zeros((self.max_slots, bucket), jnp.uint32),
                 jnp.zeros((self.max_slots,), jnp.int32),
                 jnp.zeros((self.max_slots,), jnp.uint32),
             ]
         try:
-            cost = self._decode_fn.lower(*args).compile().cost_analysis()
+            fn = self._decode_fn_for(bucket)
+            cost = fn.lower(*args).compile().cost_analysis()
         except Exception:  # noqa: BLE001 - backend-dependent availability
             return {}
         if isinstance(cost, (list, tuple)):
@@ -836,6 +863,7 @@ class SecureServingEngine:
                      admit_seq=self._admit_seq, tenant=tenant,
                      page_epochs=page_epochs)
         self.slots[slot_idx] = slot
+        self.page_table.install(slot_idx, slot)
         req.state = "running"
         req.generated.append(int(tok[0, 0]))
         if req.first_tick is None:
@@ -880,6 +908,7 @@ class SecureServingEngine:
         slot = self.slots[idx]
         self.free_pages.extend(slot.pages)
         self.slots[idx] = None
+        self.page_table.clear(idx)
         slot.req.state = "waiting"
         slot.req.n_evictions += 1
         self.stats["preemptions"] += 1
@@ -894,6 +923,7 @@ class SecureServingEngine:
         slot = self.slots[idx]
         self.free_pages.extend(slot.pages)
         self.slots[idx] = None
+        self.page_table.clear(idx)
         slot.req.state = "finished"
 
     def _maybe_finish(self, idx: int, finished: list) -> None:
@@ -936,15 +966,17 @@ class SecureServingEngine:
                 return None
         return (tenant, row)
 
-    def _tenant_decode_args(self, active_idx: list) -> tuple:
+    def _tenant_decode_args(self, active_idx: list, bucket: int) -> tuple:
         """Per-slot/per-page key selections for one decode tick.
 
+        Per-page arrays are shaped to the tick's page-count ``bucket``
+        (the level-2 window), matching the bucketed page table.
         Returns ``(args, uniform)`` — when ``uniform`` the whole batch
         resolves to one bank row (arrays are filled uniformly so the
         single gathered key covers scratch writes of inactive slots
         too) and the caller dispatches the single-key decode fn.
         """
-        s, p = self.max_slots, self.pages_per_slot
+        s, p = self.max_slots, bucket
         uni = self._uniform_row(active_idx)
         if uni is not None:
             tenant, row = uni
@@ -968,7 +1000,7 @@ class SecureServingEngine:
             cur_epochs[i] = tenant.current_epoch
             cur_key_idx[i] = self.registry.key_row(tenant.index,
                                                    tenant.current_epoch)
-            for j, epoch in enumerate(slot.page_epochs):
+            for j, epoch in enumerate(slot.page_epochs[:p]):
                 key_epochs[i, j] = epoch
                 try:
                     key_idx[i, j] = self.registry.key_row(tenant.index,
@@ -991,31 +1023,47 @@ class SecureServingEngine:
     def _decode_dispatch(self, active_idx: list):
         """Launch this tick's batched decode; no host sync.
 
+        The page-count bucket is picked HERE, host-side, from the live
+        lengths (no device value is consulted), so the dispatch stays
+        async and a cluster can dispatch every shard before collecting
+        any.  Protection work inside the jitted step scales with the
+        bucket's page window, not with ``pages_per_slot``.
+
         Returns the (still-async) ``(toks, ok)`` device values; the
-        pool/onchip state is already swapped to the new (async) arrays,
-        so a cluster can dispatch every shard before collecting any.
+        pool/onchip state is already swapped to the new (async) arrays.
         """
-        page_table = np.full((self.max_slots, self.pages_per_slot), -1,
-                             np.int32)
+        bucket = self.page_table.bucket_for(
+            (self.slots[i].length for i in active_idx), self.page_tokens)
+        page_table = self.page_table.window(bucket)
         lengths = np.zeros((self.max_slots,), np.int32)
         active = np.zeros((self.max_slots,), bool)
         tokens = np.zeros((self.max_slots, 1), np.int32)
         for i in active_idx:
             slot = self.slots[i]
-            page_table[i, : len(slot.pages)] = slot.pages
             lengths[i] = slot.length
             active[i] = True
             tokens[i, 0] = slot.req.generated[-1]
         args = [self.params, self.pool, self.onchip, jnp.asarray(page_table),
                 jnp.asarray(lengths), jnp.asarray(active),
                 jnp.asarray(tokens), self._next_epoch()]
-        decode_fn = self._decode_fn
+        uniform = False
         if self.registry is not None:
-            tenant_args, uniform = self._tenant_decode_args(active_idx)
+            tenant_args, uniform = self._tenant_decode_args(active_idx,
+                                                            bucket)
             args += tenant_args
-            if uniform:
-                decode_fn = self._decode_fn_uniform
-                self.stats["uniform_fast_ticks"] += 1
+        decode_fn = self._decode_fn_for(bucket, uniform)
+        if uniform or self.registry is None:
+            # Single-key tick: flat crypt/MAC route, fused kernels when
+            # the spec qualifies.
+            self.stats["uniform_fast_ticks"] += 1
+        elif kvp._kernel_read_ok(self.spec) and \
+                self.spec.cfg.verify != "none":
+            # Mixed bank rows, but the fused kernel stays on via its
+            # per-page round-key gather.  (verify == "none" reads skip
+            # MACs entirely and never enter the fused kernel, so they
+            # must not count as fused ticks.)
+            self.stats["fused_mixed_ticks"] += 1
+        self.stats["decode_page_reads"] += len(active_idx) * bucket
         self.pool, self.onchip, toks, ok = decode_fn(*args)
         self.stats["decode_steps"] += 1
         return toks, ok

@@ -55,7 +55,17 @@ single-tenant engine.  When every page of a crossing resolves to ONE
 bank row, ``uniform=True`` keeps the per-page (tenant, epoch) words in
 the RePA binding but dispatches the flat single-key crypt/MAC route
 (including the fused kernels) instead of the vmapped per-page one —
-bit-identical metadata, single-key speed.
+bit-identical metadata, single-key speed.  MIXED-row reads stay on the
+fused kernel too: the mixed variant gathers each page's AES schedule,
+B-AES diversifiers and NH key row from the bank inside one fused pass
+(:func:`repro.kernels.fused_crypt_mac.ops.secure_read_kernel_mixed`).
+
+**Touched-page windows.**  :class:`TwoLevelPageTable` (slot directory
+-> pow2 page-count-bucketed windows) lets every boundary crossing run
+on just the pages a tick touches: ``read_pages``/``write_dirty``
+derive all shapes from the page table actually passed, so a (S, P)
+window with P < pages_per_slot gathers/crypts/MACs P pages per slot —
+protection work follows the live context, not pool capacity.
 
 **Sharded pools.**  A :class:`PageSpec` additionally carries a
 ``(shard, n_shards)`` identity.  The shard id is folded into the RePA
@@ -76,6 +86,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import baes, ctr, mac
 from repro.core.layout import SEGMENT_BYTES
@@ -86,6 +97,8 @@ __all__ = [
     "PageSpec",
     "PagedKVPool",
     "PageKeyCtx",
+    "TwoLevelPageTable",
+    "page_count_bucket",
     "PAGED_FIELDS",
     "paged_flags",
     "length_flags",
@@ -198,6 +211,82 @@ class PageKeyCtx(NamedTuple):
         """Ctx for the first ``n`` pages (static prefix slice)."""
         return self._replace(key_idx=self.key_idx[:n],
                              owners=self.owners[:n], epochs=self.epochs[:n])
+
+
+# ---------------------------------------------------------------------------
+# Two-level page table: slot directory -> bucketed page windows.
+# ---------------------------------------------------------------------------
+
+
+def page_count_bucket(n: int, cap: int) -> int:
+    """Round a live page count up to the next power of two, capped."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, cap)
+
+
+class TwoLevelPageTable:
+    """Host-side two-level page table over the paged pool.
+
+    Level 1 — the **slot directory**: one variable-length page-id list
+    per decode lane (plus, in tenant mode, the parallel per-page
+    key-epoch list).  The directory holds the scheduler's *slot
+    entries* (any object with ``pages`` and, optionally,
+    ``page_epochs`` list attributes) and reads them live at window
+    emission, so growth/eviction/migration bookkeeping — including
+    wholesale list reassignment — is reflected without copying.
+
+    Level 2 — the **page window**: a fixed-shape ``(max_slots, bucket)``
+    int32 table emitted per boundary crossing, where ``bucket`` is the
+    pow2 page-count bucket covering every live slot's touched pages
+    (the pages holding positions <= length, i.e. ``length //
+    page_tokens + 1`` of them).  The jitted decode step compiles once
+    per bucket — at most ``log2(pages_per_slot) + 1`` variants,
+    mirroring PR 2's prefill length bucketing — and its
+    gather/crypt/MAC/verify work scales with the bucket, not with
+    ``pages_per_slot``: a short live context in a large pool no longer
+    pays for the pool's resident capacity.
+
+    Invariant: every emitted window is a *prefix* of each slot's page
+    list (pages are table-ordered by token position), and the bucket
+    always covers each live slot's dirty write page, so decode output
+    is token-identical to the all-resident window for every scheme.
+    """
+
+    def __init__(self, max_slots: int, pages_per_slot: int):
+        self.max_slots = max_slots
+        self.pages_per_slot = pages_per_slot
+        self._entries: list = [None] * max_slots
+
+    def install(self, idx: int, entry) -> None:
+        """Register one lane's directory entry — any object carrying a
+        ``pages`` list attribute (and ``page_epochs`` in tenant mode)."""
+        self._entries[idx] = entry
+
+    def clear(self, idx: int) -> None:
+        self._entries[idx] = None
+
+    def bucket_for(self, live_lengths, page_tokens: int) -> int:
+        """Pow2 page-count bucket covering every live slot's touched
+        pages *and* its dirty write page (``length // page_tokens + 1``
+        pages per slot)."""
+        need = 1
+        for ln in live_lengths:
+            need = max(need, ln // page_tokens + 1)
+        return page_count_bucket(need, self.pages_per_slot)
+
+    def window(self, bucket: int) -> np.ndarray:
+        """Level-2 page window: (max_slots, bucket) int32, -1 where a
+        slot is empty or holds fewer pages than the bucket."""
+        tab = np.full((self.max_slots, bucket), -1, np.int32)
+        for i, entry in enumerate(self._entries):
+            pages = None if entry is None else entry.pages
+            if not pages:
+                continue
+            k = min(len(pages), bucket)
+            tab[i, :k] = pages[:k]
+        return tab
 
 
 # ---------------------------------------------------------------------------
@@ -502,24 +591,33 @@ def _page_block_macs(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
 
 def _fused_read(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
                 page_ids: jax.Array, vns: jax.Array, keys,
-                ctx: PageKeyCtx | None = None):
+                ctx: PageKeyCtx | None = None, uniform: bool = False):
     """Kernel-fused decrypt + optBlk MACs in one pass over the bytes.
 
-    Single-key only: either ``ctx=None`` (engine-wide keys) or a
-    uniform ctx whose pages all resolve to one bank row — the tenant
-    words still land in the binding/counters either way.
+    ``ctx=None`` (engine-wide keys) and uniform ctxs run the single-key
+    kernel; a MIXED ctx (pages resolving to different bank rows) runs
+    the mixed-key kernel, which gathers each page's round-key schedule
+    and NH key row from the bank and stays fused — the tenant words
+    land in the binding/counters either way.
     """
-    from repro.kernels.fused_crypt_mac.ops import secure_read_kernel
+    from repro.kernels.fused_crypt_mac.ops import (secure_read_kernel,
+                                                   secure_read_kernel_mixed)
     cfg = spec.cfg
     binding = _block_binding(spec, leaf, page_ids, vns, ctx)
     counters = _block_counters(spec, leaf, page_ids, vns, ctx)
-    if ctx is None:
-        round_keys, hash_key = keys.round_keys, keys.hash_key
+    if ctx is not None and not uniform:
+        rows = jnp.repeat(ctx.key_idx, leaf.n_blocks)
+        pt, macs = secure_read_kernel_mixed(
+            ct.reshape(-1), binding, ctx.bank_round_keys, counters,
+            ctx.bank_hash_key, rows, block_bytes=cfg.block_bytes)
     else:
-        _, round_keys, hash_key = _uniform_keys(ctx)
-    pt, macs = secure_read_kernel(
-        ct.reshape(-1), binding, round_keys, counters, hash_key,
-        block_bytes=cfg.block_bytes)
+        if ctx is None:
+            round_keys, hash_key = keys.round_keys, keys.hash_key
+        else:
+            _, round_keys, hash_key = _uniform_keys(ctx)
+        pt, macs = secure_read_kernel(
+            ct.reshape(-1), binding, round_keys, counters, hash_key,
+            block_bytes=cfg.block_bytes)
     return (pt.reshape(ct.shape),
             macs.reshape(page_ids.shape[0], leaf.n_blocks, mac.MAC_BYTES))
 
@@ -537,11 +635,19 @@ def _kernel_read_ok(spec: PageSpec) -> bool:
 
 def _pages_to_dense(spec: PageSpec, leaf: LeafPageSpec, pt: jax.Array,
                     lengths: jax.Array) -> jax.Array:
-    """(S, P, page_bytes) u8 -> (steps, S, max_len, *rest), invalid
+    """(S, P, page_bytes) u8 -> (steps, S, P*page_tokens, *rest), invalid
     token positions (>= length) zeroed so masked attention never sees
-    decrypt garbage (and schemes stay token-bit-identical)."""
+    decrypt garbage (and schemes stay token-bit-identical).
+
+    P is the page-count window of this crossing — the full
+    ``pages_per_slot`` or a smaller pow2 bucket: the dense view covers
+    exactly the gathered window (a PREFIX of the context, since pages
+    are table-ordered), so attention over it is token-identical to the
+    full-length view whenever every valid position fits the window.
+    """
     s, p = pt.shape[:2]
     ptok = spec.page_tokens
+    win_len = p * ptok
     per_layer = pt.reshape(s, p, leaf.steps, leaf.lp_bytes)
     payload = per_layer[..., : ptok * leaf.tok_bytes]
     itemsize = jnp.dtype(leaf.dtype).itemsize
@@ -550,10 +656,10 @@ def _pages_to_dense(spec: PageSpec, leaf: LeafPageSpec, pt: jax.Array,
     vals = jax.lax.bitcast_convert_type(grouped, jnp.dtype(leaf.dtype))
     # (S, P, steps, ptok, elems) -> (steps, S, P*ptok, *rest)
     dense = vals.transpose(2, 0, 1, 3, 4).reshape(
-        (leaf.steps, s, spec.max_len) + leaf.rest)
-    valid = (jnp.arange(spec.max_len, dtype=jnp.int32)[None, :]
+        (leaf.steps, s, win_len) + leaf.rest)
+    valid = (jnp.arange(win_len, dtype=jnp.int32)[None, :]
              < lengths[:, None])                       # (S, L)
-    valid = valid.reshape((1, s, spec.max_len) + (1,) * len(leaf.rest))
+    valid = valid.reshape((1, s, win_len) + (1,) * len(leaf.rest))
     return jnp.where(valid, dense, jnp.zeros((), dense.dtype))
 
 
@@ -585,17 +691,24 @@ def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
     """Gather + decrypt + verify the paged leaves for a batched decode.
 
     Args:
-      page_table: (max_slots, pages_per_slot) int32; -1 = unallocated.
+      page_table: (max_slots, P) int32; -1 = unallocated.  P may be the
+        full ``pages_per_slot`` or a smaller pow2 page-count bucket
+        (see :class:`TwoLevelPageTable`) — every shape below follows
+        the table, so gather/crypt/MAC work scales with the bucket's
+        page window, not with pool capacity.  The window must cover
+        every valid token (``P * page_tokens > max(lengths)``).
       lengths: (max_slots,) int32 valid tokens per slot.
-      ctx: optional per-page tenant keys (N = max_slots *
-        pages_per_slot entries, row-major over the page table).
+      ctx: optional per-page tenant keys (N = max_slots * P entries,
+        row-major over the page table).
       uniform: host-side promise that every ctx entry selects one bank
-        row — dispatches the flat single-key route (incl. the fused
-        kernel) with unchanged per-page bindings.
+        row — dispatches the flat single-key route with unchanged
+        per-page bindings.  Mixed-row ctxs keep the fused kernel too,
+        via its per-page round-key gather (:func:`_fused_read`).
 
-    Returns ``(dense_leaves, ok)`` — one dense (steps, S, max_len,
-    *rest) array per paged leaf, and the AND of every gated MAC check
-    over the *touched* pages (pages holding positions < length).
+    Returns ``(dense_leaves, ok)`` — one dense (steps, S,
+    P*page_tokens, *rest) array per paged leaf, and the AND of every
+    gated MAC check over the *touched* pages (pages holding positions
+    < length).
     """
     cfg = spec.cfg
     s, p = page_table.shape
@@ -611,9 +724,9 @@ def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
     for li, leaf in enumerate(spec.leaves):
         ct = pool.cts[li][flat_ids].reshape(s, p, leaf.page_bytes)
         need_macs = cfg.verify != "none"
-        if need_macs and (ctx is None or uniform) and _kernel_read_ok(spec):
+        if need_macs and _kernel_read_ok(spec):
             pt, macs = _fused_read(spec, leaf, ct.reshape(-1, leaf.page_bytes),
-                                   flat_ids, vns, keys, ctx)
+                                   flat_ids, vns, keys, ctx, uniform)
             pt = pt.reshape(s, p, leaf.page_bytes)
             macs = macs.reshape(s, p, leaf.n_blocks, mac.MAC_BYTES)
         else:
@@ -636,7 +749,10 @@ def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
         stored = pool.page_macs[flat_ids].reshape(s, p, mac.MAC_BYTES)
         ok = ok & jnp.all((agg == stored) | ~touched[..., None])
     if cfg.emulate_tree:
-        ok = ok & emulated_tree_probe(spec.blocks_per_read)
+        # Tree/VN traffic is charged for the WINDOW actually gathered —
+        # the emulated SGX metadata cost shrinks with the bucket too.
+        ok = ok & emulated_tree_probe(
+            sum(leaf.n_blocks for leaf in spec.leaves) * s * p)
     return dense, ok
 
 
@@ -772,8 +888,9 @@ def read_pages_raw(pool: PagedKVPool, spec: PageSpec, keys,
     for li, leaf in enumerate(spec.leaves):
         ct = pool.cts[li][page_ids]
         need_macs = cfg.verify != "none"
-        if need_macs and (ctx is None or uniform) and _kernel_read_ok(spec):
-            pt, macs = _fused_read(spec, leaf, ct, page_ids, vns, keys, ctx)
+        if need_macs and _kernel_read_ok(spec):
+            pt, macs = _fused_read(spec, leaf, ct, page_ids, vns, keys, ctx,
+                                   uniform)
         else:
             pt = _crypt(spec, leaf, ct, page_ids, vns, keys, ctx, uniform)
             macs = None

@@ -13,16 +13,23 @@ cache with
   secure migration, whole pages) between shards;
 * **a cluster root MAC** — SeDA's integrity hierarchy (block MAC →
   page VN → deferred pool MAC) extended one level up: each shard's
-  deferred pool MAC is XOR-folded into a root maintained incrementally
-  from pool-MAC deltas on every pool update.  The root update is a
+  deferred pool MAC is mirrored incrementally from pool-MAC deltas on
+  every pool update, and the root is a **keyed CBC-MAC compression**
+  over the ordered ``(shard id, pool MAC)`` pairs, seeded with the
+  shard *count*.  Unlike the XOR fold it replaces, the root therefore
+  binds position and fan-out: swapping two shards' (byte-identical)
+  pool MACs, dropping a shard, or presenting the same MACs under a
+  different cluster size all change the root.  The mirror update is a
   listener on each engine's pool assignment, so it stays off the
   decode critical path and never forces a device sync (deltas hop to
-  the root's device as async 8-byte transfers);
+  the root's device as async 8-byte transfers; the AES compression
+  runs only at check time);
 * **a deferred root check** — off the critical path, verify every
-  shard's pool MAC against its page MACs AND the XOR of all shard pool
-  MACs against the root.  A shard silently swapping its whole pool
-  state (a cross-shard variant of the splicing attack the pool MAC
-  defeats within one device) fails the root.
+  shard's pool MAC against its page MACs AND the compression of all
+  shard pool MACs against the compression of the mirrors.  A shard
+  silently swapping its whole pool state (a cross-shard variant of the
+  splicing attack the pool MAC defeats within one device) fails the
+  root.
 
 Cross-device replay is defeated one level down (shard-id binding in
 :mod:`kv_pages`); this module's job is aggregate bookkeeping and the
@@ -35,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mac
+from repro.core import aes, ctr, mac
 
 __all__ = ["ShardedKVPool"]
 
@@ -47,7 +54,7 @@ class ShardedKVPool:
     standalone over any list of engines whose specs agree on layout::
 
         sharded = ShardedKVPool(engines)
-        ...  # engines serve; every pool update folds into the root
+        ...  # engines serve; every pool update folds into the mirrors
         assert sharded.deferred_root_check()
     """
 
@@ -65,27 +72,56 @@ class ShardedKVPool:
                              f"0..{len(engines) - 1}")
         self.engines = sorted(engines, key=lambda e: e.spec.shard)
         self._root_dev = root_device or jax.devices()[0]
-        self._root = jnp.zeros((mac.MAC_BYTES,), jnp.uint8)
-        for engine in self.engines:
-            engine.attach_pool_listener(self._listener)
+        # The compression key: the engines' shared AES schedule (every
+        # shard is constructed with the same SecureKeys; shard 0's copy
+        # is authoritative for the root).
+        self._root_rk = jax.device_put(
+            self.engines[0].keys.round_keys, self._root_dev)
+        # Per-shard pool-MAC mirrors, maintained incrementally.
+        self._mirrors = [jnp.zeros((mac.MAC_BYTES,), jnp.uint8)
+                         for _ in self.engines]
+        for shard, engine in enumerate(self.engines):
+            engine.attach_pool_listener(
+                lambda old, new, s=shard: self._fold(s, old, new))
             # Fold in whatever state the pool already carries.
-            self._fold(None, engine.pool)
+            self._fold(shard, None, engine.pool)
 
     # -- root MAC maintenance -----------------------------------------------
 
-    def _listener(self, old_pool, new_pool) -> None:
-        self._fold(old_pool, new_pool)
-
-    def _fold(self, old_pool, new_pool) -> None:
+    def _fold(self, shard: int, old_pool, new_pool) -> None:
         delta = (new_pool.pool_mac if old_pool is None
                  else old_pool.pool_mac ^ new_pool.pool_mac)
         # Async 8-byte hop to the root's device; no host sync.
-        self._root = self._root ^ jax.device_put(delta, self._root_dev)
+        self._mirrors[shard] = (self._mirrors[shard]
+                                ^ jax.device_put(delta, self._root_dev))
+
+    def _compress(self, pool_macs) -> np.ndarray:
+        """Keyed CBC-MAC over the ordered (shard, pool MAC) pairs.
+
+        ``state_0 = AES_K(n_shards ‖ 0)``; then for each shard ``s`` in
+        order, ``state = AES_K(state ^ (s ‖ mac_s ‖ 0))``.  The chain
+        binds shard order, each shard's MAC value, AND the shard count
+        — none of which the XOR fold it replaces could see.  Runs off
+        the critical path (check time only).
+        """
+        seed = jnp.asarray([[len(pool_macs), 0, 0, 0]], jnp.uint32)
+        state = aes.aes128_encrypt_block(ctr.counter_blocks(seed),
+                                         self._root_rk)
+        for s, m in enumerate(pool_macs):
+            blk = jnp.zeros((1, 16), jnp.uint8)
+            blk = blk.at[0, :4].set(jnp.asarray(
+                [s >> 24 & 0xFF, s >> 16 & 0xFF, s >> 8 & 0xFF, s & 0xFF],
+                jnp.uint8))
+            blk = blk.at[0, 4: 4 + mac.MAC_BYTES].set(
+                jax.device_put(jnp.asarray(m, jnp.uint8), self._root_dev))
+            state = aes.aes128_encrypt_block(state ^ blk, self._root_rk)
+        return np.asarray(state[0, : mac.MAC_BYTES])
 
     @property
     def root_mac(self) -> jax.Array:
-        """The incrementally-maintained cluster root MAC."""
-        return self._root
+        """The cluster root MAC: the keyed compression of the
+        incrementally-maintained per-shard pool-MAC mirrors."""
+        return jnp.asarray(self._compress(self._mirrors))
 
     @property
     def n_shards(self) -> int:
@@ -113,14 +149,14 @@ class ShardedKVPool:
 
     def deferred_root_check(self) -> bool:
         """Whole-cluster deferred MAC: every shard's pool MAC verifies
-        against its page MACs, and the XOR of all shard pool MACs
-        matches the incrementally-maintained root.  Off the critical
-        path (cluster tick interval / end of run)."""
+        against its page MACs, and the keyed CBC compression of the
+        actual ``(shard, pool MAC)`` sequence matches the compression
+        of the incrementally-maintained mirrors.  Off the critical path
+        (cluster tick interval / end of run)."""
         from repro.serve import kv_pages as kvp
         for engine in self.engines:
             if not bool(kvp.deferred_pool_check(engine.pool, engine.spec)):
                 return False
-        agg = np.zeros((mac.MAC_BYTES,), np.uint8)
-        for engine in self.engines:
-            agg ^= np.asarray(engine.pool.pool_mac)
-        return bool(np.array_equal(agg, np.asarray(self._root)))
+        actual = self._compress([e.pool.pool_mac for e in self.engines])
+        mirrored = self._compress(self._mirrors)
+        return bool(np.array_equal(actual, mirrored))

@@ -11,7 +11,10 @@ from repro.core.secure_memory import SecureKeys
 from repro.kernels.aes_ctr import ops as aes_ops
 from repro.kernels.aes_ctr.ref import (aes_ctr_keystream_lanes_ref,
                                        aes_ctr_keystream_ref)
-from repro.kernels.fused_crypt_mac.ops import secure_read_kernel
+from repro.kernels.fused_crypt_mac.kernel import fused_crypt_mac_mixed
+from repro.kernels.fused_crypt_mac.ops import (secure_read_kernel,
+                                               secure_read_kernel_mixed)
+from repro.kernels.fused_crypt_mac.ref import fused_crypt_mac_mixed_ref
 from repro.kernels.otp_xor import ops as ox_ops
 from repro.kernels.otp_xor.ref import otp_xor_ref
 from repro.kernels.xormac import ops as xm_ops
@@ -151,3 +154,89 @@ class TestFusedCryptMac:
         pt2, _ = secure_read_kernel(ct, bind, kkeys.round_keys, cw,
                                     kkeys.hash_key, block_bytes=64)
         np.testing.assert_array_equal(np.asarray(pt2), np.asarray(pt))
+
+
+class TestFusedCryptMacMixed:
+    """Mixed-key fused kernel: per-block bank rows, one fused pass."""
+
+    def _bank(self, k_rows, seed=0):
+        keys = [SecureKeys.derive(100 + seed * 16 + i) for i in range(k_rows)]
+        return (jnp.stack([k.key for k in keys]),
+                jnp.stack([k.round_keys for k in keys]),
+                jnp.stack([k.hash_key for k in keys]), keys)
+
+    @pytest.mark.parametrize("n,s", [(4, 2), (33, 4)])
+    def test_mixed_kernel_vs_ref(self, n, s):
+        rng = np.random.default_rng(n * s)
+        ct = jnp.asarray(rng.integers(0, 2**32, (n, s * 4), dtype=np.uint32))
+        base = jnp.asarray(rng.integers(0, 2**32, (n, 4), dtype=np.uint32))
+        div = jnp.asarray(rng.integers(0, 2**32, (n, s, 4), dtype=np.uint32))
+        bind = jnp.asarray(rng.integers(0, 2**32, (n, 8), dtype=np.uint32))
+        key = jnp.asarray(rng.integers(0, 2**32, (n, s * 4 + 8),
+                                       dtype=np.uint32))
+        got_pt, got_nh = fused_crypt_mac_mixed(ct, base, div, bind, key)
+        want_pt, want_nh = fused_crypt_mac_mixed_ref(ct, base, div, bind, key)
+        np.testing.assert_array_equal(np.asarray(got_pt), np.asarray(want_pt))
+        np.testing.assert_array_equal(np.asarray(got_nh), np.asarray(want_nh))
+
+    @pytest.mark.parametrize("n_blocks", [5, 37])
+    def test_mixed_secure_read_vs_per_key_reference(self, n_blocks):
+        """Each block decrypts + MACs under its OWN bank row, matching
+        the single-key path run once per row."""
+        bb = 64
+        rng = np.random.default_rng(n_blocks)
+        bank_key, bank_rk, bank_hash, keys = self._bank(3, seed=n_blocks)
+        rows = jnp.asarray(rng.integers(0, 3, n_blocks), jnp.int32)
+        cw = jnp.asarray(rng.integers(0, 2**32, (n_blocks, 4),
+                                      dtype=np.uint32))
+        bind = mac.Binding.make(np.arange(n_blocks) * 4,
+                                np.full(n_blocks, 7), np.full(n_blocks, 1),
+                                np.full(n_blocks, 2), np.arange(n_blocks))
+        ct = jnp.asarray(rng.integers(0, 256, n_blocks * bb, dtype=np.uint8))
+        pt, macs = secure_read_kernel_mixed(ct, bind, bank_rk, cw, bank_hash,
+                                            rows, block_bytes=bb)
+        for i in range(n_blocks):
+            r = int(rows[i])
+            blk = ct.reshape(n_blocks, bb)[i]
+            want_pt = baes.baes_encrypt(blk, keys[r].round_keys, cw[i:i + 1],
+                                        block_bytes=bb, key=keys[r].key)
+            b1 = mac.Binding(*(f[i:i + 1] for f in bind))
+            want_mac = mac.block_macs(blk[None], b1,
+                                      hash_key_u32=keys[r].hash_key,
+                                      round_keys=keys[r].round_keys,
+                                      engine="nh")
+            np.testing.assert_array_equal(
+                np.asarray(pt).reshape(n_blocks, bb)[i], np.asarray(want_pt))
+            np.testing.assert_array_equal(np.asarray(macs[i]),
+                                          np.asarray(want_mac[0]))
+
+    def test_uniform_rows_match_single_key_kernel(self):
+        """A mixed dispatch whose rows all agree is bit-identical to the
+        single-key fused kernel."""
+        bb = 64
+        n = 12
+        rng = np.random.default_rng(9)
+        bank_key, bank_rk, bank_hash, keys = self._bank(2)
+        rows = jnp.ones((n,), jnp.int32)
+        cw = jnp.asarray(rng.integers(0, 2**32, (n, 4), dtype=np.uint32))
+        bind = mac.Binding.make(np.arange(n) * 4, 3, 0, 1, np.arange(n))
+        ct = jnp.asarray(rng.integers(0, 256, n * bb, dtype=np.uint8))
+        got_pt, got_macs = secure_read_kernel_mixed(
+            ct, bind, bank_rk, cw, bank_hash, rows, block_bytes=bb)
+        want_pt, want_macs = secure_read_kernel(
+            ct, bind, keys[1].round_keys, cw, keys[1].hash_key,
+            block_bytes=bb)
+        np.testing.assert_array_equal(np.asarray(got_pt), np.asarray(want_pt))
+        np.testing.assert_array_equal(np.asarray(got_macs),
+                                      np.asarray(want_macs))
+
+    def test_multi_keystream_vs_single(self):
+        """Per-block schedules equal to one schedule reproduce the
+        single-key keystream kernel exactly."""
+        kkeys = SecureKeys.derive(3)
+        rng = np.random.default_rng(2)
+        cw = jnp.asarray(rng.integers(0, 2**32, (50, 4), dtype=np.uint32))
+        rk_per = jnp.broadcast_to(kkeys.round_keys[None], (50, 11, 16))
+        got = aes_ops.keystream_lanes_multi(cw, rk_per)
+        want = aes_ops.keystream_lanes(cw, kkeys.round_keys)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

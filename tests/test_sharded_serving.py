@@ -366,6 +366,89 @@ class TestUniformFastPath:
         assert eng.stats["uniform_fast_ticks"] == 0
 
 
+class TestBucketedDecodeSharded:
+    """Page-count-bucketed decode under the cluster's split-phase tick:
+    per-shard buckets must not break parity or the dispatch overlap."""
+
+    @pytest.mark.parametrize("scheme", ["off", "seda", "mgx512"])
+    @pytest.mark.parametrize("shards", [1, 2])
+    def test_long_context_parity_across_bucket_boundaries(self, smoke,
+                                                          prompts, shards,
+                                                          scheme):
+        """Contexts straddling the 2-/4-/8-page buckets decode
+        token-identically on shards {1, 2} and on the plain engine."""
+        eng = _engine(smoke, scheme="off", max_slots=2, pages_per_slot=8)
+        rids = [eng.submit(p, max_new_tokens=14) for p in prompts[:2]]
+        done = eng.run()
+        want = sorted(done[r].generated for r in rids)
+        assert eng.stats["decode_bucket_compiles"] >= 3  # crossed buckets
+        cl = _cluster(smoke, shards=shards, scheme=scheme, max_slots=2,
+                      pages_per_slot=8)
+        rids = [cl.submit(p, max_new_tokens=14) for p in prompts[:2]]
+        done = cl.run()
+        assert sorted(done[r].generated for r in rids) == want
+        assert cl.deferred_check()
+
+    def test_shards_pick_buckets_independently(self, smoke, prompts):
+        """One shard serving a long context must not widen the other
+        shard's decode window (buckets are per-shard)."""
+        cl = _cluster(smoke, shards=2, max_slots=1, pages_per_slot=8)
+        cl.submit(prompts[0], max_new_tokens=14)    # long decode
+        cl.submit(prompts[1][:4], max_new_tokens=2)  # short decode
+        done = cl.run()
+        assert len(done) == 2
+        reads = [e.stats["decode_page_reads"] for e in cl.engines]
+        steps = [e.stats["decode_steps"] for e in cl.engines]
+        per_step = [r / max(s, 1) for r, s in zip(reads, steps)]
+        # The short-context shard stays on small buckets even while the
+        # long one climbs to the 8-page window.
+        assert min(per_step) < max(per_step)
+
+
+class TestRootMacCompression:
+    """The cluster root MAC is a keyed CBC compression over ordered
+    (shard, pool MAC) pairs — it binds value, order AND shard count
+    (the XOR fold it replaced saw none of the latter two)."""
+
+    def test_swapping_two_shards_macs_changes_root(self, smoke, prompts):
+        cl = _cluster(smoke)
+        for p in prompts:
+            cl.submit(p, max_new_tokens=4)
+        cl.step()
+        sh = cl.sharded
+        macs = [e.pool.pool_mac for e in sh.engines]
+        # Byte-identical MAC multiset, different order: an XOR fold is
+        # blind to this; the CBC compression is not.
+        assert not np.array_equal(sh._compress(macs),
+                                  sh._compress(macs[::-1]))
+
+    def test_shard_count_bound_into_root(self, smoke, prompts):
+        cl = _cluster(smoke)
+        cl.submit(prompts[0], max_new_tokens=4)
+        cl.step()
+        sh = cl.sharded
+        macs = [e.pool.pool_mac for e in sh.engines]
+        import jax.numpy as _jnp
+        grown = macs + [_jnp.zeros_like(macs[0])]
+        assert not np.array_equal(sh._compress(macs), sh._compress(grown))
+        cl.run()
+        assert cl.deferred_check()
+
+    def test_listener_bypassing_swap_still_caught(self, smoke, prompts):
+        """`deferred_root_check` semantics preserved: pool state swapped
+        in WITHOUT the listener fails the root."""
+        cl = _cluster(smoke)
+        for p in prompts:
+            cl.submit(p, max_new_tokens=4)
+        cl.step()
+        assert cl.deferred_check()
+        e0 = cl.engines[0]
+        tampered = np.asarray(e0.pool.pool_mac).copy()
+        tampered[0] ^= 0xFF
+        e0._pool = e0.pool._replace(pool_mac=jnp.asarray(tampered))
+        assert not cl.deferred_check()
+
+
 class TestClusterIntegrity:
     def test_cross_shard_replay_through_cluster_raises(self, smoke,
                                                        prompts):

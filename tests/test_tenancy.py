@@ -286,6 +286,64 @@ class TestParityAndRotation:
         assert eng.deferred_check()
 
 
+class TestMixedKeyFusedPath:
+    """MIXED-row ticks keep the fused Pallas kernel (per-page round-key
+    gather from the bank) instead of falling back to the vmapped
+    reference — and stay bit-identical to it."""
+
+    def _run(self, smoke, prompts, use_kernel):
+        reg, sess = _registry(3, seed=11)
+        eng = _engine(smoke, scheme="seda", registry=reg,
+                      use_kernel=use_kernel)
+        rids = [eng.submit(p, max_new_tokens=6, session=s)
+                for p, s in zip(prompts, sess)]
+        done = eng.run()
+        return [done[r].generated for r in rids], eng
+
+    def test_mixed_tenant_tick_fused_vs_ref_bit_identical(self, smoke,
+                                                          prompts):
+        want, ref_eng = self._run(smoke, prompts, use_kernel=False)
+        got, fused_eng = self._run(smoke, prompts, use_kernel=True)
+        assert got == want
+        # Three tenants share every tick: no uniform ticks, and the
+        # kernel engine must have routed them through the mixed fused
+        # path (the reference engine must not report any).
+        assert fused_eng.stats["uniform_fast_ticks"] == 0
+        assert fused_eng.stats["fused_mixed_ticks"] > 0
+        assert fused_eng.stats["fused_mixed_ticks"] == \
+            fused_eng.stats["decode_steps"]
+        assert ref_eng.stats["fused_mixed_ticks"] == 0
+
+    def test_mixed_fused_post_rotation_parity(self, smoke, prompts):
+        """Live rotation (lazy re-encryption + eager reseal) keeps the
+        kernel engine token-identical to the reference engine."""
+        outs = []
+        for use_kernel in (False, True):
+            reg, sess = _registry(3, seed=13)     # same seed: same keys
+            eng = _engine(smoke, scheme="seda", registry=reg,
+                          use_kernel=use_kernel, rotate_every=2)
+            rids = [eng.submit(p, max_new_tokens=6, session=s)
+                    for p, s in zip(prompts, sess)]
+            done = eng.run()
+            assert eng.stats["rotations"] > 0
+            outs.append([done[r].generated for r in rids])
+        assert outs[0] == outs[1]
+
+    def test_mixed_fused_rejects_cross_tenant_read(self, smoke, prompts):
+        """The fused mixed path keeps the isolation gate: remapping a
+        resident page to another tenant's slot fails verification."""
+        reg, sess = _registry(2, seed=12)
+        eng = _engine(smoke, scheme="seda", registry=reg, use_kernel=True,
+                      max_slots=2)
+        eng.submit(prompts[0], max_new_tokens=8, session=sess[0])
+        eng.submit(prompts[1], max_new_tokens=8, session=sess[1])
+        eng.step()
+        s0, s1 = eng.slots[0], eng.slots[1]
+        s1.pages[0] = s0.pages[0]       # tenant B's table points at A's page
+        with pytest.raises(IntegrityError):
+            eng.run()
+
+
 class TestTenantScheduling:
     def test_quota_exceeded_admission_queues(self, smoke, prompts):
         reg = TenantRegistry(KeyHierarchy(1), max_tenants=2)
