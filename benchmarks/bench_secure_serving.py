@@ -46,12 +46,13 @@ DEFAULT_SCALING_CONTEXTS = (8, 24, 56)
 
 def _measure(arch, cfg, params, scheme: str, batch: int, *,
              page_tokens: int, pages_per_slot: int, gen_len: int,
-             prompt_len: int, seed: int = 0) -> dict:
+             prompt_len: int, seed: int = 0,
+             use_kernel: bool = False) -> dict:
     rng = np.random.default_rng(seed)
     eng = SecureServingEngine(
         arch, cfg, params, scheme=scheme, max_slots=batch,
         page_tokens=page_tokens, pages_per_slot=pages_per_slot,
-        n_pages=batch * pages_per_slot)
+        n_pages=batch * pages_per_slot, use_kernel=use_kernel)
     for _ in range(batch):
         prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
         eng.submit(prompt, max_new_tokens=gen_len)
@@ -72,6 +73,8 @@ def _measure(arch, cfg, params, scheme: str, batch: int, *,
         "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
         "preemptions": eng.stats["preemptions"],
         "prefill_compiles": eng.stats["prefill_compiles"],
+        "uniform_fast_ticks": eng.stats["uniform_fast_ticks"],
+        "fused_write_ticks": eng.stats["fused_write_ticks"],
         "latency": eng.latency_stats(),
     }
 
@@ -79,7 +82,7 @@ def _measure(arch, cfg, params, scheme: str, batch: int, *,
 def collect(schemes=DEFAULT_SCHEMES, batch_sizes=DEFAULT_BATCHES, *,
             arch_name: str = "minitron-4b", page_tokens: int = 8,
             pages_per_slot: int = 4, gen_len: int = 8,
-            prompt_len: int = 9) -> list:
+            prompt_len: int = 9, use_kernel: bool = False) -> list:
     arch = get_arch(arch_name)
     cfg = arch.make_smoke_config()
     params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
@@ -90,7 +93,7 @@ def collect(schemes=DEFAULT_SCHEMES, batch_sizes=DEFAULT_BATCHES, *,
             r = _measure(arch, cfg, params, scheme, batch,
                          page_tokens=page_tokens,
                          pages_per_slot=pages_per_slot, gen_len=gen_len,
-                         prompt_len=prompt_len)
+                         prompt_len=prompt_len, use_kernel=use_kernel)
             if scheme == "off":
                 base_bytes = r["bytes_accessed"]
             if base_bytes:
@@ -217,6 +220,9 @@ def main(argv=None) -> list:
     ap.add_argument("--pages-per-slot", type=int, default=4)
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=9)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route the protection crypto through the fused "
+                         "Pallas kernels (read AND write direction)")
     ap.add_argument("--json", default=None, help="write results to this file")
     ap.add_argument("--decode-scaling-json", default=None,
                     help="also run the decode-scaling sweep (tok/s + decode "
@@ -231,7 +237,7 @@ def main(argv=None) -> list:
         batch_sizes=tuple(int(b) for b in args.batch_sizes.split(",")),
         arch_name=args.arch, page_tokens=args.page_tokens,
         pages_per_slot=args.pages_per_slot, gen_len=args.gen_len,
-        prompt_len=args.prompt_len)
+        prompt_len=args.prompt_len, use_kernel=args.use_kernel)
     for r in results:
         print(f"[serve-bench] scheme={r['scheme']:<8} batch={r['batch']:<3} "
               f"tok/s={r['tok_per_s']:9.1f} "

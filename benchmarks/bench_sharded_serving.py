@@ -96,6 +96,7 @@ def _measure(arch, cfg, params, scheme: str, shards: int, *, batch: int,
         "preemptions": stats["preemptions"],
         "uniform_fast_ticks": stats["uniform_fast_ticks"],
         "fused_mixed_ticks": stats["fused_mixed_ticks"],
+        "fused_write_ticks": stats["fused_write_ticks"],
         "decode_steps": stats["decode_steps"],
         "root_mac_ok": cluster.deferred_check(),
         "latency": cluster.run().latency,
@@ -124,8 +125,9 @@ def collect(schemes=tuple(SCHEMES), shard_counts=DEFAULT_SHARDS, *,
         # Tenant-mode fast-path rows on one shard with the kernels on,
         # for the CI gate: one tenant -> every tick single-row
         # (uniform_fast_ticks); two tenants -> every tick mixed-row
-        # (fused_mixed_ticks).  A regression dropping either route
-        # zeroes its row's counter.
+        # (fused_mixed_ticks).  Both rows also reseal every dirty page
+        # through the one-pass fused write (fused_write_ticks).  A
+        # regression dropping any route zeroes its row's counter.
         for tenants, label in ((1, "seda(uniform-tenant,fused)"),
                                (2, "seda(mixed-tenant,fused)")):
             r = _measure(arch, cfg, params, "seda", 1, batch=batch,
@@ -150,7 +152,8 @@ def run() -> list:
             "derived": (f"tok/s={r['tok_per_s']:.1f} peak_occ={occ} "
                         f"migrations={r['migrations']} "
                         f"uniform={r['uniform_fast_ticks']} "
-                        f"fused_mixed={r['fused_mixed_ticks']}"),
+                        f"fused_mixed={r['fused_mixed_ticks']} "
+                        f"fused_write={r['fused_write_ticks']}"),
         })
     return rows
 

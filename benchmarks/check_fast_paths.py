@@ -1,21 +1,27 @@
 """CI gate: the sharded-serving bench JSON must show the fast paths ran.
 
-The decode hot path has two cheap routes that regressions tend to lose
-silently (everything still produces correct tokens, just slower):
+The decode hot path has three cheap routes that regressions tend to
+lose silently (everything still produces correct tokens, just slower):
 
 * ``uniform_fast_ticks`` — single-key ticks (no registry, or every page
   resolving to one tenant-epoch bank row) dispatch the flat crypt/MAC
   route;
 * ``fused_mixed_ticks`` — mixed-bank-row ticks stay on the fused Pallas
-  kernel via its per-page round-key gather instead of falling back to
-  the vmapped per-page reference.
+  READ kernel via its per-page round-key gather instead of falling back
+  to the vmapped per-page reference;
+* ``fused_write_ticks`` — kernel-capable ticks reseal their dirty pages
+  through the one-pass fused WRITE kernel (encrypt + MAC of the fresh
+  ciphertext in a single Pallas visit), never the vmapped per-page
+  write reference.
 
 Fails (exit 1) when ``uniform_fast_ticks + fused_mixed_ticks == 0``
 across the bench results, and additionally when a dedicated fast-path
 row (the bench's one-tenant "uniform" / two-tenant "mixed"
-measurements) recorded zero ticks on its route — the per-row checks
-are the sharp ones, since registry-less rows count every tick as
-uniform by construction.
+measurements, which run with the kernels on) recorded zero ticks on
+any of its routes — the per-row checks are the sharp ones, since
+registry-less rows count every tick as uniform by construction, and
+the mixed row is the only one that exercises the mixed-key read AND
+write kernels together.
 
 Usage::
 
@@ -27,6 +33,13 @@ from __future__ import annotations
 import json
 import sys
 
+# marker substring in the row's scheme label -> counters that must be
+# non-zero on at least one such row.
+ROW_GATES = (
+    ("uniform", ("uniform_fast_ticks", "fused_write_ticks")),
+    ("mixed", ("fused_mixed_ticks", "fused_write_ticks")),
+)
+
 
 def check(path: str) -> int:
     with open(path) as f:
@@ -34,21 +47,25 @@ def check(path: str) -> int:
     results = data.get("results", [])
     uniform = sum(r.get("uniform_fast_ticks", 0) for r in results)
     fused_mixed = sum(r.get("fused_mixed_ticks", 0) for r in results)
+    fused_write = sum(r.get("fused_write_ticks", 0) for r in results)
     print(f"[fast-paths] uniform_fast_ticks={uniform} "
-          f"fused_mixed_ticks={fused_mixed} over {len(results)} results")
+          f"fused_mixed_ticks={fused_mixed} "
+          f"fused_write_ticks={fused_write} over {len(results)} results")
     if uniform + fused_mixed == 0:
         print("[fast-paths] FAIL: no tick took a fast path — the "
               "single-key/fused decode routes were silently lost")
         return 1
     ok = True
-    for marker, counter in (("uniform", "uniform_fast_ticks"),
-                            ("mixed", "fused_mixed_ticks")):
+    for marker, counters in ROW_GATES:
         rows = [r for r in results if marker in str(r.get("scheme", ""))]
-        if rows and not any(r.get(counter, 0) for r in rows):
-            print(f"[fast-paths] FAIL: dedicated {marker}-tenant "
-                  f"measurement present but recorded zero {counter} — "
-                  f"that decode route was silently lost")
-            ok = False
+        if not rows:
+            continue
+        for counter in counters:
+            if not any(r.get(counter, 0) for r in rows):
+                print(f"[fast-paths] FAIL: dedicated {marker}-tenant "
+                      f"measurement present but recorded zero {counter} — "
+                      f"that decode route was silently lost")
+                ok = False
     if not ok:
         return 1
     print("[fast-paths] ok")

@@ -1,4 +1,12 @@
-"""Public jit'd wrappers for the AES-CTR keystream kernel."""
+"""Public jit'd wrappers for the AES-CTR keystream kernel.
+
+The ``*_multi`` variants take per-block (N, 11, 16) key schedules —
+the primitive both mixed-key fused paths build on: the READ side
+(:func:`repro.kernels.fused_crypt_mac.ops.secure_read_kernel_mixed`)
+uses them for base OTPs and MAC finalization pads, and the WRITE side
+(:func:`repro.kernels.fused_crypt_mac.ops.secure_write_kernel_mixed`)
+for the dirty-page reseal's keystream + fresh-ciphertext MAC pads.
+"""
 
 from __future__ import annotations
 

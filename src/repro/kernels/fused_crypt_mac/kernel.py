@@ -15,6 +15,15 @@ kernel fuses both into ONE VMEM visit per tile:
 Memory-term saving vs. unfused: reads drop from 2x data to 1x data
 (hashes/pads are negligible), i.e. ~33% less HBM traffic on the
 read+verify path.  Recorded as a §Perf optimization in EXPERIMENTS.md.
+
+The WRITE direction is symmetric: a secure store encrypts the dirty
+bytes and MACs the resulting ciphertext.  Unfused that is one kernel
+producing ct and a second reading it back to hash — two VMEM visits of
+the full tile.  ``fused_crypt_mac_write`` computes the pad XOR and the
+NH compression of the just-produced ciphertext in one pass (the ct
+never leaves VMEM between the engines), and the ``_mixed`` variant
+carries per-block diversifiers + NH key rows so one dispatch reseals
+pages owned by different tenant-epoch bank rows.
 """
 
 from __future__ import annotations
@@ -27,7 +36,8 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.common import cdiv, default_interpret
 
-__all__ = ["fused_crypt_mac", "fused_crypt_mac_mixed"]
+__all__ = ["fused_crypt_mac", "fused_crypt_mac_mixed",
+           "fused_crypt_mac_write", "fused_crypt_mac_write_mixed"]
 
 
 def _nh_rows(m: jax.Array, k: jax.Array) -> jax.Array:
@@ -103,31 +113,75 @@ def _fused_kernel_mixed(ct_ref, base_ref, div_ref, bind_ref, key_ref,
     nh_ref[...] = _nh_rows(m, k)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
-def fused_crypt_mac_mixed(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
-                          div_lanes_per: jax.Array, bind_words: jax.Array,
-                          key_per_u32: jax.Array, *, tile_n: int = 256,
-                          interpret: bool | None = None):
-    """Mixed-key fused decrypt + NH: per-block diversifiers (N, S, 4)
-    and per-block NH keys (N, S*4 + 8).  Returns (plaintext lanes
-    (N, S*4) u32, NH hashes (N, 2) u32), bit-identical to vmapping
-    :func:`fused_crypt_mac` over per-key groups."""
+def _fused_write_kernel(pt_ref, base_ref, div_ref, bind_ref, key_ref,
+                        ct_ref, nh_ref):
+    """Write direction: encrypt, then NH over the FRESH ciphertext.
+
+    Same tile layout as :func:`_fused_kernel`; the only difference is
+    which side of the pad XOR feeds the integ engine — reads hash the
+    incoming bytes, writes hash the outgoing ones."""
+    pt = pt_ref[...]                           # (T, S*4) u32
+    base = base_ref[...]                       # (T, 4) u32
+    div = div_ref[...]                         # (S, 4) u32
+    bind = bind_ref[...]                       # (T, 8) u32
+    k = key_ref[...]                           # (S*4 + 8,) u32
+
+    t, lanes = pt.shape
+    s = div.shape[0]
+
+    # --- Crypt engine: diversified pad XOR ---------------------------------
+    pads = base[:, None, :] ^ div[None, :, :]
+    ct = (pt.reshape(t, s, 4) ^ pads).reshape(t, lanes)
+    ct_ref[...] = ct
+
+    # --- Integ engine: NH over ciphertext ‖ binding ------------------------
+    m = jnp.concatenate([ct, bind], axis=-1)   # (T, L) with L = lanes + 8
+    nh_ref[...] = _nh_rows(m, jnp.broadcast_to(k[None, :], m.shape))
+
+
+def _fused_write_kernel_mixed(pt_ref, base_ref, div_ref, bind_ref, key_ref,
+                              ct_ref, nh_ref):
+    """Mixed-key write: per-block diversifiers + NH key rows, as in
+    :func:`_fused_kernel_mixed`, hashing the fresh ciphertext."""
+    pt = pt_ref[...]                           # (T, S*4) u32
+    base = base_ref[...]                       # (T, 4) u32
+    div = div_ref[...]                         # (T, S*4) u32
+    bind = bind_ref[...]                       # (T, 8) u32
+    k = key_ref[...]                           # (T, S*4 + 8) u32
+
+    t, lanes = pt.shape
+    s = lanes // 4
+
+    # --- Crypt engine: per-block diversified pad XOR -----------------------
+    pads = base[:, None, :] ^ div.reshape(t, s, 4)
+    ct = (pt.reshape(t, s, 4) ^ pads).reshape(t, lanes)
+    ct_ref[...] = ct
+
+    # --- Integ engine: NH over ciphertext ‖ binding, per-block keys --------
+    m = jnp.concatenate([ct, bind], axis=-1)   # (T, L) with L = lanes + 8
+    nh_ref[...] = _nh_rows(m, k)
+
+
+def _call_mixed(kernel_body, data_lanes, base_otp_lanes, div_lanes_per,
+                bind_words, key_per_u32, tile_n, interpret):
+    """Shared pad/tile/dispatch plumbing of the two mixed-key kernels
+    (read and write share every shape — only the body differs)."""
     if interpret is None:
         interpret = default_interpret()
-    n, lanes = ct_lanes.shape
+    n, lanes = data_lanes.shape
     s = div_lanes_per.shape[1]
     assert lanes == 4 * s and key_per_u32.shape == (n, lanes + 8)
     tile_n = min(tile_n, max(8, n))
     n_pad = cdiv(n, tile_n) * tile_n
-    ct_p = jnp.zeros((n_pad, lanes), jnp.uint32).at[:n].set(ct_lanes)
+    data_p = jnp.zeros((n_pad, lanes), jnp.uint32).at[:n].set(data_lanes)
     base_p = jnp.zeros((n_pad, 4), jnp.uint32).at[:n].set(base_otp_lanes)
     div_p = jnp.zeros((n_pad, lanes), jnp.uint32).at[:n].set(
         div_lanes_per.reshape(n, lanes))
     bind_p = jnp.zeros((n_pad, 8), jnp.uint32).at[:n].set(bind_words)
     key_p = jnp.zeros((n_pad, lanes + 8), jnp.uint32).at[:n].set(key_per_u32)
 
-    pt, nh = pl.pallas_call(
-        _fused_kernel_mixed,
+    out, nh = pl.pallas_call(
+        kernel_body,
         grid=(n_pad // tile_n,),
         in_specs=[
             pl.BlockSpec((tile_n, lanes), lambda i: (i, 0)),
@@ -145,29 +199,56 @@ def fused_crypt_mac_mixed(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
             jax.ShapeDtypeStruct((n_pad, 2), jnp.uint32),
         ],
         interpret=interpret,
-    )(ct_p, base_p, div_p, bind_p, key_p)
-    return pt[:n], nh[:n]
+    )(data_p, base_p, div_p, bind_p, key_p)
+    return out[:n], nh[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
-def fused_crypt_mac(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
-                    div_lanes: jax.Array, bind_words: jax.Array,
-                    key_u32: jax.Array, *, tile_n: int = 256,
-                    interpret: bool | None = None):
-    """Returns (plaintext lanes (N, S*4) u32, NH hashes (N, 2) u32)."""
+def fused_crypt_mac_mixed(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
+                          div_lanes_per: jax.Array, bind_words: jax.Array,
+                          key_per_u32: jax.Array, *, tile_n: int = 256,
+                          interpret: bool | None = None):
+    """Mixed-key fused decrypt + NH: per-block diversifiers (N, S, 4)
+    and per-block NH keys (N, S*4 + 8).  Returns (plaintext lanes
+    (N, S*4) u32, NH hashes (N, 2) u32), bit-identical to vmapping
+    :func:`fused_crypt_mac` over per-key groups."""
+    return _call_mixed(_fused_kernel_mixed, ct_lanes, base_otp_lanes,
+                       div_lanes_per, bind_words, key_per_u32, tile_n,
+                       interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def fused_crypt_mac_write_mixed(pt_lanes: jax.Array,
+                                base_otp_lanes: jax.Array,
+                                div_lanes_per: jax.Array,
+                                bind_words: jax.Array,
+                                key_per_u32: jax.Array, *, tile_n: int = 256,
+                                interpret: bool | None = None):
+    """Mixed-key fused encrypt + NH (the one-pass dirty-page reseal):
+    returns (ciphertext lanes (N, S*4) u32, NH hashes of the FRESH
+    ciphertext (N, 2) u32), bit-identical to encrypting and then
+    hashing per key group."""
+    return _call_mixed(_fused_write_kernel_mixed, pt_lanes, base_otp_lanes,
+                       div_lanes_per, bind_words, key_per_u32, tile_n,
+                       interpret)
+
+
+def _call_single(kernel_body, data_lanes, base_otp_lanes, div_lanes,
+                 bind_words, key_u32, tile_n, interpret):
+    """Shared plumbing of the two single-key kernels (read and write)."""
     if interpret is None:
         interpret = default_interpret()
-    n, lanes = ct_lanes.shape
+    n, lanes = data_lanes.shape
     s = div_lanes.shape[0]
     assert lanes == 4 * s and key_u32.shape[0] == lanes + 8
     tile_n = min(tile_n, max(8, n))
     n_pad = cdiv(n, tile_n) * tile_n
-    ct_p = jnp.zeros((n_pad, lanes), jnp.uint32).at[:n].set(ct_lanes)
+    data_p = jnp.zeros((n_pad, lanes), jnp.uint32).at[:n].set(data_lanes)
     base_p = jnp.zeros((n_pad, 4), jnp.uint32).at[:n].set(base_otp_lanes)
     bind_p = jnp.zeros((n_pad, 8), jnp.uint32).at[:n].set(bind_words)
 
-    pt, nh = pl.pallas_call(
-        _fused_kernel,
+    out, nh = pl.pallas_call(
+        kernel_body,
         grid=(n_pad // tile_n,),
         in_specs=[
             pl.BlockSpec((tile_n, lanes), lambda i: (i, 0)),
@@ -185,5 +266,26 @@ def fused_crypt_mac(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
             jax.ShapeDtypeStruct((n_pad, 2), jnp.uint32),
         ],
         interpret=interpret,
-    )(ct_p, base_p, div_lanes, bind_p, key_u32)
-    return pt[:n], nh[:n]
+    )(data_p, base_p, div_lanes, bind_p, key_u32)
+    return out[:n], nh[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def fused_crypt_mac(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
+                    div_lanes: jax.Array, bind_words: jax.Array,
+                    key_u32: jax.Array, *, tile_n: int = 256,
+                    interpret: bool | None = None):
+    """Returns (plaintext lanes (N, S*4) u32, NH hashes (N, 2) u32)."""
+    return _call_single(_fused_kernel, ct_lanes, base_otp_lanes, div_lanes,
+                        bind_words, key_u32, tile_n, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def fused_crypt_mac_write(pt_lanes: jax.Array, base_otp_lanes: jax.Array,
+                          div_lanes: jax.Array, bind_words: jax.Array,
+                          key_u32: jax.Array, *, tile_n: int = 256,
+                          interpret: bool | None = None):
+    """Single-key fused encrypt + NH: returns (ciphertext lanes
+    (N, S*4) u32, NH hashes of the fresh ciphertext (N, 2) u32)."""
+    return _call_single(_fused_write_kernel, pt_lanes, base_otp_lanes,
+                        div_lanes, bind_words, key_u32, tile_n, interpret)

@@ -1,4 +1,12 @@
-"""Wrapper: fused secure-read (decrypt + verify hash) for flat buffers."""
+"""Wrappers: fused secure-read AND secure-write for flat buffers.
+
+``secure_read_kernel*`` decrypts + hashes incoming ciphertext;
+``secure_write_kernel*`` encrypts + hashes the fresh ciphertext (the
+one-pass dirty-page reseal).  The ``_mixed`` variants gather each
+optBlk's AES schedule, B-AES diversifiers and NH key row from a device
+key bank, so one dispatch serves pages owned by different
+(tenant, epoch) rows.
+"""
 
 from __future__ import annotations
 
@@ -10,11 +18,74 @@ from repro.core.bytesutil import bytes_to_u32, u32_to_bytes
 from repro.kernels.aes_ctr.ops import (keystream_bytes, keystream_bytes_multi,
                                        keystream_lanes, keystream_lanes_multi)
 from repro.kernels.fused_crypt_mac.kernel import (fused_crypt_mac,
-                                                  fused_crypt_mac_mixed)
+                                                  fused_crypt_mac_mixed,
+                                                  fused_crypt_mac_write,
+                                                  fused_crypt_mac_write_mixed)
 from repro.kernels.otp_xor.ops import _div_lanes
 
 __all__ = ["secure_read_kernel", "secure_read_kernel_mixed",
-           "fused_crypt_mac", "fused_crypt_mac_mixed"]
+           "secure_write_kernel", "secure_write_kernel_mixed",
+           "fused_crypt_mac", "fused_crypt_mac_mixed",
+           "fused_crypt_mac_write", "fused_crypt_mac_write_mixed"]
+
+
+def _secure_crossing(data_u8: jax.Array, binding: mac.Binding,
+                     round_keys: jax.Array, counter_words: jax.Array,
+                     hash_key_u32: jax.Array, kernel, *, block_bytes: int,
+                     subbytes: str, interpret: bool | None):
+    """Single-key crossing: one fused pass + AES MAC finalization.
+
+    Read and write share every step — base keystream, diversifiers,
+    binding words, NH-hash finalization pads — except the fused
+    ``kernel`` body (hash the incoming vs. the outgoing bytes), so the
+    orchestration lives once and the two directions cannot drift.
+    """
+    n_segments = block_bytes // 16
+    if n_segments - 1 > 10:
+        raise ValueError("kernel path supports narrow mode (<= 11 segments)")
+    base = keystream_lanes(counter_words, round_keys, subbytes=subbytes,
+                           interpret=interpret)
+    data = bytes_to_u32(data_u8).reshape(-1, n_segments * 4)
+    div = _div_lanes(round_keys, n_segments)
+    bind_words = binding.words(data.shape[0])
+    key = hash_key_u32[: data.shape[1] + 8]
+    out_lanes, hashes = kernel(data, base, div, bind_words, key,
+                               interpret=interpret)
+    fin = mac.finalize_words(hashes[:, 0], hashes[:, 1], binding)
+    pads = keystream_bytes(fin, round_keys, subbytes=subbytes,
+                           interpret=interpret)
+    out = u32_to_bytes(out_lanes.reshape(-1)).reshape(data_u8.shape)
+    return out, pads[:, : mac.MAC_BYTES]
+
+
+def _secure_crossing_mixed(data_u8: jax.Array, binding: mac.Binding,
+                           bank_round_keys: jax.Array,
+                           counter_words: jax.Array,
+                           bank_hash_key: jax.Array, row_idx: jax.Array,
+                           kernel, *, block_bytes: int, subbytes: str,
+                           interpret: bool | None):
+    """Mixed-key crossing: per-block bank-row gather + one fused pass."""
+    n_segments = block_bytes // 16
+    if n_segments - 1 > 10:
+        raise ValueError("kernel path supports narrow mode (<= 11 segments)")
+    rk_blocks = bank_round_keys[row_idx]                 # (N, 11, 16)
+    base = keystream_lanes_multi(counter_words, rk_blocks,
+                                 subbytes=subbytes, interpret=interpret)
+    data = bytes_to_u32(data_u8).reshape(-1, n_segments * 4)
+    # Diversifiers are a pure function of a row's schedule: build the
+    # (K, S, 4) bank once, then gather rows per block.
+    div_bank = jax.vmap(lambda rk: _div_lanes(rk, n_segments))(
+        bank_round_keys)
+    div = div_bank[row_idx]                              # (N, S, 4)
+    bind_words = binding.words(data.shape[0])
+    key = bank_hash_key[:, : data.shape[1] + 8].astype(jnp.uint32)[row_idx]
+    out_lanes, hashes = kernel(data, base, div, bind_words, key,
+                               interpret=interpret)
+    fin = mac.finalize_words(hashes[:, 0], hashes[:, 1], binding)
+    pads = keystream_bytes_multi(fin, rk_blocks, subbytes=subbytes,
+                                 interpret=interpret)
+    out = u32_to_bytes(out_lanes.reshape(-1)).reshape(data_u8.shape)
+    return out, pads[:, : mac.MAC_BYTES]
 
 
 def secure_read_kernel(ct_u8: jax.Array, binding: mac.Binding,
@@ -28,23 +99,28 @@ def secure_read_kernel(ct_u8: jax.Array, binding: mac.Binding,
     the NH compression; the AES finalization of the MACs runs on the
     tiny hash list.  Bit-identical to the unfused core path.
     """
-    n_segments = block_bytes // 16
-    if n_segments - 1 > 10:
-        raise ValueError("kernel path supports narrow mode (<= 11 segments)")
-    base = keystream_lanes(counter_words, round_keys, subbytes=subbytes,
-                           interpret=interpret)
-    ct = bytes_to_u32(ct_u8).reshape(-1, n_segments * 4)
-    n = ct.shape[0]
-    div = _div_lanes(round_keys, n_segments)
-    bind_words = binding.words(n)
-    key = hash_key_u32[: ct.shape[1] + 8]
-    pt_lanes, hashes = fused_crypt_mac(ct, base, div, bind_words, key,
-                                       interpret=interpret)
-    fin = mac.finalize_words(hashes[:, 0], hashes[:, 1], binding)
-    pads = keystream_bytes(fin, round_keys, subbytes=subbytes,
-                           interpret=interpret)
-    pt = u32_to_bytes(pt_lanes.reshape(-1)).reshape(ct_u8.shape)
-    return pt, pads[:, : mac.MAC_BYTES]
+    return _secure_crossing(ct_u8, binding, round_keys, counter_words,
+                            hash_key_u32, fused_crypt_mac,
+                            block_bytes=block_bytes, subbytes=subbytes,
+                            interpret=interpret)
+
+
+def secure_write_kernel(pt_u8: jax.Array, binding: mac.Binding,
+                        round_keys: jax.Array, counter_words: jax.Array,
+                        hash_key_u32: jax.Array, *, block_bytes: int,
+                        subbytes: str = "take",
+                        interpret: bool | None = None):
+    """Kernel-backed secure write: returns (ciphertext_u8, block_macs_u8).
+
+    One pass over the plaintext performs both the B-AES encrypt and the
+    NH compression of the fresh ciphertext; the AES finalization runs
+    on the tiny hash list.  Bit-identical to encrypting via the unfused
+    core path and then MACing the result.
+    """
+    return _secure_crossing(pt_u8, binding, round_keys, counter_words,
+                            hash_key_u32, fused_crypt_mac_write,
+                            block_bytes=block_bytes, subbytes=subbytes,
+                            interpret=interpret)
 
 
 def secure_read_kernel_mixed(ct_u8: jax.Array, binding: mac.Binding,
@@ -67,25 +143,29 @@ def secure_read_kernel_mixed(ct_u8: jax.Array, binding: mac.Binding,
     fused kernels instead of falling back to the vmapped per-page
     reference.  Bit-identical to that vmapped path.
     """
-    n_segments = block_bytes // 16
-    if n_segments - 1 > 10:
-        raise ValueError("kernel path supports narrow mode (<= 11 segments)")
-    rk_blocks = bank_round_keys[row_idx]                 # (N, 11, 16)
-    base = keystream_lanes_multi(counter_words, rk_blocks,
-                                 subbytes=subbytes, interpret=interpret)
-    ct = bytes_to_u32(ct_u8).reshape(-1, n_segments * 4)
-    n = ct.shape[0]
-    # Diversifiers are a pure function of a row's schedule: build the
-    # (K, S, 4) bank once, then gather rows per block.
-    div_bank = jax.vmap(lambda rk: _div_lanes(rk, n_segments))(
-        bank_round_keys)
-    div = div_bank[row_idx]                              # (N, S, 4)
-    bind_words = binding.words(n)
-    key = bank_hash_key[:, : ct.shape[1] + 8].astype(jnp.uint32)[row_idx]
-    pt_lanes, hashes = fused_crypt_mac_mixed(ct, base, div, bind_words, key,
-                                             interpret=interpret)
-    fin = mac.finalize_words(hashes[:, 0], hashes[:, 1], binding)
-    pads = keystream_bytes_multi(fin, rk_blocks, subbytes=subbytes,
-                                 interpret=interpret)
-    pt = u32_to_bytes(pt_lanes.reshape(-1)).reshape(ct_u8.shape)
-    return pt, pads[:, : mac.MAC_BYTES]
+    return _secure_crossing_mixed(ct_u8, binding, bank_round_keys,
+                                  counter_words, bank_hash_key, row_idx,
+                                  fused_crypt_mac_mixed,
+                                  block_bytes=block_bytes, subbytes=subbytes,
+                                  interpret=interpret)
+
+
+def secure_write_kernel_mixed(pt_u8: jax.Array, binding: mac.Binding,
+                              bank_round_keys: jax.Array,
+                              counter_words: jax.Array,
+                              bank_hash_key: jax.Array, row_idx: jax.Array, *,
+                              block_bytes: int, subbytes: str = "take",
+                              interpret: bool | None = None):
+    """Mixed-key fused secure write: per-BLOCK keys gathered from a bank.
+
+    The write half of the mixed-key fused path: every block is
+    encrypted and its fresh ciphertext NH-hashed under its OWN bank row
+    in one fused pass — the route that keeps MIXED-row dirty-page
+    reseals on the fused kernels instead of the vmapped per-page
+    reference.  Bit-identical to that vmapped path.
+    """
+    return _secure_crossing_mixed(pt_u8, binding, bank_round_keys,
+                                  counter_words, bank_hash_key, row_idx,
+                                  fused_crypt_mac_write_mixed,
+                                  block_bytes=block_bytes, subbytes=subbytes,
+                                  interpret=interpret)

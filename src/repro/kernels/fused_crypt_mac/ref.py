@@ -8,7 +8,8 @@ import jax.numpy as jnp
 from repro.core import mac
 from repro.kernels.otp_xor.ref import otp_xor_ref
 
-__all__ = ["fused_crypt_mac_ref", "fused_crypt_mac_mixed_ref"]
+__all__ = ["fused_crypt_mac_ref", "fused_crypt_mac_mixed_ref",
+           "fused_crypt_mac_write_ref", "fused_crypt_mac_write_mixed_ref"]
 
 
 def fused_crypt_mac_ref(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
@@ -47,4 +48,33 @@ def fused_crypt_mac_mixed_ref(ct_lanes: jax.Array, base_otp_lanes: jax.Array,
         return pt[0], nh[0]
 
     return jax.vmap(one)(ct_lanes, base_otp_lanes, div_lanes_per,
+                         bind_words, key_per_u32)
+
+
+def fused_crypt_mac_write_ref(pt_lanes: jax.Array, base_otp_lanes: jax.Array,
+                              div_lanes: jax.Array, bind_words: jax.Array,
+                              key_u32: jax.Array
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Write-direction oracle: encrypt, then NH over the FRESH
+    ciphertext (same shapes as :func:`fused_crypt_mac_ref`; the hash
+    input moves to the pad-XOR output)."""
+    ct = otp_xor_ref(pt_lanes, base_otp_lanes, div_lanes)
+    payload = jnp.concatenate([ct, bind_words], axis=-1)
+    hi, lo = mac.nh_hash(payload, key_u32)
+    return ct, jnp.stack([hi, lo], axis=-1)
+
+
+def fused_crypt_mac_write_mixed_ref(pt_lanes: jax.Array,
+                                    base_otp_lanes: jax.Array,
+                                    div_lanes_per: jax.Array,
+                                    bind_words: jax.Array,
+                                    key_per_u32: jax.Array
+                                    ) -> tuple[jax.Array, jax.Array]:
+    """Mixed-key write oracle: one single-key write ref per block."""
+    def one(pt1, base1, div1, bind1, key1):
+        ct, nh = fused_crypt_mac_write_ref(pt1[None], base1[None], div1,
+                                           bind1[None], key1)
+        return ct[0], nh[0]
+
+    return jax.vmap(one)(pt_lanes, base_otp_lanes, div_lanes_per,
                          bind_words, key_per_u32)

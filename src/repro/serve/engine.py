@@ -288,6 +288,7 @@ class SecureServingEngine:
                       "deferred_checks": 0, "rotations": 0,
                       "prefill_compiles": 0, "reseals": 0,
                       "uniform_fast_ticks": 0, "fused_mixed_ticks": 0,
+                      "fused_write_ticks": 0,
                       "decode_bucket_compiles": 0, "decode_page_reads": 0}
 
         # Two-level page table: the slot directory (level 1) feeds pow2
@@ -1063,6 +1064,12 @@ class SecureServingEngine:
             # MACs entirely and never enter the fused kernel, so they
             # must not count as fused ticks.)
             self.stats["fused_mixed_ticks"] += 1
+        if kvp._kernel_write_ok(self.spec) and \
+                self.spec.cfg.verify != "none":
+            # The tick's dirty-page reseal runs the one-pass fused
+            # write kernel (single-key, uniform, or mixed-row alike) —
+            # write_pages never touches the vmapped reference.
+            self.stats["fused_write_ticks"] += 1
         self.stats["decode_page_reads"] += len(active_idx) * bucket
         self.pool, self.onchip, toks, ok = decode_fn(*args)
         self.stats["decode_steps"] += 1

@@ -28,11 +28,13 @@ matches.
 
 Everything here is pure and jit-compatible; the serving engine traces
 ``read_pages`` + model decode + ``write_dirty`` as ONE jitted
-computation.  On the B-AES/NH schemes with narrow blocks the read path
-can run through the fused Pallas decrypt+hash kernel
-(:func:`repro.kernels.fused_crypt_mac.ops.secure_read_kernel`) and the
-write path through the ``otp_xor``-based
-:func:`repro.kernels.otp_xor.ops.baes_encrypt_kernel`.
+computation.  On the B-AES/NH schemes with narrow blocks BOTH boundary
+directions run fused Pallas kernels: reads through decrypt+hash
+(:func:`repro.kernels.fused_crypt_mac.ops.secure_read_kernel`) and
+writes through encrypt+hash-of-fresh-ciphertext
+(:func:`repro.kernels.fused_crypt_mac.ops.secure_write_kernel`) — the
+dirty-page reseal touches its bytes once, not once to encrypt and once
+to MAC.
 
 **Multi-tenant pages.**  Every boundary crossing optionally takes a
 :class:`PageKeyCtx`: a stacked key bank (one row per retained
@@ -55,10 +57,14 @@ single-tenant engine.  When every page of a crossing resolves to ONE
 bank row, ``uniform=True`` keeps the per-page (tenant, epoch) words in
 the RePA binding but dispatches the flat single-key crypt/MAC route
 (including the fused kernels) instead of the vmapped per-page one —
-bit-identical metadata, single-key speed.  MIXED-row reads stay on the
-fused kernel too: the mixed variant gathers each page's AES schedule,
-B-AES diversifiers and NH key row from the bank inside one fused pass
-(:func:`repro.kernels.fused_crypt_mac.ops.secure_read_kernel_mixed`).
+bit-identical metadata, single-key speed.  MIXED-row crossings stay on
+the fused kernels too, in BOTH directions: the mixed variants gather
+each page's AES schedule, B-AES diversifiers and NH key row from the
+bank inside one fused pass
+(:func:`repro.kernels.fused_crypt_mac.ops.secure_read_kernel_mixed` /
+:func:`repro.kernels.fused_crypt_mac.ops.secure_write_kernel_mixed`),
+so a mixed-tenant tick's dirty-page reseal never falls back to the
+vmapped per-page reference either.
 
 **Touched-page windows.**  :class:`TwoLevelPageTable` (slot directory
 -> pow2 page-count-bucketed windows) lets every boundary crossing run
@@ -589,43 +595,76 @@ def _page_block_macs(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
     return macs.reshape(n, leaf.n_blocks, mac.MAC_BYTES)
 
 
-def _fused_read(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
-                page_ids: jax.Array, vns: jax.Array, keys,
-                ctx: PageKeyCtx | None = None, uniform: bool = False):
-    """Kernel-fused decrypt + optBlk MACs in one pass over the bytes.
+def _fused_crossing(spec: PageSpec, leaf: LeafPageSpec, buf: jax.Array,
+                    page_ids: jax.Array, vns: jax.Array, keys,
+                    ctx: PageKeyCtx | None, uniform: bool, write: bool):
+    """One kernel-fused crypt + optBlk-MAC pass over page bytes.
 
-    ``ctx=None`` (engine-wide keys) and uniform ctxs run the single-key
-    kernel; a MIXED ctx (pages resolving to different bank rows) runs
-    the mixed-key kernel, which gathers each page's round-key schedule
-    and NH key row from the bank and stays fused — the tenant words
-    land in the binding/counters either way.
+    Read (``write=False``: decrypt + hash the incoming ciphertext) and
+    write (``write=True``: encrypt + hash the fresh ciphertext) build
+    the SAME binding/counters and key selections — only the kernel pair
+    differs, so the two directions cannot drift apart.  ``ctx=None``
+    (engine-wide keys) and uniform ctxs run the single-key kernel; a
+    MIXED ctx (pages resolving to different bank rows) runs the
+    mixed-key kernel, which gathers each page's round-key schedule and
+    NH key row from the bank and stays fused — the tenant words land in
+    the binding/counters either way.
     """
-    from repro.kernels.fused_crypt_mac.ops import (secure_read_kernel,
-                                                   secure_read_kernel_mixed)
+    from repro.kernels.fused_crypt_mac import ops as fused_ops
     cfg = spec.cfg
     binding = _block_binding(spec, leaf, page_ids, vns, ctx)
     counters = _block_counters(spec, leaf, page_ids, vns, ctx)
     if ctx is not None and not uniform:
+        kernel = (fused_ops.secure_write_kernel_mixed if write
+                  else fused_ops.secure_read_kernel_mixed)
         rows = jnp.repeat(ctx.key_idx, leaf.n_blocks)
-        pt, macs = secure_read_kernel_mixed(
-            ct.reshape(-1), binding, ctx.bank_round_keys, counters,
+        out, macs = kernel(
+            buf.reshape(-1), binding, ctx.bank_round_keys, counters,
             ctx.bank_hash_key, rows, block_bytes=cfg.block_bytes)
     else:
+        kernel = (fused_ops.secure_write_kernel if write
+                  else fused_ops.secure_read_kernel)
         if ctx is None:
             round_keys, hash_key = keys.round_keys, keys.hash_key
         else:
             _, round_keys, hash_key = _uniform_keys(ctx)
-        pt, macs = secure_read_kernel(
-            ct.reshape(-1), binding, round_keys, counters, hash_key,
+        out, macs = kernel(
+            buf.reshape(-1), binding, round_keys, counters, hash_key,
             block_bytes=cfg.block_bytes)
-    return (pt.reshape(ct.shape),
+    return (out.reshape(buf.shape),
             macs.reshape(page_ids.shape[0], leaf.n_blocks, mac.MAC_BYTES))
+
+
+def _fused_read(spec: PageSpec, leaf: LeafPageSpec, ct: jax.Array,
+                page_ids: jax.Array, vns: jax.Array, keys,
+                ctx: PageKeyCtx | None = None, uniform: bool = False):
+    """Kernel-fused decrypt + optBlk MACs (see :func:`_fused_crossing`)."""
+    return _fused_crossing(spec, leaf, ct, page_ids, vns, keys, ctx,
+                           uniform, write=False)
 
 
 def _kernel_read_ok(spec: PageSpec) -> bool:
     cfg = spec.cfg
     return (spec.use_kernel and cfg.baes and cfg.mac_engine == "nh"
             and cfg.block_bytes // SEGMENT_BYTES <= 11)
+
+
+# The fused write kernel has the same capability envelope as the read
+# one (narrow-block B-AES + NH): a spec whose reads fuse also writes
+# fused, so a kernel-capable tick never touches the vmapped reference
+# in either direction.
+_kernel_write_ok = _kernel_read_ok
+
+
+def _fused_write(spec: PageSpec, leaf: LeafPageSpec, buf: jax.Array,
+                 page_ids: jax.Array, vns: jax.Array, keys,
+                 ctx: PageKeyCtx | None = None, uniform: bool = False):
+    """Kernel-fused encrypt + optBlk MACs: the dirty page's plaintext
+    is re-encrypted and its fresh ciphertext NH-hashed in ONE Pallas
+    visit, instead of an encrypt dispatch followed by a MAC dispatch
+    re-reading the ciphertext (see :func:`_fused_crossing`)."""
+    return _fused_crossing(spec, leaf, buf, page_ids, vns, keys, ctx,
+                           uniform, write=True)
 
 
 # ---------------------------------------------------------------------------
@@ -780,11 +819,20 @@ def write_pages(pool: PagedKVPool, spec: PageSpec, keys, page_ids: jax.Array,
     new_block_macs = list(pool.block_macs)
     for li, leaf in enumerate(spec.leaves):
         buf = _dense_to_pages(spec, leaf, leaf_pages[li])
-        ct = _crypt(spec, leaf, buf, page_ids, vns, keys, ctx, uniform)
+        if cfg.verify != "none" and _kernel_write_ok(spec):
+            # One fused Pallas pass: encrypt + NH of the fresh
+            # ciphertext — the write-side twin of the fused read, for
+            # uniform AND mixed-row key selections.
+            ct, macs = _fused_write(spec, leaf, buf, page_ids, vns, keys,
+                                    ctx, uniform)
+        else:
+            ct = _crypt(spec, leaf, buf, page_ids, vns, keys, ctx, uniform)
+            macs = None
+            if cfg.verify != "none":
+                macs = _page_block_macs(spec, leaf, ct, page_ids, vns, keys,
+                                        ctx, uniform)
         new_cts.append(pool.cts[li].at[page_ids].set(ct))
         if cfg.verify != "none":
-            macs = _page_block_macs(spec, leaf, ct, page_ids, vns, keys, ctx,
-                                    uniform)
             if cfg.verify == "block":
                 new_block_macs[li] = pool.block_macs[li].at[page_ids].set(macs)
             agg = agg ^ mac.xor_aggregate(macs, axis=1)

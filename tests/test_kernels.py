@@ -11,10 +11,16 @@ from repro.core.secure_memory import SecureKeys
 from repro.kernels.aes_ctr import ops as aes_ops
 from repro.kernels.aes_ctr.ref import (aes_ctr_keystream_lanes_ref,
                                        aes_ctr_keystream_ref)
-from repro.kernels.fused_crypt_mac.kernel import fused_crypt_mac_mixed
+from repro.kernels.fused_crypt_mac.kernel import (fused_crypt_mac_mixed,
+                                                  fused_crypt_mac_write,
+                                                  fused_crypt_mac_write_mixed)
 from repro.kernels.fused_crypt_mac.ops import (secure_read_kernel,
-                                               secure_read_kernel_mixed)
-from repro.kernels.fused_crypt_mac.ref import fused_crypt_mac_mixed_ref
+                                               secure_read_kernel_mixed,
+                                               secure_write_kernel,
+                                               secure_write_kernel_mixed)
+from repro.kernels.fused_crypt_mac.ref import (fused_crypt_mac_mixed_ref,
+                                               fused_crypt_mac_write_mixed_ref,
+                                               fused_crypt_mac_write_ref)
 from repro.kernels.otp_xor import ops as ox_ops
 from repro.kernels.otp_xor.ref import otp_xor_ref
 from repro.kernels.xormac import ops as xm_ops
@@ -240,3 +246,134 @@ class TestFusedCryptMacMixed:
         got = aes_ops.keystream_lanes_multi(cw, rk_per)
         want = aes_ops.keystream_lanes(cw, kkeys.round_keys)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestFusedCryptMacWrite:
+    """The write-direction kernels: encrypt + NH of the FRESH
+    ciphertext in one pass (the one-pass dirty-page reseal)."""
+
+    def _bank(self, k_rows, seed=0):
+        keys = [SecureKeys.derive(200 + seed * 16 + i) for i in range(k_rows)]
+        return (jnp.stack([k.round_keys for k in keys]),
+                jnp.stack([k.hash_key for k in keys]), keys)
+
+    @pytest.mark.parametrize("n,s", [(1, 2), (33, 4)])
+    def test_write_kernel_vs_ref(self, n, s):
+        rng = np.random.default_rng(n * s + 1)
+        pt = jnp.asarray(rng.integers(0, 2**32, (n, s * 4), dtype=np.uint32))
+        base = jnp.asarray(rng.integers(0, 2**32, (n, 4), dtype=np.uint32))
+        div = jnp.asarray(rng.integers(0, 2**32, (s, 4), dtype=np.uint32))
+        bind = jnp.asarray(rng.integers(0, 2**32, (n, 8), dtype=np.uint32))
+        key = jnp.asarray(rng.integers(0, 2**32, (s * 4 + 8,),
+                                       dtype=np.uint32))
+        got_ct, got_nh = fused_crypt_mac_write(pt, base, div, bind, key)
+        want_ct, want_nh = fused_crypt_mac_write_ref(pt, base, div, bind, key)
+        np.testing.assert_array_equal(np.asarray(got_ct), np.asarray(want_ct))
+        np.testing.assert_array_equal(np.asarray(got_nh), np.asarray(want_nh))
+
+    @pytest.mark.parametrize("n,s", [(4, 2), (33, 4)])
+    def test_mixed_write_kernel_vs_ref(self, n, s):
+        rng = np.random.default_rng(n * s + 2)
+        pt = jnp.asarray(rng.integers(0, 2**32, (n, s * 4), dtype=np.uint32))
+        base = jnp.asarray(rng.integers(0, 2**32, (n, 4), dtype=np.uint32))
+        div = jnp.asarray(rng.integers(0, 2**32, (n, s, 4), dtype=np.uint32))
+        bind = jnp.asarray(rng.integers(0, 2**32, (n, 8), dtype=np.uint32))
+        key = jnp.asarray(rng.integers(0, 2**32, (n, s * 4 + 8),
+                                       dtype=np.uint32))
+        got_ct, got_nh = fused_crypt_mac_write_mixed(pt, base, div, bind, key)
+        want_ct, want_nh = fused_crypt_mac_write_mixed_ref(pt, base, div,
+                                                           bind, key)
+        np.testing.assert_array_equal(np.asarray(got_ct), np.asarray(want_ct))
+        np.testing.assert_array_equal(np.asarray(got_nh), np.asarray(want_nh))
+
+    @pytest.mark.parametrize("n_blocks", [4, 40])
+    def test_secure_write_matches_encrypt_then_mac(self, kkeys, n_blocks):
+        """ct bit-identical to the core B-AES encrypt, MACs bit-identical
+        to mac.block_macs over that ciphertext — the exact unfused
+        write-path composition the kernel replaces."""
+        bb = 64
+        rng = np.random.default_rng(n_blocks + 5)
+        pt = jnp.asarray(rng.integers(0, 256, bb * n_blocks, dtype=np.uint8))
+        cw = jnp.asarray(rng.integers(0, 2**32, (n_blocks, 4),
+                                      dtype=np.uint32))
+        bind = mac.Binding.make(np.arange(n_blocks) * 4,
+                                np.full(n_blocks, 9), np.full(n_blocks, 1),
+                                np.full(n_blocks, 0), np.arange(n_blocks))
+        ct, macs = secure_write_kernel(pt, bind, kkeys.round_keys, cw,
+                                       kkeys.hash_key, block_bytes=bb)
+        want_ct = baes.baes_encrypt(pt, kkeys.round_keys, cw, block_bytes=bb,
+                                    key=kkeys.key)
+        np.testing.assert_array_equal(np.asarray(ct), np.asarray(want_ct))
+        want_macs = mac.block_macs(want_ct.reshape(n_blocks, bb), bind,
+                                   hash_key_u32=kkeys.hash_key,
+                                   round_keys=kkeys.round_keys, engine="nh")
+        np.testing.assert_array_equal(np.asarray(macs), np.asarray(want_macs))
+
+    def test_write_then_read_roundtrip(self, kkeys):
+        """A fused write's output verifies and decrypts through the
+        fused read with the SAME binding/counters — the dirty page a
+        tick reseals is readable (and checkable) next tick."""
+        bb, n = 64, 12
+        rng = np.random.default_rng(8)
+        pt = jnp.asarray(rng.integers(0, 256, bb * n, dtype=np.uint8))
+        cw = jnp.asarray(rng.integers(0, 2**32, (n, 4), dtype=np.uint32))
+        bind = mac.Binding.make(np.arange(n) * 4, np.full(n, 3),
+                                np.full(n, 0), np.full(n, 1), np.arange(n))
+        ct, w_macs = secure_write_kernel(pt, bind, kkeys.round_keys, cw,
+                                         kkeys.hash_key, block_bytes=bb)
+        pt2, r_macs = secure_read_kernel(ct, bind, kkeys.round_keys, cw,
+                                         kkeys.hash_key, block_bytes=bb)
+        np.testing.assert_array_equal(np.asarray(pt2), np.asarray(pt))
+        np.testing.assert_array_equal(np.asarray(r_macs), np.asarray(w_macs))
+
+    @pytest.mark.parametrize("n_blocks", [5, 37])
+    def test_mixed_secure_write_vs_per_key_reference(self, n_blocks):
+        """Each block encrypts + MACs under its OWN bank row, matching
+        the single-key path run once per row — the vmapped per-page
+        write reference the mixed kernel replaces."""
+        bb = 64
+        rng = np.random.default_rng(n_blocks + 3)
+        bank_rk, bank_hash, keys = self._bank(3, seed=n_blocks)
+        rows = jnp.asarray(rng.integers(0, 3, n_blocks), jnp.int32)
+        cw = jnp.asarray(rng.integers(0, 2**32, (n_blocks, 4),
+                                      dtype=np.uint32))
+        bind = mac.Binding.make(np.arange(n_blocks) * 4,
+                                np.full(n_blocks, 7), np.full(n_blocks, 1),
+                                np.full(n_blocks, 2), np.arange(n_blocks))
+        pt = jnp.asarray(rng.integers(0, 256, n_blocks * bb, dtype=np.uint8))
+        ct, macs = secure_write_kernel_mixed(pt, bind, bank_rk, cw,
+                                             bank_hash, rows, block_bytes=bb)
+        for i in range(n_blocks):
+            r = int(rows[i])
+            blk = pt.reshape(n_blocks, bb)[i]
+            want_ct = baes.baes_encrypt(blk, keys[r].round_keys, cw[i:i + 1],
+                                        block_bytes=bb, key=keys[r].key)
+            b1 = mac.Binding(*(f[i:i + 1] for f in bind))
+            want_mac = mac.block_macs(want_ct[None], b1,
+                                      hash_key_u32=keys[r].hash_key,
+                                      round_keys=keys[r].round_keys,
+                                      engine="nh")
+            np.testing.assert_array_equal(
+                np.asarray(ct).reshape(n_blocks, bb)[i], np.asarray(want_ct))
+            np.testing.assert_array_equal(np.asarray(macs[i]),
+                                          np.asarray(want_mac[0]))
+
+    def test_uniform_rows_match_single_key_write_kernel(self):
+        """A mixed write whose rows all agree is bit-identical to the
+        single-key fused write kernel."""
+        bb, n = 64, 12
+        rng = np.random.default_rng(10)
+        bank_rk, bank_hash, keys = self._bank(2)
+        rows = jnp.ones((n,), jnp.int32)
+        cw = jnp.asarray(rng.integers(0, 2**32, (n, 4), dtype=np.uint32))
+        bind = mac.Binding.make(np.arange(n) * 4, np.full(n, 3),
+                                np.full(n, 0), np.full(n, 1), np.arange(n))
+        pt = jnp.asarray(rng.integers(0, 256, n * bb, dtype=np.uint8))
+        got_ct, got_macs = secure_write_kernel_mixed(
+            pt, bind, bank_rk, cw, bank_hash, rows, block_bytes=bb)
+        want_ct, want_macs = secure_write_kernel(
+            pt, bind, keys[1].round_keys, cw, keys[1].hash_key,
+            block_bytes=bb)
+        np.testing.assert_array_equal(np.asarray(got_ct), np.asarray(want_ct))
+        np.testing.assert_array_equal(np.asarray(got_macs),
+                                      np.asarray(want_macs))

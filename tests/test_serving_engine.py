@@ -317,6 +317,80 @@ class TestPageCountBuckets:
             assert small < full
 
 
+class TestFusedWritePath:
+    """The one-pass fused write (dirty-page re-encrypt + re-MAC in a
+    single Pallas visit) must be invisible except for speed: pool
+    bytes, MACs and tokens bit-identical to the vmapped/unfused
+    reference, across the 2-/4-/8-page bucket boundaries, for every
+    scheme."""
+
+    ALL_SCHEMES = ["off", "seda", "seda512", "mgx64", "mgx512", "sgx64",
+                   "sgx512"]
+
+    def _run(self, smoke, prompts, scheme, use_kernel):
+        kw = dict(page_tokens=4, pages_per_slot=8, max_slots=2)
+        eng = _engine(smoke, scheme=scheme, use_kernel=use_kernel, **kw)
+        rids = [eng.submit(p, max_new_tokens=14) for p in prompts[:2]]
+        done = eng.run()
+        return [done[r].generated for r in rids], eng
+
+    @pytest.mark.parametrize("scheme", ALL_SCHEMES)
+    def test_dirty_page_bit_identity_across_bucket_boundaries(self, smoke,
+                                                              prompts,
+                                                              scheme):
+        """Contexts straddling the 2-/4-/8-page buckets: the kernel
+        engine's final pool (ciphertext, page MACs, VNs, deferred pool
+        MAC) is byte-for-byte the reference engine's."""
+        want, ref = self._run(smoke, prompts, scheme, use_kernel=False)
+        got, fused = self._run(smoke, prompts, scheme, use_kernel=True)
+        assert got == want
+        assert ref.stats["decode_bucket_compiles"] >= 3  # crossed buckets
+        for a, b in zip(ref.pool.cts, fused.pool.cts):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(ref.pool.block_macs, fused.pool.block_macs):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(ref.pool.page_macs),
+                                      np.asarray(fused.pool.page_macs))
+        np.testing.assert_array_equal(np.asarray(ref.pool.page_vns),
+                                      np.asarray(fused.pool.page_vns))
+        np.testing.assert_array_equal(np.asarray(ref.pool.pool_mac),
+                                      np.asarray(fused.pool.pool_mac))
+        assert fused.deferred_check()
+
+    def test_fused_write_ticks_counted_only_on_kernel_path(self, smoke,
+                                                           prompts):
+        """Every kernel-capable tick reseals through the fused write
+        (seda + use_kernel); the reference engine and non-capable
+        schemes (wide blocks, T-AES) report zero."""
+        _, ref = self._run(smoke, prompts, "seda", use_kernel=False)
+        _, fused = self._run(smoke, prompts, "seda", use_kernel=True)
+        assert ref.stats["fused_write_ticks"] == 0
+        assert fused.stats["fused_write_ticks"] > 0
+        assert fused.stats["fused_write_ticks"] == \
+            fused.stats["decode_steps"]
+        _, wide = self._run(smoke, prompts, "seda512", use_kernel=True)
+        assert wide.stats["fused_write_ticks"] == 0    # > 11 segments
+        _, taes = self._run(smoke, prompts, "mgx64", use_kernel=True)
+        assert taes.stats["fused_write_ticks"] == 0    # T-AES, no B-AES
+
+    def test_fused_written_page_tamper_still_caught(self, smoke, prompts):
+        """A page resealed by the fused write keeps its gate: flipping
+        one ciphertext byte fails the next read's verification."""
+        eng = _engine(smoke, scheme="seda", max_slots=1, use_kernel=True)
+        eng.submit(prompts[0], max_new_tokens=6)
+        eng.step()
+        eng.step()                    # dirty page rewritten (fused path)
+        assert eng.stats["fused_write_ticks"] > 0
+        slot = eng.slots[0]
+        dirty_pid = slot.pages[(slot.length - 1) // eng.page_tokens]
+        ct = eng.pool.cts[0]
+        eng.pool = eng.pool._replace(
+            cts=(ct.at[dirty_pid, 3].set(ct[dirty_pid, 3] ^ 0x5A),)
+            + eng.pool.cts[1:])
+        with pytest.raises(IntegrityError):
+            eng.step()
+
+
 class TestLatencyStats:
     def test_run_result_carries_percentiles(self, smoke, prompts):
         eng = _engine(smoke, scheme="off")

@@ -405,6 +405,60 @@ class TestBucketedDecodeSharded:
         assert min(per_step) < max(per_step)
 
 
+class TestFusedWriteSharded:
+    """The fused write path under shard bindings: shards {1, 2} stay
+    token- and pool-bit-identical to the vmapped reference, and pages
+    resealed by the fused write stay pinned to their shard."""
+
+    @pytest.mark.parametrize("shards", [1, 2])
+    def test_kernel_cluster_token_and_pool_identical(self, smoke, prompts,
+                                                     shards):
+        outs, pools, stats = [], [], []
+        for use_kernel in (False, True):
+            cl = _cluster(smoke, shards=shards, scheme="seda",
+                          use_kernel=use_kernel)
+            rids = [cl.submit(p, max_new_tokens=6) for p in prompts]
+            done = cl.run()
+            outs.append([done[r].generated for r in rids])
+            pools.append([e.pool for e in cl.engines])
+            stats.append(cl.engine_stats)
+            assert cl.deferred_check()
+        assert outs[0] == outs[1]
+        for ref_pool, fused_pool in zip(*pools):
+            for a, b in zip(ref_pool.cts, fused_pool.cts):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.asarray(ref_pool.page_macs),
+                                          np.asarray(fused_pool.page_macs))
+            np.testing.assert_array_equal(np.asarray(ref_pool.pool_mac),
+                                          np.asarray(fused_pool.pool_mac))
+        assert stats[0]["fused_write_ticks"] == 0
+        assert stats[1]["fused_write_ticks"] == stats[1]["decode_steps"] > 0
+
+    def test_fused_written_page_replay_across_shards_fails(self, smoke,
+                                                           prompts):
+        """Cross-shard replay of a page the FUSED WRITE resealed: the
+        destination shard's binding (fmap bits 28-31 + CTR word 0)
+        still rejects the byte-identical capture."""
+        cluster = _cluster(smoke, max_slots=1, use_kernel=True)
+        cluster.submit(prompts[0], max_new_tokens=8)
+        cluster.submit(prompts[1], max_new_tokens=6)
+        cluster.step()
+        cluster.step()                # dirty pages resealed (fused write)
+        assert cluster.engine_stats["fused_write_ticks"] > 0
+        e0, e1 = cluster.engines
+        s0 = next(s for s in e0.slots if s is not None)
+        s1 = next(s for s in e1.slots if s is not None)
+        d0 = s0.pages[(s0.length - 1) // e0.page_tokens]
+        d1 = s1.pages[(s1.length - 1) // e1.page_tokens]
+        e1.pool = e1.pool._replace(
+            cts=tuple(c1.at[d1].set(c0[d0])
+                      for c0, c1 in zip(e0.pool.cts, e1.pool.cts)),
+            page_macs=e1.pool.page_macs.at[d1].set(e0.pool.page_macs[d0]),
+            page_vns=e1.pool.page_vns.at[d1].set(e0.pool.page_vns[d0]))
+        with pytest.raises(IntegrityError):
+            cluster.run()
+
+
 class TestRootMacCompression:
     """The cluster root MAC is a keyed CBC compression over ordered
     (shard, pool MAC) pairs — it binds value, order AND shard count

@@ -313,6 +313,29 @@ class TestMixedKeyFusedPath:
         assert fused_eng.stats["fused_mixed_ticks"] == \
             fused_eng.stats["decode_steps"]
         assert ref_eng.stats["fused_mixed_ticks"] == 0
+        # ... and the WRITE half too: every mixed tick's dirty-page
+        # reseal ran the one-pass fused write kernel.
+        assert fused_eng.stats["fused_write_ticks"] == \
+            fused_eng.stats["decode_steps"]
+        assert ref_eng.stats["fused_write_ticks"] == 0
+
+    def test_mixed_fused_write_pool_bit_identical_to_ref(self, smoke,
+                                                         prompts):
+        """The mixed fused write's pool state (ciphertext under each
+        page's own tenant-epoch keys, page/pool MACs, VNs) is
+        byte-for-byte the vmapped per-page reference's."""
+        want, ref_eng = self._run(smoke, prompts, use_kernel=False)
+        got, fused_eng = self._run(smoke, prompts, use_kernel=True)
+        assert got == want
+        for a, b in zip(ref_eng.pool.cts, fused_eng.pool.cts):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(ref_eng.pool.page_macs),
+                                      np.asarray(fused_eng.pool.page_macs))
+        np.testing.assert_array_equal(np.asarray(ref_eng.pool.page_vns),
+                                      np.asarray(fused_eng.pool.page_vns))
+        np.testing.assert_array_equal(np.asarray(ref_eng.pool.pool_mac),
+                                      np.asarray(fused_eng.pool.pool_mac))
+        assert fused_eng.deferred_check()
 
     def test_mixed_fused_post_rotation_parity(self, smoke, prompts):
         """Live rotation (lazy re-encryption + eager reseal) keeps the
@@ -340,6 +363,25 @@ class TestMixedKeyFusedPath:
         eng.step()
         s0, s1 = eng.slots[0], eng.slots[1]
         s1.pages[0] = s0.pages[0]       # tenant B's table points at A's page
+        with pytest.raises(IntegrityError):
+            eng.run()
+
+    def test_fused_write_rejects_cross_tenant_read(self, smoke, prompts):
+        """A page RESEALED by the fused mixed write (not just the
+        prefill write) keeps tenant isolation: steal the dirty page
+        after a fused-write tick and the victim's binding still wins."""
+        reg, sess = _registry(2, seed=14)
+        eng = _engine(smoke, scheme="seda", registry=reg, use_kernel=True,
+                      max_slots=2)
+        eng.submit(prompts[0], max_new_tokens=8, session=sess[0])
+        eng.submit(prompts[1], max_new_tokens=8, session=sess[1])
+        eng.step()
+        eng.step()                    # dirty pages resealed (fused write)
+        assert eng.stats["fused_write_ticks"] >= 2
+        s0, s1 = eng.slots[0], eng.slots[1]
+        dirty0 = (s0.length - 1) // eng.page_tokens
+        s1.pages[dirty0] = s0.pages[dirty0]
+        s1.page_epochs[dirty0] = s0.page_epochs[dirty0]
         with pytest.raises(IntegrityError):
             eng.run()
 
