@@ -57,7 +57,7 @@ def _measure(arch, cfg, params, scheme: str, n_tenants: int, *,
         rotate_every=rotate_every)
     for i in range(batch):
         prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
-        eng.submit(prompt, max_new_tokens=gen_len,
+        eng.submit(prompt=prompt, max_new_tokens=gen_len,
                    session=sessions[i % n_tenants])
     eng.step()                       # admission + first decode (compiles)
     t0 = time.perf_counter()

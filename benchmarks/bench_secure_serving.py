@@ -17,11 +17,17 @@ touched-page bucket, so tok/s and ``bytes accessed`` should track the
 context, not the pool.  The all-resident window (the pre-bucketing
 behaviour) is measured alongside as the baseline the bucketing beats.
 
+A third sweep — **shared prefix** — measures the secure prefix cache:
+``hit_rate`` of the batch shares one prompt, and the cached engine's
+tok/s, prefill pages skipped, and CoW count are reported next to a
+per-point token-identity check against the no-cache engine.
+
 Standalone JSON mode for the CI perf-smoke job::
 
     PYTHONPATH=src python benchmarks/bench_secure_serving.py \
         --batch-sizes 1,8 --gen-len 6 --json results.json \
-        --decode-scaling-json decode-scaling.json
+        --decode-scaling-json decode-scaling.json \
+        --shared-prefix-json shared-prefix.json
 """
 
 from __future__ import annotations
@@ -42,6 +48,7 @@ from repro.serve.engine import SecureServingEngine
 DEFAULT_SCHEMES = ("off", "seda", "seda512", "mgx64", "sgx64")
 DEFAULT_BATCHES = (1, 8, 32)
 DEFAULT_SCALING_CONTEXTS = (8, 24, 56)
+DEFAULT_HIT_RATES = (0.0, 0.5, 1.0)
 
 
 def _measure(arch, cfg, params, scheme: str, batch: int, *,
@@ -55,7 +62,7 @@ def _measure(arch, cfg, params, scheme: str, batch: int, *,
         n_pages=batch * pages_per_slot, use_kernel=use_kernel)
     for _ in range(batch):
         prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
-        eng.submit(prompt, max_new_tokens=gen_len)
+        eng.submit(prompt=prompt, max_new_tokens=gen_len)
     eng.step()                       # admission + first decode (compiles)
     t0 = time.perf_counter()
     steps = 0
@@ -116,7 +123,7 @@ def _measure_decode_scaling(arch, cfg, params, scheme: str, *, batch: int,
         n_pages=batch * pages_per_slot)
     for _ in range(batch):
         prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
-        eng.submit(prompt, max_new_tokens=gen_len)
+        eng.submit(prompt=prompt, max_new_tokens=gen_len)
     eng.step()                       # admission + first decode (compiles)
     t0 = time.perf_counter()
     steps = 0
@@ -171,6 +178,98 @@ def collect_decode_scaling(context_lens=DEFAULT_SCALING_CONTEXTS, *,
             pages_per_slot=pages_per_slot, prompt_len=prompt_len,
             gen_len=gen_len))
     return results
+
+
+def _measure_shared_prefix(arch, cfg, params, scheme: str, hit_rate: float,
+                           *, batch: int, page_tokens: int,
+                           pages_per_slot: int, gen_len: int,
+                           prompt_len: int, seed: int = 0) -> dict:
+    """One shared-prefix point: ``hit_rate`` of the batch shares one
+    prompt; the cached engine's tokens are checked against a no-cache
+    engine (token identity is part of the measurement)."""
+    from repro.tenancy.keys import KeyHierarchy
+    from repro.tenancy.registry import TenantRegistry
+
+    rng = np.random.default_rng(seed)
+    shared = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
+    n_shared = round(hit_rate * batch)
+    prompts = [list(shared) if i < n_shared else
+               list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
+               for i in range(batch)]
+
+    def run_once(prefix_cache: bool):
+        registry = TenantRegistry(KeyHierarchy(0), max_tenants=2)
+        registry.register("bench")
+        eng = SecureServingEngine(
+            arch, cfg, params, scheme=scheme, max_slots=batch,
+            page_tokens=page_tokens, pages_per_slot=pages_per_slot,
+            n_pages=(batch + 1) * pages_per_slot, registry=registry,
+            prefix_cache=prefix_cache, prefix_cache_pages=pages_per_slot)
+        sess = registry.open_session("bench")
+        rids = [eng.submit(prompt=p, max_new_tokens=gen_len, session=sess)
+                for p in prompts]
+        eng.step()                   # admission + first decode (compiles)
+        t0 = time.perf_counter()
+        steps = 0
+        while any(s is not None for s in eng.slots) or eng._n_waiting():
+            eng.step()
+            steps += 1
+        dt = time.perf_counter() - t0
+        tokens = [eng.requests[r].generated for r in rids]
+        return eng, tokens, steps, dt
+
+    base_eng, base_tokens, _, _ = run_once(False)
+    eng, tokens, steps, dt = run_once(True)
+    return {
+        "scheme": scheme,
+        "hit_rate": hit_rate,
+        "batch": batch,
+        "tok_per_s": batch * steps / max(dt, 1e-9),
+        "us_per_step": dt / max(steps, 1) * 1e6,
+        "prefix_hit_pages": eng.stats["prefix_hit_pages"],
+        "prefix_cow_pages": eng.stats["prefix_cow_pages"],
+        "prefix_inserted_pages": eng.stats["prefix_inserted_pages"],
+        "prefill_pages_skipped": eng.stats["prefill_pages_skipped"],
+        "prefill_compiles": eng.stats["prefill_compiles"],
+        "baseline_prefill_compiles": base_eng.stats["prefill_compiles"],
+        "tokens_match": tokens == base_tokens,
+    }
+
+
+def collect_shared_prefix(hit_rates=DEFAULT_HIT_RATES,
+                          schemes=("off", "seda"), *,
+                          arch_name: str = "minitron-4b", batch: int = 4,
+                          page_tokens: int = 8, pages_per_slot: int = 4,
+                          gen_len: int = 6, prompt_len: int = 17) -> list:
+    """Shared-prefix sweep: hit-rate x scheme, tok/s + prefill pages
+    skipped, with per-point token-identity vs. the no-cache engine."""
+    arch = get_arch(arch_name)
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    results = []
+    for scheme in schemes:
+        for hr in hit_rates:
+            results.append(_measure_shared_prefix(
+                arch, cfg, params, scheme, hr, batch=batch,
+                page_tokens=page_tokens, pages_per_slot=pages_per_slot,
+                gen_len=gen_len, prompt_len=prompt_len))
+    return results
+
+
+def run_shared_prefix() -> list:
+    """benchmarks.run suite hook for the shared-prefix sweep."""
+    rows = []
+    for r in collect_shared_prefix(hit_rates=(0.0, 1.0)):
+        rows.append({
+            "name": (f"shared_prefix_{r['scheme']}"
+                     f"_hit{int(r['hit_rate'] * 100)}"),
+            "us_per_call": r["us_per_step"],
+            "derived": (f"tok/s={r['tok_per_s']:.1f} "
+                        f"pages_skipped={r['prefill_pages_skipped']} "
+                        f"cow={r['prefix_cow_pages']} "
+                        f"tokens_match={r['tokens_match']}"),
+        })
+    return rows
 
 
 def run_decode_scaling() -> list:
@@ -230,6 +329,13 @@ def main(argv=None) -> list:
                          "write its results to this file")
     ap.add_argument("--scaling-contexts",
                     default=",".join(map(str, DEFAULT_SCALING_CONTEXTS)))
+    ap.add_argument("--shared-prefix-json", default=None,
+                    help="also run the shared-prefix sweep (hit-rate x "
+                         "scheme, tok/s + prefill pages skipped + token "
+                         "identity vs. the no-cache engine) and write its "
+                         "results to this file")
+    ap.add_argument("--hit-rates",
+                    default=",".join(map(str, DEFAULT_HIT_RATES)))
     args = ap.parse_args(argv)
 
     results = collect(
@@ -261,6 +367,20 @@ def main(argv=None) -> list:
             json.dump({"benchmark": "decode_scaling", "results": scaling}, f,
                       indent=2)
         print(f"[serve-bench] wrote {args.decode_scaling_json}")
+    if args.shared_prefix_json:
+        prefix = collect_shared_prefix(
+            tuple(float(h) for h in args.hit_rates.split(",")),
+            arch_name=args.arch)
+        for r in prefix:
+            print(f"[serve-bench] shared-prefix scheme={r['scheme']:<6} "
+                  f"hit={r['hit_rate']:<4} tok/s={r['tok_per_s']:9.1f} "
+                  f"pages_skipped={r['prefill_pages_skipped']:<3} "
+                  f"cow={r['prefix_cow_pages']:<2} "
+                  f"tokens_match={r['tokens_match']}")
+        with open(args.shared_prefix_json, "w") as f:
+            json.dump({"benchmark": "shared_prefix", "results": prefix}, f,
+                      indent=2)
+        print(f"[serve-bench] wrote {args.shared_prefix_json}")
     return results
 
 

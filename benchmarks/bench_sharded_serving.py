@@ -71,7 +71,7 @@ def _measure(arch, cfg, params, scheme: str, shards: int, *, batch: int,
         use_kernel=use_kernel)
     for i in range(batch):
         prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
-        cluster.submit(prompt, max_new_tokens=gen_len,
+        cluster.submit(prompt=prompt, max_new_tokens=gen_len,
                        session=sessions[i % len(sessions)])
     cluster.step()                  # admission + first decode (compiles)
     occ = [cluster.sharded.occupancy()]
@@ -84,7 +84,7 @@ def _measure(arch, cfg, params, scheme: str, shards: int, *, batch: int,
     dt = time.perf_counter() - t0
     occ_arr = np.asarray(occ, np.float64)
     stats = cluster.engine_stats
-    return {
+    row = {
         "scheme": label or scheme,
         "shards": shards,
         "decode_steps_timed": steps,
@@ -93,14 +93,15 @@ def _measure(arch, cfg, params, scheme: str, shards: int, *, batch: int,
         "occupancy_mean": occ_arr.mean(axis=0).tolist(),
         "occupancy_peak": occ_arr.max(axis=0).tolist(),
         "migrations": cluster.stats["migrations"],
-        "preemptions": stats["preemptions"],
-        "uniform_fast_ticks": stats["uniform_fast_ticks"],
-        "fused_mixed_ticks": stats["fused_mixed_ticks"],
-        "fused_write_ticks": stats["fused_write_ticks"],
-        "decode_steps": stats["decode_steps"],
         "root_mac_ok": cluster.deferred_check(),
         "latency": cluster.run().latency,
     }
+    # EVERY aggregated engine counter rides along — enumerating known
+    # keys here is how the uniform/fused counters once went missing
+    # from cluster rows, and how new ones (prefix cache) would again.
+    for k, v in stats.items():
+        row.setdefault(k, v)
+    return row
 
 
 def collect(schemes=tuple(SCHEMES), shard_counts=DEFAULT_SHARDS, *,

@@ -1,7 +1,10 @@
-"""CI gate: the sharded-serving bench JSON must show the fast paths ran.
+"""CI gate: bench JSONs must show the engine's fast paths actually ran.
 
-The decode hot path has three cheap routes that regressions tend to
-lose silently (everything still produces correct tokens, just slower):
+Two gated benchmarks, dispatched on the JSON's ``benchmark`` field:
+
+**sharded_serving** — the decode hot path has three cheap routes that
+regressions tend to lose silently (everything still produces correct
+tokens, just slower):
 
 * ``uniform_fast_ticks`` — single-key ticks (no registry, or every page
   resolving to one tenant-epoch bank row) dispatch the flat crypt/MAC
@@ -23,9 +26,18 @@ registry-less rows count every tick as uniform by construction, and
 the mixed row is the only one that exercises the mixed-key read AND
 write kernels together.
 
+**shared_prefix** — every row at ``hit_rate > 0`` must show the secure
+prefix cache at work: ``prefix_hit_pages > 0`` and
+``prefill_pages_skipped > 0`` (shared pages actually deleted prefill
+work), and ``tokens_match`` true (the cached engine stayed
+token-identical to the no-cache engine).  A row failing any of these
+means the cache silently stopped hitting — or worse, stopped being
+transparent.
+
 Usage::
 
     python benchmarks/check_fast_paths.py bench-sharded-serving.json
+    python benchmarks/check_fast_paths.py bench-shared-prefix.json
 """
 
 from __future__ import annotations
@@ -41,10 +53,7 @@ ROW_GATES = (
 )
 
 
-def check(path: str) -> int:
-    with open(path) as f:
-        data = json.load(f)
-    results = data.get("results", [])
+def check_decode_fast_paths(results: list) -> int:
     uniform = sum(r.get("uniform_fast_ticks", 0) for r in results)
     fused_mixed = sum(r.get("fused_mixed_ticks", 0) for r in results)
     fused_write = sum(r.get("fused_write_ticks", 0) for r in results)
@@ -66,10 +75,46 @@ def check(path: str) -> int:
                       f"measurement present but recorded zero {counter} — "
                       f"that decode route was silently lost")
                 ok = False
-    if not ok:
+    return 0 if ok else 1
+
+
+def check_shared_prefix(results: list) -> int:
+    hit_rows = [r for r in results if r.get("hit_rate", 0) > 0]
+    print(f"[fast-paths] shared-prefix: {len(hit_rows)} hit-rate>0 rows "
+          f"of {len(results)}")
+    if not hit_rows:
+        print("[fast-paths] FAIL: shared-prefix bench has no hit-rate>0 "
+              "rows to gate on")
         return 1
-    print("[fast-paths] ok")
-    return 0
+    ok = True
+    for r in results:
+        label = f"scheme={r.get('scheme')} hit={r.get('hit_rate')}"
+        if not r.get("tokens_match", False):
+            print(f"[fast-paths] FAIL: {label} diverged from the "
+                  f"no-cache engine — the prefix cache is not transparent")
+            ok = False
+        if r.get("hit_rate", 0) <= 0:
+            continue
+        for counter in ("prefix_hit_pages", "prefill_pages_skipped"):
+            if not r.get(counter, 0):
+                print(f"[fast-paths] FAIL: {label} recorded zero "
+                      f"{counter} — the prefix cache silently stopped "
+                      f"hitting")
+                ok = False
+    return 0 if ok else 1
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        data = json.load(f)
+    results = data.get("results", [])
+    if data.get("benchmark") == "shared_prefix":
+        rc = check_shared_prefix(results)
+    else:
+        rc = check_decode_fast_paths(results)
+    if rc == 0:
+        print("[fast-paths] ok")
+    return rc
 
 
 if __name__ == "__main__":

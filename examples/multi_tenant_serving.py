@@ -59,7 +59,7 @@ def main() -> None:
     rids = {}
     for tenant_id, n in zip(("alice", "bob", "carol"), (6, 9, 12)):
         prompt = list(map(int, rng.integers(1, cfg.vocab, n)))
-        rids[tenant_id] = eng.submit(prompt, max_new_tokens=8,
+        rids[tenant_id] = eng.submit(prompt=prompt, max_new_tokens=8,
                                      session=sessions[tenant_id])
 
     # Rotate alice's keys after a few ticks — live, mid-decode.
@@ -87,9 +87,9 @@ def main() -> None:
     # (same key epoch on both sides, so rejection comes from the MAC
     # gate: carol's pages carry carol's keys + (tenant, epoch) binding)
     eng2 = make_engine(arch, cfg, params, registry)
-    rc = eng2.submit(list(map(int, rng.integers(1, cfg.vocab, 6))),
+    rc = eng2.submit(prompt=list(map(int, rng.integers(1, cfg.vocab, 6))),
                      max_new_tokens=8, session=sessions["carol"])
-    rb = eng2.submit(list(map(int, rng.integers(1, cfg.vocab, 6))),
+    rb = eng2.submit(prompt=list(map(int, rng.integers(1, cfg.vocab, 6))),
                      max_new_tokens=8, session=sessions["bob"])
     eng2.step()
     slot_c = next(s for s in eng2.slots if s and s.req.rid == rc)

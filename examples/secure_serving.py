@@ -90,7 +90,7 @@ def main() -> None:
                               max_slots=3, page_tokens=4, pages_per_slot=6,
                               n_pages=10, keys=keys)
     rng = np.random.default_rng(7)
-    rids = [eng.submit(list(map(int, rng.integers(1, cfg.vocab, n))),
+    rids = [eng.submit(prompt=list(map(int, rng.integers(1, cfg.vocab, n))),
                        max_new_tokens=8) for n in (6, 9, 12)]
     t0 = time.perf_counter()
     done = eng.run()

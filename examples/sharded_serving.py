@@ -60,9 +60,9 @@ def main() -> None:
     long_a = list(map(int, rng.integers(1, cfg.vocab, 5)))
     short = list(map(int, rng.integers(1, cfg.vocab, 7)))
     long_b = list(map(int, rng.integers(1, cfg.vocab, 9)))
-    rids = [cluster.submit(long_a, max_new_tokens=20),
-            cluster.submit(short, max_new_tokens=2),
-            cluster.submit(long_b, max_new_tokens=20)]
+    rids = [cluster.submit(prompt=long_a, max_new_tokens=20),
+            cluster.submit(prompt=short, max_new_tokens=2),
+            cluster.submit(prompt=long_b, max_new_tokens=20)]
     done = cluster.run()
     stats = cluster.engine_stats
     for rid in rids:
@@ -79,8 +79,8 @@ def main() -> None:
     # --- cross-shard replay: byte-identical page swapped between shards --
     cl2 = ClusterEngine(arch, cfg, params, shards=2, scheme="seda",
                         max_slots=1, page_tokens=4, pages_per_slot=4)
-    cl2.submit(long_a, max_new_tokens=6)
-    cl2.submit(long_b, max_new_tokens=6)
+    cl2.submit(prompt=long_a, max_new_tokens=6)
+    cl2.submit(prompt=long_b, max_new_tokens=6)
     cl2.step()
     e0, e1 = cl2.engines
     s0 = next(s for s in e0.slots if s is not None)

@@ -202,7 +202,7 @@ def _serve_paged(arch, cfg, params, args) -> dict:
     for i in range(args.batch):
         prompt = list(map(int, rng.integers(1, cfg.vocab, args.prompt_len)))
         session = sessions[i % len(sessions)] if sessions else None
-        rids.append(eng.submit(prompt, max_new_tokens=args.gen_len,
+        rids.append(eng.submit(prompt=prompt, max_new_tokens=args.gen_len,
                                session=session))
     t0 = time.perf_counter()
     done = eng.run()

@@ -39,20 +39,23 @@ replay rejection — behaves identically.
 
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 from typing import Optional
 
 import jax
 
 from repro.core import secure_memory as sm
+from repro.serve import kv_pages as kvp
 from repro.serve.engine import (IntegrityError, RunResult,
-                                SecureServingEngine, latency_percentiles)
+                                SecureServingEngine, SubmitAPI,
+                                SubmitRequest, latency_percentiles)
 from repro.serve.sharded_pool import ShardedKVPool
 
 __all__ = ["ClusterEngine"]
 
 
-class ClusterEngine:
+class ClusterEngine(SubmitAPI):
     """N shard engines behind one ``submit()``/``run()`` plane.
 
     Single-tenant use::
@@ -60,7 +63,7 @@ class ClusterEngine:
         cluster = ClusterEngine(arch, cfg, params, shards=2,
                                 scheme="seda", max_slots=2,
                                 page_tokens=8, pages_per_slot=4)
-        rids = [cluster.submit(p, max_new_tokens=8) for p in prompts]
+        rids = [cluster.submit(prompt=p, max_new_tokens=8) for p in prompts]
         done = cluster.run()        # RunResult, same shape as Engine's
 
     Multi-tenant: pass ``registry=`` exactly as for the single engine;
@@ -120,13 +123,16 @@ class ClusterEngine:
 
     # -- submission / routing ------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: int = 16, *,
-               session=None) -> int:
+    def _submit(self, request: SubmitRequest) -> int:
         """Route one request to a shard; returns a cluster-wide rid."""
-        shard = self._route(session.index if session is not None else None)
+        tokens = [int(t) for t in request.prompt]
+        tenant_index = (request.session.index
+                        if request.session is not None else None)
+        shard = self._route(tenant_index,
+                            tokens if request.share_prefix else None)
         engine = self.engines[shard]
-        local_rid = engine.submit(prompt, max_new_tokens=max_new_tokens,
-                                  session=session)
+        local_rid = engine._submit(dataclasses.replace(request,
+                                                       prompt=tokens))
         rid = self._next_rid
         self._next_rid += 1
         self.requests[rid] = engine.requests[local_rid]
@@ -143,10 +149,27 @@ class ClusterEngine:
                    and s.tenant.index == tenant_index
                    for s in engine.slots)
 
-    def _route(self, tenant_index: Optional[int]) -> int:
-        """Least-loaded shard, tenant affinity breaking near-ties."""
+    def _route(self, tenant_index: Optional[int],
+               tokens: Optional[list] = None) -> int:
+        """Prefix-holding shards first, then least-loaded.
+
+        Prefix caches are shard-local (cache pages are sealed into one
+        shard's pool and shard-bound by the RePA binding), so a request
+        whose prompt prefix is cached anywhere goes to the shard
+        covering the most tokens — skipping prefill beats starting on
+        an idler shard.  Within the candidate set: least-loaded, with
+        tenant affinity breaking near-ties."""
+        cover = [0] * len(self.engines)
+        if tenant_index is not None and tokens is not None and \
+                len(tokens) > 1:
+            cover = [e.prefix_cache.match_tokens(tenant_index, tokens[:-1])
+                     if e.prefix_cache is not None else 0
+                     for e in self.engines]
+        top = max(cover)
         best = None
         for s, engine in enumerate(self.engines):
+            if cover[s] < top:
+                continue
             score = float(self._load(engine))
             if tenant_index is not None and \
                     self._has_tenant(engine, tenant_index):
@@ -163,7 +186,9 @@ class ClusterEngine:
     def _requeue_orphans(self) -> None:
         while self._orphans:
             req = self._orphans.popleft()
-            shard = self._route(req.tenant_idx)
+            shard = self._route(
+                req.tenant_idx,
+                req.prompt + req.generated if req.share_prefix else None)
             engine = self.engines[shard]
             if req.tenant_idx is not None:
                 if not engine._tenant_active(req.tenant_idx):
@@ -337,6 +362,13 @@ class ClusterEngine:
             epochs = np.zeros((p,), np.uint32)
             for j, e in enumerate(slot.page_epochs):
                 epochs[j] = e
+                if e & kvp.PREFIX_ROLE:
+                    # Shared prefix page: read under the tenant's
+                    # epoch-independent cache binding.  The copy lands
+                    # at the destination as a PRIVATE page (the cache
+                    # and its refcounts are shard-local).
+                    rows[j] = self.registry.cache_row(tenant.index)
+                    continue
                 try:
                     rows[j] = self.registry.key_row(tenant.index, e)
                 except KeyError as exc:
@@ -379,10 +411,16 @@ class ClusterEngine:
             ed.onchip[j] = ed.onchip[j].at[:, dst_slot].set(col)
         es.slots[slot_idx] = None
         es.page_table.clear(slot_idx)
-        es.free_pages.extend(slot.pages)
+        # Shared prefix pages stay behind with the source shard's cache
+        # (only their pin is dropped); the private tail is freed.
+        if slot.shared_n:
+            es.prefix_cache.release(slot.shared_entries)
+        es.free_pages.extend(slot.pages[slot.shared_n:])
         ed._admit_seq += 1
         slot.pages = dst_pages
         slot.page_epochs = page_epochs
+        slot.shared_n = 0
+        slot.shared_entries = []
         slot.admit_seq = ed._admit_seq
         ed.slots[dst_slot] = slot
         ed.page_table.install(dst_slot, slot)

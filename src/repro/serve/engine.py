@@ -67,6 +67,7 @@ is plain Python; everything that touches tensor data stays inside jit.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Optional
 
@@ -83,7 +84,7 @@ from repro.serve import kv_pages as kvp
 from repro.serve.serve_step import greedy_sample
 
 __all__ = ["IntegrityError", "Request", "RunResult", "SecureServingEngine",
-           "latency_percentiles"]
+           "SubmitAPI", "SubmitRequest", "latency_percentiles"]
 
 
 class IntegrityError(RuntimeError):
@@ -102,10 +103,76 @@ class Request:
     submit_tick: int = 0
     first_tick: Optional[int] = None    # tick the first token appeared
     done_tick: Optional[int] = None
+    share_prefix: bool = True       # may use / populate the prefix cache
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
+
+
+@dataclasses.dataclass
+class SubmitRequest:
+    """The admission argument object of the unified ``submit()``.
+
+    One dataclass consumed by both :class:`SecureServingEngine` and
+    :class:`repro.serve.cluster.ClusterEngine` (via :class:`SubmitAPI`),
+    so the two surfaces cannot drift apart again.  ``share_prefix=False``
+    opts a request out of the shared-prefix cache in both directions:
+    it neither reads cached pages nor seals its own prefix in.
+    """
+
+    prompt: list
+    max_new_tokens: int = 16
+    session: Optional[object] = None    # tenancy SessionHandle | None
+    share_prefix: bool = True
+
+
+class SubmitAPI:
+    """The one keyword-only ``submit()`` shared by engine and cluster.
+
+    Subclasses implement ``_submit(SubmitRequest) -> rid``; this mixin
+    owns argument handling, so ``Engine.submit`` and
+    ``ClusterEngine.submit`` are the same surface by construction.
+    Legacy positional calls (``submit(prompt, max_new_tokens)``) keep
+    working through a thin :class:`DeprecationWarning` shim.
+    """
+
+    def _submit(self, request: SubmitRequest) -> int:
+        raise NotImplementedError
+
+    def submit(self, request=None, /, *legacy, **kw) -> int:
+        """Queue one request; returns its rid.
+
+        Preferred forms::
+
+            eng.submit(SubmitRequest(prompt=toks, max_new_tokens=8))
+            eng.submit(prompt=toks, max_new_tokens=8, session=sess)
+
+        The legacy positional form ``submit(toks, 8)`` still works but
+        warns.
+        """
+        if isinstance(request, SubmitRequest):
+            if legacy or kw:
+                raise TypeError("submit(SubmitRequest) takes no other "
+                                "arguments")
+            return self._submit(request)
+        if request is not None:
+            warnings.warn(
+                "positional submit(prompt, ...) is deprecated; pass a "
+                "SubmitRequest or keyword arguments",
+                DeprecationWarning, stacklevel=2)
+            if "prompt" in kw:
+                raise TypeError("submit() got prompt twice")
+            kw["prompt"] = request
+            if legacy:
+                if len(legacy) > 1 or "max_new_tokens" in kw:
+                    raise TypeError("submit() takes at most prompt and "
+                                    "max_new_tokens positionally")
+                kw["max_new_tokens"] = legacy[0]
+        elif legacy:
+            raise TypeError("submit() got positional arguments but no "
+                            "prompt")
+        return self._submit(SubmitRequest(**kw))
 
 
 class RunResult(dict):
@@ -152,6 +219,14 @@ class _Slot:
     admit_seq: int
     tenant: object = None           # tenancy.registry.Tenant | None
     page_epochs: list = dataclasses.field(default_factory=list)
+    # Shared-prefix state: the first ``shared_n`` entries of ``pages``
+    # are read-only prefix-cache pages (epoch word PREFIX_ROLE), pinned
+    # via ``shared_entries``; ``replay`` holds the prompt tokens the
+    # skipped prefill still owes the decode loop (teacher-forced — the
+    # sampled token of the LAST replay step is the first real output).
+    shared_n: int = 0
+    shared_entries: list = dataclasses.field(default_factory=list)
+    replay: deque = dataclasses.field(default_factory=deque)
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -166,7 +241,7 @@ def _bucket_len(n: int, cap: int) -> int:
     return min(b, cap)
 
 
-class SecureServingEngine:
+class SecureServingEngine(SubmitAPI):
     """Batched secure decoding with paged, MAC-protected KV residency.
 
     Typical single-tenant use::
@@ -174,7 +249,8 @@ class SecureServingEngine:
         eng = SecureServingEngine(arch, cfg, params, scheme="seda",
                                   max_slots=4, page_tokens=8,
                                   pages_per_slot=4, n_pages=12)
-        rids = [eng.submit(prompt, max_new_tokens=8) for prompt in prompts]
+        rids = [eng.submit(prompt=prompt, max_new_tokens=8)
+                for prompt in prompts]
         done = eng.run()            # RunResult: {rid: Request} + .latency
 
     Multi-tenant use::
@@ -183,9 +259,20 @@ class SecureServingEngine:
         reg.register("alice", weight=2.0, page_quota=8)
         eng = SecureServingEngine(arch, cfg, params, registry=reg, ...)
         sess = reg.open_session("alice")
-        eng.submit(prompt, max_new_tokens=8, session=sess)
+        eng.submit(prompt=prompt, max_new_tokens=8, session=sess)
         eng.rotate("alice")         # live key rotation
         done = eng.run()
+
+    With ``prefix_cache=True`` (registry required) the engine keeps a
+    content-addressed :class:`repro.serve.kv_pages.PrefixCache`: a
+    submitted prompt whose leading pages were already sealed by an
+    earlier same-tenant request skips their prefill entirely — the
+    shared pages are installed read-only in the slot directory, the
+    remaining prompt tokens are teacher-forced through the normal
+    batched decode (token-identical to a full prefill), and the first
+    dirty write to a shared page triggers a copy-on-write reseal into a
+    private page.  Cross-tenant sharing happens only through the
+    explicit :meth:`share_prefix` reseal.
     """
 
     def __init__(self, arch, cfg, params, *, scheme: str = "seda",
@@ -198,7 +285,9 @@ class SecureServingEngine:
                  registry=None, rotate_every: int = 0,
                  prefill_buckets: Optional[bool] = None,
                  shard_id: int = 0, n_shards: int = 1,
-                 device=None, preempt_hook=None):
+                 device=None, preempt_hook=None,
+                 prefix_cache: bool = False,
+                 prefix_cache_pages: Optional[int] = None):
         if arch.kind != "lm":
             raise ValueError("the paged serving engine supports decoder-only "
                              "LMs (enc-dec serving stays on serve_step)")
@@ -207,6 +296,9 @@ class SecureServingEngine:
         if rotate_every and registry is None:
             raise ValueError("rotate_every needs a tenant registry — there "
                              "is no key hierarchy to rotate without one")
+        if prefix_cache and registry is None:
+            raise ValueError("prefix_cache needs a tenant registry — cache "
+                             "pages are sealed under per-tenant cache keys")
         self.arch, self.cfg = arch, cfg
         self.scheme = scheme
         self.max_slots = max_slots
@@ -247,6 +339,17 @@ class SecureServingEngine:
             cache_tree, scheme=scheme, page_tokens=page_tokens,
             n_pages=n_pages, max_slots=max_slots, max_len=self.max_len,
             use_kernel=use_kernel, shard=shard_id, n_shards=n_shards)
+        self.page_io = kvp.PageIO(self.spec, self.keys)
+        self.prefix_cache = None
+        if prefix_cache:
+            if self.onchip_idx:
+                raise ValueError(
+                    "prefix_cache is unavailable for archs with recurrent "
+                    "on-chip state (Mamba SSM/conv): the skipped prefill's "
+                    "state cannot be reconstructed from cached KV pages")
+            cap = (prefix_cache_pages if prefix_cache_pages is not None
+                   else max(1, n_pages // 4))
+            self.prefix_cache = kvp.PrefixCache(page_tokens, cap)
         self.policy = (multilevel.SEDA_DEFAULT
                        if SCHEMES[scheme].verify == "layer"
                        else multilevel.SGX_LIKE if SCHEMES[scheme].emulate_tree
@@ -289,7 +392,10 @@ class SecureServingEngine:
                       "prefill_compiles": 0, "reseals": 0,
                       "uniform_fast_ticks": 0, "fused_mixed_ticks": 0,
                       "fused_write_ticks": 0,
-                      "decode_bucket_compiles": 0, "decode_page_reads": 0}
+                      "decode_bucket_compiles": 0, "decode_page_reads": 0,
+                      "prefix_hit_pages": 0, "prefix_cow_pages": 0,
+                      "prefix_inserted_pages": 0, "prefix_shared_pages": 0,
+                      "prefill_pages_skipped": 0}
 
         # Two-level page table: the slot directory (level 1) feeds pow2
         # page-count-bucketed decode windows (level 2); the decode step
@@ -299,6 +405,7 @@ class SecureServingEngine:
         self._prefill_fn = jax.jit(self._build_prefill_fn())
         self._writers: dict = {}
         self._resealers: dict = {}
+        self._copiers: dict = {}
         self._page_readers: dict = {}
         self._page_writers: dict = {}
         if registry is not None:
@@ -356,20 +463,19 @@ class SecureServingEngine:
         return self._decode_fns[key]
 
     def _build_decode_fn(self, bucket: int, uniform: bool = False):
-        cfg, spec, keys = self.cfg, self.spec, self.keys
+        cfg, io = self.cfg, self.page_io
         tenant_mode = self.registry is not None
 
         def core(params, pool, onchip, page_table, lengths, active, tokens,
                  epoch, read_ctx, write_ctx):
-            dense, ok = kvp.read_pages(pool, spec, keys, page_table, lengths,
-                                       read_ctx, uniform)
+            dense, ok = io.read(pool, page_table, lengths, read_ctx, uniform)
             caches = self._merge_cache_leaves(dense, onchip, lengths)
             logits, new_caches = lm_mod.lm_decode(cfg, params, tokens, caches)
             tok = greedy_sample(logits)                    # (S, 1)
             new_leaves = jax.tree_util.tree_leaves(new_caches)
             vn = vn_mod.kv_page_vn(epoch)
-            new_pool = kvp.write_dirty(
-                pool, spec, keys, page_table,
+            new_pool = io.write_dirty(
+                pool, page_table,
                 [new_leaves[i] for i in self.paged_idx], lengths, active, vn,
                 write_ctx, uniform)
             new_onchip = []
@@ -478,9 +584,10 @@ class SecureServingEngine:
 
     # -- public API ---------------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: int = 16, *,
-               session=None) -> int:
-        prompt = [int(t) for t in prompt]
+    def _submit(self, request: SubmitRequest) -> int:
+        prompt = [int(t) for t in request.prompt]
+        max_new_tokens = request.max_new_tokens
+        session = request.session
         if not prompt or max_new_tokens < 1:
             raise ValueError("need a non-empty prompt and max_new_tokens>=1")
         total = len(prompt) + max_new_tokens
@@ -507,7 +614,8 @@ class SecureServingEngine:
                              "tenant registry")
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, prompt, max_new_tokens, submit_tick=self.tick)
+        req = Request(rid, prompt, max_new_tokens, submit_tick=self.tick,
+                      share_prefix=bool(request.share_prefix))
         self.requests[rid] = req
         if tenant is not None:
             req.tenant_idx = tenant.index
@@ -560,6 +668,67 @@ class SecureServingEngine:
             raise ValueError("rotate() needs a tenant registry")
         return self.registry.rotate(tenant_id)
 
+    def share_prefix(self, tokens, *, from_session, to_session) -> int:
+        """Explicitly reseal one tenant's cached prefix for another.
+
+        The ONLY cross-tenant sharing path: a plain cache match never
+        crosses tenants (entries are keyed and sealed per tenant, so a
+        borrowed page id simply fails its MAC gate).  Here the operator
+        presents valid sessions for BOTH tenants; the source tenant's
+        cached chain covering ``tokens`` is decrypt-verified under the
+        source cache binding and re-sealed page-by-page under the
+        destination tenant's cache binding, then indexed on the
+        destination's own chain.  Returns the number of pages shared.
+        """
+        if self.prefix_cache is None:
+            raise ValueError("share_prefix() needs prefix_cache=True")
+        src = self.registry.validate(from_session)
+        dst = self.registry.validate(to_session)
+        tokens = [int(t) for t in tokens]
+        pc = self.prefix_cache
+        src_chain = pc.match(src.index, tokens)
+        if not src_chain:
+            return 0
+        covered = sum(e.n_tokens for e in src_chain)
+        matched_dst, missing = pc.missing(dst.index, tokens[:covered])
+        if not missing:
+            return 0            # already cached for dst (or partial leaf)
+        m = len(matched_dst)    # chunk-aligned: dst already holds m chunks
+        src_entries = src_chain[m:]
+        short = pc.free_capacity()
+        if short < len(missing):
+            self.free_pages.extend(pc.reclaim(len(missing) - short))
+        k = min(len(missing), pc.free_capacity(), len(self.free_pages))
+        if k == 0:
+            return 0
+        missing, src_entries = missing[:k], src_entries[:k]
+        dst_pages = [self.free_pages.pop() for _ in range(k)]
+        n = max(self.pages_per_slot, k)
+        src_ids = np.full((n,), self.spec.scratch_page, np.int32)
+        dst_ids = np.full((n,), self.spec.scratch_page, np.int32)
+        src_ids[:k] = [e.page_id for e in src_entries]
+        dst_ids[:k] = dst_pages
+        src_rows = np.full((n,), self.registry.cache_row(src.index), np.int32)
+        dst_rows = np.full((n,), self.registry.cache_row(dst.index), np.int32)
+        role = np.full((n,), kvp.PREFIX_ROLE, np.uint32)
+        new_pool, ok = self._copier(n)(
+            self.pool, self._bank(), jnp.asarray(src_ids),
+            jnp.asarray(dst_ids), jnp.asarray(src_rows), jnp.asarray(role),
+            jnp.full((n,), src.index, jnp.uint32), jnp.asarray(dst_rows),
+            jnp.asarray(role), jnp.full((n,), dst.index, jnp.uint32),
+            self._next_epoch())
+        if not bool(ok):
+            self.free_pages.extend(dst_pages)
+            raise IntegrityError(
+                f"reseal-on-share {src.tenant_id!r} -> {dst.tenant_id!r} "
+                f"failed source verification")
+        self.pool = new_pool
+        parent = matched_dst[-1] if matched_dst else None
+        for (key, n_tok), page_id in zip(missing, dst_pages):
+            parent = pc.insert(key, parent, page_id, n_tok)
+        self.stats["prefix_shared_pages"] += k
+        return k
+
     def _pre_rotation(self, tenant, new_epoch: int) -> None:
         """Eagerly reseal pages about to fall out of the key window.
 
@@ -573,8 +742,10 @@ class SecureServingEngine:
         for i, slot in enumerate(self.slots):
             if slot is None or slot.tenant is not tenant:
                 continue
+            # Cache-bound pages (epoch word PREFIX_ROLE) live outside
+            # the epoch window: their keys never rotate.
             stale = [j for j, e in enumerate(slot.page_epochs)
-                     if e < oldest_after]
+                     if not (e & kvp.PREFIX_ROLE) and e < oldest_after]
             if not stale:
                 continue
             self._reseal_slot(i, stale, cur)
@@ -640,7 +811,8 @@ class SecureServingEngine:
         oldest_retained = new_epoch - self.registry.retain + 1
         for i, slot in enumerate(self.slots):
             if (slot is not None and slot.tenant is tenant
-                    and any(e < oldest_retained for e in slot.page_epochs)):
+                    and any(not (e & kvp.PREFIX_ROLE) and e < oldest_retained
+                            for e in slot.page_epochs)):
                 self._preempt(i)
         self.stats["rotations"] += 1
 
@@ -675,6 +847,8 @@ class SecureServingEngine:
             self.rotate(self.registry.by_index(idx).tenant_id)
         self._admit(finished)
         self._ensure_growth()
+        if self.prefix_cache is not None:
+            self._ensure_cow()
         return [i for i, s in enumerate(self.slots) if s is not None]
 
     def _tick_end(self) -> None:
@@ -830,6 +1004,14 @@ class SecureServingEngine:
 
     def _admit_one(self, req: Request, tenant, finished: list) -> None:
         seq = req.prompt + req.generated
+        if (self.prefix_cache is not None and tenant is not None
+                and req.share_prefix and len(seq) > 1):
+            # Match over seq[:-1] so at least one token is left to feed
+            # the decode loop (the hit path generates via decode only).
+            hit = self.prefix_cache.match(tenant.index, seq[:-1])
+            if hit:
+                self._admit_hit(req, tenant, hit, seq, finished)
+                return
         n_alloc = self._admission_pages(req)
         slot_idx = self.slots.index(None)
         pages = [self.free_pages.pop() for _ in range(n_alloc)]
@@ -869,7 +1051,111 @@ class SecureServingEngine:
         req.generated.append(int(tok[0, 0]))
         if req.first_tick is None:
             req.first_tick = self.tick
+        if (self.prefix_cache is not None and tenant is not None
+                and req.share_prefix):
+            self._prefix_insert(tenant, seq, slot)
         self._maybe_finish(slot_idx, finished)
+
+    def _admit_hit(self, req: Request, tenant, hit: list, seq: list,
+                   finished: list) -> None:
+        """Admit a request whose leading pages are already cached.
+
+        No prefill runs.  The matched chain's pages are installed
+        read-only at the front of the slot (``shared_n``, epoch word
+        :data:`~repro.serve.kv_pages.PREFIX_ROLE`), the slot length is
+        set to the covered token count, and the rest of the prompt is
+        queued on ``slot.replay``: each tick teacher-forces the next
+        prompt token through the normal batched decode (its KV lands in
+        private pages), and the sampled token of the LAST replay step
+        is the first real output — token-identical to a full prefill
+        because causal KV at position p depends only on tokens 0..p.
+        """
+        covered = sum(e.n_tokens for e in hit)
+        n_shared = len(hit)
+        slot_idx = self.slots.index(None)
+        self.prefix_cache.acquire(hit)
+        slot = _Slot(req, length=covered,
+                     pages=[e.page_id for e in hit],
+                     admit_seq=self._admit_seq + 1, tenant=tenant,
+                     page_epochs=[kvp.PREFIX_ROLE] * n_shared,
+                     shared_n=n_shared, shared_entries=list(hit),
+                     replay=deque(seq[covered:]))
+        self._admit_seq += 1
+        self.stats["admitted"] += 1
+        self.stats["prefix_hit_pages"] += n_shared
+        self.stats["prefill_pages_skipped"] += n_shared
+        self.slots[slot_idx] = slot
+        self.page_table.install(slot_idx, slot)
+        req.state = "running"
+
+    def _prefix_insert(self, tenant, seq: list, slot: _Slot) -> None:
+        """Seed the cache from a freshly-prefilled slot (full miss only).
+
+        Copy-reseals the slot's leading chunk pages into cache-owned
+        free pages under the tenant's cache binding (session epoch word
+        → ``PREFIX_ROLE``); the slot keeps decoding on its private
+        pages.  Gated on ``ok`` BEFORE the pool commits, so tampered
+        session pages cannot be laundered into valid cache MACs.
+        """
+        pc = self.prefix_cache
+        matched, missing = pc.missing(tenant.index, seq)
+        if matched or not missing:
+            return              # partial hits never extend the chain here
+        short = pc.free_capacity()
+        if short < len(missing):
+            self.free_pages.extend(pc.reclaim(len(missing) - short))
+        k = min(len(missing), pc.free_capacity(), len(self.free_pages))
+        if k == 0:
+            return
+        missing = missing[:k]
+        dst_pages = [self.free_pages.pop() for _ in range(k)]
+        n = self.pages_per_slot
+        src_ids = np.full((n,), self.spec.scratch_page, np.int32)
+        dst_ids = np.full((n,), self.spec.scratch_page, np.int32)
+        src_ids[:k] = slot.pages[:k]
+        dst_ids[:k] = dst_pages
+        epoch = tenant.current_epoch
+        src_rows = np.full((n,), self.registry.key_row(tenant.index, epoch),
+                           np.int32)
+        src_epochs = np.full((n,), epoch, np.uint32)
+        dst_rows = np.full((n,), self.registry.cache_row(tenant.index),
+                           np.int32)
+        dst_epochs = np.full((n,), kvp.PREFIX_ROLE, np.uint32)
+        owners = np.full((n,), tenant.index, np.uint32)
+        new_pool, ok = self._copier(n)(
+            self.pool, self._bank(), jnp.asarray(src_ids),
+            jnp.asarray(dst_ids), jnp.asarray(src_rows),
+            jnp.asarray(src_epochs), jnp.asarray(owners),
+            jnp.asarray(dst_rows), jnp.asarray(dst_epochs),
+            jnp.asarray(owners), self._next_epoch())
+        if not bool(ok):
+            self.free_pages.extend(dst_pages)
+            raise IntegrityError(
+                f"prefix-cache insert for tenant {tenant.tenant_id!r} "
+                f"failed source verification")
+        self.pool = new_pool
+        parent = None
+        for (key, n_tok), page_id in zip(missing, dst_pages):
+            parent = pc.insert(key, parent, page_id, n_tok)
+        self.stats["prefix_inserted_pages"] += k
+
+    def _copier(self, n: int):
+        """Jitted page-copy reseal (cache insert / CoW / share), padded
+        to ``n`` lanes with scratch pages."""
+        if n not in self._copiers:
+            io = self.page_io
+
+            def copy(pool, bank, src_ids, dst_ids, src_rows, src_epochs,
+                     src_owners, dst_rows, dst_epochs, dst_owners, epoch):
+                src_ctx = kvp.PageKeyCtx.make(bank, src_rows, src_owners,
+                                              src_epochs)
+                dst_ctx = kvp.PageKeyCtx.make(bank, dst_rows, dst_owners,
+                                              dst_epochs)
+                vn = vn_mod.kv_page_vn(epoch)
+                return io.copy(pool, src_ids, dst_ids, vn, src_ctx, dst_ctx)
+
+            self._copiers[n] = jax.jit(copy)
+        return self._copiers[n]
 
     # -- growth / eviction ---------------------------------------------------
 
@@ -896,6 +1182,67 @@ class SecureServingEngine:
                     continue
                 self._preempt(self._pick_victim(tenant))
 
+    def _ensure_cow(self) -> None:
+        """Copy-on-write any shared page this tick's decode will dirty.
+
+        Runs after growth, before dispatch: the dirty page is
+        ``length // page_tokens``; when it is still inside the shared
+        prefix it is privatized first, so decode never writes a
+        refcounted cache page.  By construction only the LAST shared
+        page can ever be partial, so at most one CoW fires per slot
+        over its whole life.
+        """
+        for i, slot in enumerate(self.slots):
+            if slot is None or not slot.shared_n:
+                continue
+            if slot.length // self.page_tokens < slot.shared_n:
+                self._cow_page(i)
+
+    def _cow_page(self, idx: int) -> None:
+        """Privatize one slot's deepest shared page before it is dirtied."""
+        slot = self.slots[idx]
+        tenant = slot.tenant
+        pos = slot.shared_n - 1     # only the deepest shared page is partial
+        while not self.free_pages:
+            freed = self.prefix_cache.reclaim(1)
+            if freed:
+                self.free_pages.extend(freed)
+                break
+            self._preempt(self._pick_victim(tenant))
+            if self.slots[idx] is None:
+                return              # the CoW slot itself was the victim
+        dst = self.free_pages.pop()
+        n = self.pages_per_slot
+        src_ids = np.full((n,), self.spec.scratch_page, np.int32)
+        dst_ids = np.full((n,), self.spec.scratch_page, np.int32)
+        src_ids[0] = slot.pages[pos]
+        dst_ids[0] = dst
+        epoch = tenant.current_epoch
+        src_rows = np.full((n,), self.registry.cache_row(tenant.index),
+                           np.int32)
+        src_epochs = np.full((n,), kvp.PREFIX_ROLE, np.uint32)
+        dst_rows = np.full((n,), self.registry.key_row(tenant.index, epoch),
+                           np.int32)
+        dst_epochs = np.full((n,), epoch, np.uint32)
+        owners = np.full((n,), tenant.index, np.uint32)
+        new_pool, ok = self._copier(n)(
+            self.pool, self._bank(), jnp.asarray(src_ids),
+            jnp.asarray(dst_ids), jnp.asarray(src_rows),
+            jnp.asarray(src_epochs), jnp.asarray(owners),
+            jnp.asarray(dst_rows), jnp.asarray(dst_epochs),
+            jnp.asarray(owners), self._next_epoch())
+        if not bool(ok):
+            self.free_pages.append(dst)
+            raise IntegrityError(
+                f"copy-on-write of slot {idx} shared page {pos} failed "
+                f"verification (tenant {tenant.tenant_id!r})")
+        self.pool = new_pool
+        slot.pages[pos] = dst
+        slot.page_epochs[pos] = epoch
+        slot.shared_n -= 1
+        self.prefix_cache.release([slot.shared_entries.pop()])
+        self.stats["prefix_cow_pages"] += 1
+
     def _pick_victim(self, tenant=None) -> int:
         """Youngest running slot (LIFO preemption, vLLM-style) — scoped
         to ``tenant``'s own slots in multi-tenant mode, so one tenant's
@@ -905,8 +1252,21 @@ class SecureServingEngine:
                       and (tenant is None or s.tenant is tenant)]
         return max(candidates, key=lambda i: self.slots[i].admit_seq)
 
+    def _unpin_shared(self, slot: _Slot) -> None:
+        """Drop a dying slot's pin on its shared prefix pages.
+
+        Shared pages belong to the cache, not the slot — only the
+        private tail returns to the free list."""
+        if slot.shared_n:
+            self.prefix_cache.release(slot.shared_entries)
+            del slot.pages[: slot.shared_n]
+            del slot.page_epochs[: slot.shared_n]
+            slot.shared_n = 0
+            slot.shared_entries = []
+
     def _preempt(self, idx: int) -> None:
         slot = self.slots[idx]
+        self._unpin_shared(slot)
         self.free_pages.extend(slot.pages)
         self.slots[idx] = None
         self.page_table.clear(idx)
@@ -922,6 +1282,7 @@ class SecureServingEngine:
 
     def _release(self, idx: int) -> None:
         slot = self.slots[idx]
+        self._unpin_shared(slot)
         self.free_pages.extend(slot.pages)
         self.slots[idx] = None
         self.page_table.clear(idx)
@@ -1003,6 +1364,12 @@ class SecureServingEngine:
                                                    tenant.current_epoch)
             for j, epoch in enumerate(slot.page_epochs[:p]):
                 key_epochs[i, j] = epoch
+                if epoch & kvp.PREFIX_ROLE:
+                    # Shared prefix page: sealed under the tenant's
+                    # epoch-independent cache binding, not a session
+                    # epoch row.
+                    key_idx[i, j] = self.registry.cache_row(tenant.index)
+                    continue
                 try:
                     key_idx[i, j] = self.registry.key_row(tenant.index,
                                                           epoch)
@@ -1043,7 +1410,10 @@ class SecureServingEngine:
             slot = self.slots[i]
             lengths[i] = slot.length
             active[i] = True
-            tokens[i, 0] = slot.req.generated[-1]
+            # Replay (shared-prefix hit) teacher-forces the prompt
+            # suffix the skipped prefill still owes the KV cache.
+            tokens[i, 0] = (slot.replay[0] if slot.replay
+                            else slot.req.generated[-1])
         args = [self.params, self.pool, self.onchip, jnp.asarray(page_table),
                 jnp.asarray(lengths), jnp.asarray(active),
                 jnp.asarray(tokens), self._next_epoch()]
@@ -1096,7 +1466,15 @@ class SecureServingEngine:
                 if dirty < len(slot.page_epochs):
                     slot.page_epochs[dirty] = slot.tenant.current_epoch
             slot.length += 1
+            if slot.replay:
+                slot.replay.popleft()
+                if slot.replay:
+                    continue        # mid-replay: the sample is discarded
+                # The LAST replay step's sample is the first real output
+                # (exactly what a full prefill would have returned).
             slot.req.generated.append(int(toks[i, 0]))
+            if slot.req.first_tick is None:
+                slot.req.first_tick = self.tick
             self._maybe_finish(i, finished)
 
     def _deferred_check(self) -> None:

@@ -84,11 +84,30 @@ the unsharded layout.  :func:`reseal_pages` (decrypt old keys →
 re-encrypt new, one fused crossing) and :func:`migrate_pages` (reseal
 across pools/shards) are the primitives live rotation and secure
 cross-shard migration build on.
+
+**One IO surface.**  Every boundary crossing is a method of
+:class:`PageIO`, a facade bound to one ``(spec, keys)`` pair — the
+prefix cache, the engine and the cluster all go through it.  The
+module-level ``read_pages``/``write_pages``/... functions are thin
+delegating wrappers kept for existing callers; both spellings are
+bit-identical.
+
+**Shared-prefix pages.**  :class:`PrefixCache` is the host-side
+content-addressed index over pages sealed under a tenant's dedicated
+*cache binding*: epoch word :data:`PREFIX_ROLE` (fmap bit 27) selects
+the tenant's epoch-independent cache keys instead of a session epoch,
+so a prefix sealed once is verify-read by many sessions — VN-stable,
+no re-MAC on hit — and survives ``rotate()``.  Divergence is
+copy-on-write: the engine reseals the first dirty shared page into a
+private page under the session binding (see
+:mod:`repro.serve.engine`).
 """
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+import dataclasses
+import hashlib
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -103,6 +122,10 @@ __all__ = [
     "PageSpec",
     "PagedKVPool",
     "PageKeyCtx",
+    "PageIO",
+    "PrefixCache",
+    "PrefixCacheEntry",
+    "PREFIX_ROLE",
     "TwoLevelPageTable",
     "page_count_bucket",
     "PAGED_FIELDS",
@@ -120,9 +143,17 @@ __all__ = [
     "deferred_pool_check",
 ]
 
-# fmap-word bit budget: leaf idx (0-7) | tenant (8-15) | epoch (16-27)
-# | shard (28-31).  The shard field caps a sharded pool's fan-out.
+# fmap-word bit budget: leaf idx (0-7) | tenant (8-15) | epoch word
+# (16-27) | shard (28-31).  The shard field caps a sharded pool's
+# fan-out.  The epoch word spends its top bit (fmap bit 27) as the
+# prefix-cache ROLE: a page sealed into the shared-prefix cache
+# carries epoch word PREFIX_ROLE instead of a session epoch, selecting
+# the tenant's epoch-independent cache keys — session epochs occupy
+# the remaining 11 bits (fmap 16-26).  The crypt/MAC plumbing below is
+# role-agnostic: the role bit rides inside the epoch word through
+# _tenant_words / _block_binding unchanged.
 MAX_SHARDS = 16
+PREFIX_ROLE = 0x800          # bit 11 of the epoch word -> fmap bit 27
 
 # Cache NamedTuple fields whose leaves have a (steps, B, max_len, ...)
 # sequence layout and cross the untrusted boundary.  Everything else
@@ -719,186 +750,6 @@ def _dense_to_pages(spec: PageSpec, leaf: LeafPageSpec,
     return flat.reshape(n, leaf.page_bytes)
 
 
-# ---------------------------------------------------------------------------
-# The three boundary crossings: read, bulk write, dirty write.
-# ---------------------------------------------------------------------------
-
-
-def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
-               lengths: jax.Array, ctx: PageKeyCtx | None = None,
-               uniform: bool = False):
-    """Gather + decrypt + verify the paged leaves for a batched decode.
-
-    Args:
-      page_table: (max_slots, P) int32; -1 = unallocated.  P may be the
-        full ``pages_per_slot`` or a smaller pow2 page-count bucket
-        (see :class:`TwoLevelPageTable`) — every shape below follows
-        the table, so gather/crypt/MAC work scales with the bucket's
-        page window, not with pool capacity.  The window must cover
-        every valid token (``P * page_tokens > max(lengths)``).
-      lengths: (max_slots,) int32 valid tokens per slot.
-      ctx: optional per-page tenant keys (N = max_slots * P entries,
-        row-major over the page table).
-      uniform: host-side promise that every ctx entry selects one bank
-        row — dispatches the flat single-key route with unchanged
-        per-page bindings.  Mixed-row ctxs keep the fused kernel too,
-        via its per-page round-key gather (:func:`_fused_read`).
-
-    Returns ``(dense_leaves, ok)`` — one dense (steps, S,
-    P*page_tokens, *rest) array per paged leaf, and the AND of every
-    gated MAC check over the *touched* pages (pages holding positions
-    < length).
-    """
-    cfg = spec.cfg
-    s, p = page_table.shape
-    ptab = jnp.where(page_table < 0, spec.scratch_page, page_table)
-    flat_ids = ptab.reshape(-1)
-    vns = pool.page_vns[flat_ids]
-    page_start = (jnp.arange(p, dtype=jnp.int32) * spec.page_tokens)[None, :]
-    touched = page_start < lengths[:, None]            # (S, P)
-
-    ok = jnp.asarray(True)
-    agg = jnp.zeros((s, p, mac.MAC_BYTES), jnp.uint8)
-    dense = []
-    for li, leaf in enumerate(spec.leaves):
-        ct = pool.cts[li][flat_ids].reshape(s, p, leaf.page_bytes)
-        need_macs = cfg.verify != "none"
-        if need_macs and _kernel_read_ok(spec):
-            pt, macs = _fused_read(spec, leaf, ct.reshape(-1, leaf.page_bytes),
-                                   flat_ids, vns, keys, ctx, uniform)
-            pt = pt.reshape(s, p, leaf.page_bytes)
-            macs = macs.reshape(s, p, leaf.n_blocks, mac.MAC_BYTES)
-        else:
-            pt = _crypt(spec, leaf, ct.reshape(-1, leaf.page_bytes),
-                        flat_ids, vns, keys, ctx,
-                        uniform).reshape(s, p, leaf.page_bytes)
-            macs = None
-            if need_macs:
-                macs = _page_block_macs(
-                    spec, leaf, ct.reshape(-1, leaf.page_bytes), flat_ids,
-                    vns, keys, ctx, uniform).reshape(s, p, leaf.n_blocks,
-                                                     mac.MAC_BYTES)
-        if cfg.verify == "block":
-            stored = pool.block_macs[li][flat_ids].reshape(macs.shape)
-            ok = ok & jnp.all((macs == stored) | ~touched[..., None, None])
-        elif cfg.verify == "layer":
-            agg = agg ^ mac.xor_aggregate(macs, axis=2)
-        dense.append(_pages_to_dense(spec, leaf, pt, lengths))
-    if cfg.verify == "layer":
-        stored = pool.page_macs[flat_ids].reshape(s, p, mac.MAC_BYTES)
-        ok = ok & jnp.all((agg == stored) | ~touched[..., None])
-    if cfg.emulate_tree:
-        # Tree/VN traffic is charged for the WINDOW actually gathered —
-        # the emulated SGX metadata cost shrinks with the bucket too.
-        ok = ok & emulated_tree_probe(
-            sum(leaf.n_blocks for leaf in spec.leaves) * s * p)
-    return dense, ok
-
-
-def write_pages(pool: PagedKVPool, spec: PageSpec, keys, page_ids: jax.Array,
-                leaf_pages: list, vn, real_mask: jax.Array,
-                ctx: PageKeyCtx | None = None,
-                uniform: bool = False) -> PagedKVPool:
-    """Encrypt + MAC N pages and scatter them into the pool.
-
-    Args:
-      page_ids: (N,) int32 destinations (scratch row for masked slots —
-        duplicates are only ever the scratch page, so last-write-wins
-        is harmless).
-      leaf_pages: per paged leaf, (N, steps, page_tokens, *rest) data.
-      vn: scalar uint32 version number for this write event.
-      real_mask: (N,) bool — writes that land on real (non-scratch)
-        pages and therefore participate in the deferred pool MAC.
-      ctx: optional per-page tenant keys (N entries).
-    """
-    cfg = spec.cfg
-    n = page_ids.shape[0]
-    vns = jnp.broadcast_to(jnp.asarray(vn, jnp.uint32), (n,))
-    agg = jnp.zeros((n, mac.MAC_BYTES), jnp.uint8)
-    new_cts = []
-    new_block_macs = list(pool.block_macs)
-    for li, leaf in enumerate(spec.leaves):
-        buf = _dense_to_pages(spec, leaf, leaf_pages[li])
-        if cfg.verify != "none" and _kernel_write_ok(spec):
-            # One fused Pallas pass: encrypt + NH of the fresh
-            # ciphertext — the write-side twin of the fused read, for
-            # uniform AND mixed-row key selections.
-            ct, macs = _fused_write(spec, leaf, buf, page_ids, vns, keys,
-                                    ctx, uniform)
-        else:
-            ct = _crypt(spec, leaf, buf, page_ids, vns, keys, ctx, uniform)
-            macs = None
-            if cfg.verify != "none":
-                macs = _page_block_macs(spec, leaf, ct, page_ids, vns, keys,
-                                        ctx, uniform)
-        new_cts.append(pool.cts[li].at[page_ids].set(ct))
-        if cfg.verify != "none":
-            if cfg.verify == "block":
-                new_block_macs[li] = pool.block_macs[li].at[page_ids].set(macs)
-            agg = agg ^ mac.xor_aggregate(macs, axis=1)
-    old_macs = pool.page_macs[page_ids]                # read before scatter
-    new_page_macs = pool.page_macs.at[page_ids].set(agg)
-    new_vns = pool.page_vns.at[page_ids].set(vns)
-    # Deferred model-level MAC: incremental XOR update, O(dirty pages).
-    delta = jnp.where(real_mask[:, None], old_macs ^ agg,
-                      jnp.zeros((), jnp.uint8))
-    pool_mac = pool.pool_mac ^ mac.xor_aggregate(delta)
-    return PagedKVPool(tuple(new_cts), new_page_macs, tuple(new_block_macs),
-                       new_vns, pool_mac)
-
-
-def write_prefill(pool: PagedKVPool, spec: PageSpec, keys,
-                  page_ids: jax.Array, dense_leaves: list, n_write_pages: int,
-                  vn, ctx: PageKeyCtx | None = None,
-                  uniform: bool = False) -> PagedKVPool:
-    """Protect the first ``n_write_pages`` pages of one freshly-prefilled
-    slot.  ``dense_leaves``: per paged leaf, (steps, 1, max_len, *rest).
-    """
-    ptok = spec.page_tokens
-    leaf_pages = []
-    for leaf, dense_leaf in zip(spec.leaves, dense_leaves):
-        toks = dense_leaf[:, 0, : n_write_pages * ptok]
-        pages = toks.reshape((leaf.steps, n_write_pages, ptok) + leaf.rest)
-        leaf_pages.append(jnp.moveaxis(pages, 1, 0))   # (N, steps, ptok, rest)
-    ids = page_ids[:n_write_pages]
-    real = ids < spec.n_pages
-    if ctx is not None:
-        ctx = ctx.take(n_write_pages)
-    return write_pages(pool, spec, keys, ids, leaf_pages, vn, real, ctx,
-                       uniform)
-
-
-def write_dirty(pool: PagedKVPool, spec: PageSpec, keys,
-                page_table: jax.Array, dense_leaves: list,
-                lengths: jax.Array, active: jax.Array, vn,
-                ctx: PageKeyCtx | None = None,
-                uniform: bool = False) -> PagedKVPool:
-    """Re-encrypt + re-MAC the ONE dirty page per active slot.
-
-    ``lengths`` are the pre-increment lengths: the decode step just
-    wrote its token at position ``length``, so the dirty page is
-    ``length // page_tokens``.  Inactive slots write to the scratch row.
-
-    ``ctx`` (one entry per slot) carries each slot's *current* tenant
-    epoch — this is where lazy rotation lands: a page's next dirty
-    write re-encrypts it under the new epoch keys.
-    """
-    s = page_table.shape[0]
-    ptok = spec.page_tokens
-    dirty = lengths // ptok                            # (S,) page slot-index
-    pid = jnp.take_along_axis(page_table, dirty[:, None], axis=1)[:, 0]
-    real = active & (pid >= 0)
-    pid = jnp.where(real, pid, spec.scratch_page)
-    tok_idx = dirty[:, None] * ptok + jnp.arange(ptok, dtype=jnp.int32)[None]
-    leaf_pages = []
-    for leaf, dense_leaf in zip(spec.leaves, dense_leaves):
-        idx = tok_idx.reshape((1, s, ptok) + (1,) * len(leaf.rest))
-        page = jnp.take_along_axis(dense_leaf, idx, axis=2)
-        leaf_pages.append(jnp.moveaxis(page, 0, 1))    # (S, steps, ptok, rest)
-    return write_pages(pool, spec, keys, pid, leaf_pages, vn, real, ctx,
-                       uniform)
-
-
 def _bytes_to_tokens(spec: PageSpec, leaf: LeafPageSpec,
                      buf: jax.Array) -> jax.Array:
     """(N, page_bytes) u8 -> (N, steps, ptok, *rest) token data
@@ -914,50 +765,377 @@ def _bytes_to_tokens(spec: PageSpec, leaf: LeafPageSpec,
     return vals.reshape((n, leaf.steps, ptok) + leaf.rest)
 
 
+# ---------------------------------------------------------------------------
+# PageIO: the one IO surface over the pool.  Every boundary crossing —
+# batched decode read, bulk/prefill/dirty write, raw page read, reseal
+# and migration — is a method here; the module-level free functions
+# below are thin delegating wrappers kept so existing callers stay
+# bit-identical.
+# ---------------------------------------------------------------------------
+
+
+class PageIO:
+    """All pool boundary crossings for one ``(spec, keys)`` binding.
+
+    The facade binds what is static for an engine — the pool layout
+    (:class:`PageSpec`) and the engine-wide fallback keys — while the
+    pool itself, an immutable NamedTuple rewritten by every write,
+    flows through the methods functionally.  Everything is pure and
+    jit-compatible: the engine traces ``io.read`` + model decode +
+    ``io.write_dirty`` as one computation, and the prefix cache /
+    cluster share the same entry point (``io.copy`` / ``io.migrate``).
+    """
+
+    def __init__(self, spec: PageSpec, keys):
+        self.spec = spec
+        self.keys = keys
+
+    def read(self, pool: PagedKVPool, page_table: jax.Array,
+             lengths: jax.Array, ctx: PageKeyCtx | None = None,
+             uniform: bool = False):
+        """Gather + decrypt + verify the paged leaves for a batched decode.
+
+        Args:
+          page_table: (max_slots, P) int32; -1 = unallocated.  P may be
+            the full ``pages_per_slot`` or a smaller pow2 page-count
+            bucket (see :class:`TwoLevelPageTable`) — every shape below
+            follows the table, so gather/crypt/MAC work scales with the
+            bucket's page window, not with pool capacity.  The window
+            must cover every valid token
+            (``P * page_tokens > max(lengths)``).
+          lengths: (max_slots,) int32 valid tokens per slot.
+          ctx: optional per-page tenant keys (N = max_slots * P
+            entries, row-major over the page table).
+          uniform: host-side promise that every ctx entry selects one
+            bank row — dispatches the flat single-key route with
+            unchanged per-page bindings.  Mixed-row ctxs keep the fused
+            kernel too, via its per-page round-key gather
+            (:func:`_fused_read`).
+
+        Returns ``(dense_leaves, ok)`` — one dense (steps, S,
+        P*page_tokens, *rest) array per paged leaf, and the AND of
+        every gated MAC check over the *touched* pages (pages holding
+        positions < length).
+        """
+        spec, keys = self.spec, self.keys
+        cfg = spec.cfg
+        s, p = page_table.shape
+        ptab = jnp.where(page_table < 0, spec.scratch_page, page_table)
+        flat_ids = ptab.reshape(-1)
+        vns = pool.page_vns[flat_ids]
+        page_start = (jnp.arange(p, dtype=jnp.int32)
+                      * spec.page_tokens)[None, :]
+        touched = page_start < lengths[:, None]        # (S, P)
+
+        ok = jnp.asarray(True)
+        agg = jnp.zeros((s, p, mac.MAC_BYTES), jnp.uint8)
+        dense = []
+        for li, leaf in enumerate(spec.leaves):
+            ct = pool.cts[li][flat_ids].reshape(s, p, leaf.page_bytes)
+            need_macs = cfg.verify != "none"
+            if need_macs and _kernel_read_ok(spec):
+                pt, macs = _fused_read(spec, leaf,
+                                       ct.reshape(-1, leaf.page_bytes),
+                                       flat_ids, vns, keys, ctx, uniform)
+                pt = pt.reshape(s, p, leaf.page_bytes)
+                macs = macs.reshape(s, p, leaf.n_blocks, mac.MAC_BYTES)
+            else:
+                pt = _crypt(spec, leaf, ct.reshape(-1, leaf.page_bytes),
+                            flat_ids, vns, keys, ctx,
+                            uniform).reshape(s, p, leaf.page_bytes)
+                macs = None
+                if need_macs:
+                    macs = _page_block_macs(
+                        spec, leaf, ct.reshape(-1, leaf.page_bytes), flat_ids,
+                        vns, keys, ctx, uniform).reshape(s, p, leaf.n_blocks,
+                                                         mac.MAC_BYTES)
+            if cfg.verify == "block":
+                stored = pool.block_macs[li][flat_ids].reshape(macs.shape)
+                ok = ok & jnp.all((macs == stored) | ~touched[..., None, None])
+            elif cfg.verify == "layer":
+                agg = agg ^ mac.xor_aggregate(macs, axis=2)
+            dense.append(_pages_to_dense(spec, leaf, pt, lengths))
+        if cfg.verify == "layer":
+            stored = pool.page_macs[flat_ids].reshape(s, p, mac.MAC_BYTES)
+            ok = ok & jnp.all((agg == stored) | ~touched[..., None])
+        if cfg.emulate_tree:
+            # Tree/VN traffic is charged for the WINDOW actually
+            # gathered — the emulated SGX metadata cost shrinks with
+            # the bucket too.
+            ok = ok & emulated_tree_probe(
+                sum(leaf.n_blocks for leaf in spec.leaves) * s * p)
+        return dense, ok
+
+    def write(self, pool: PagedKVPool, page_ids: jax.Array,
+              leaf_pages: list, vn, real_mask: jax.Array,
+              ctx: PageKeyCtx | None = None,
+              uniform: bool = False) -> PagedKVPool:
+        """Encrypt + MAC N pages and scatter them into the pool.
+
+        Args:
+          page_ids: (N,) int32 destinations (scratch row for masked
+            slots — duplicates are only ever the scratch page, so
+            last-write-wins is harmless).
+          leaf_pages: per paged leaf, (N, steps, page_tokens, *rest).
+          vn: scalar uint32 version number for this write event.
+          real_mask: (N,) bool — writes that land on real (non-scratch)
+            pages and therefore participate in the deferred pool MAC.
+          ctx: optional per-page tenant keys (N entries).
+        """
+        spec, keys = self.spec, self.keys
+        cfg = spec.cfg
+        n = page_ids.shape[0]
+        vns = jnp.broadcast_to(jnp.asarray(vn, jnp.uint32), (n,))
+        agg = jnp.zeros((n, mac.MAC_BYTES), jnp.uint8)
+        new_cts = []
+        new_block_macs = list(pool.block_macs)
+        for li, leaf in enumerate(spec.leaves):
+            buf = _dense_to_pages(spec, leaf, leaf_pages[li])
+            if cfg.verify != "none" and _kernel_write_ok(spec):
+                # One fused Pallas pass: encrypt + NH of the fresh
+                # ciphertext — the write-side twin of the fused read,
+                # for uniform AND mixed-row key selections.
+                ct, macs = _fused_write(spec, leaf, buf, page_ids, vns, keys,
+                                        ctx, uniform)
+            else:
+                ct = _crypt(spec, leaf, buf, page_ids, vns, keys, ctx,
+                            uniform)
+                macs = None
+                if cfg.verify != "none":
+                    macs = _page_block_macs(spec, leaf, ct, page_ids, vns,
+                                            keys, ctx, uniform)
+            new_cts.append(pool.cts[li].at[page_ids].set(ct))
+            if cfg.verify != "none":
+                if cfg.verify == "block":
+                    new_block_macs[li] = (
+                        pool.block_macs[li].at[page_ids].set(macs))
+                agg = agg ^ mac.xor_aggregate(macs, axis=1)
+        old_macs = pool.page_macs[page_ids]            # read before scatter
+        new_page_macs = pool.page_macs.at[page_ids].set(agg)
+        new_vns = pool.page_vns.at[page_ids].set(vns)
+        # Deferred model-level MAC: incremental XOR update, O(dirty).
+        delta = jnp.where(real_mask[:, None], old_macs ^ agg,
+                          jnp.zeros((), jnp.uint8))
+        pool_mac = pool.pool_mac ^ mac.xor_aggregate(delta)
+        return PagedKVPool(tuple(new_cts), new_page_macs,
+                           tuple(new_block_macs), new_vns, pool_mac)
+
+    def write_prefill(self, pool: PagedKVPool, page_ids: jax.Array,
+                      dense_leaves: list, n_write_pages: int, vn,
+                      ctx: PageKeyCtx | None = None,
+                      uniform: bool = False) -> PagedKVPool:
+        """Protect the first ``n_write_pages`` pages of one
+        freshly-prefilled slot.  ``dense_leaves``: per paged leaf,
+        (steps, 1, max_len, *rest).
+        """
+        spec = self.spec
+        ptok = spec.page_tokens
+        leaf_pages = []
+        for leaf, dense_leaf in zip(spec.leaves, dense_leaves):
+            toks = dense_leaf[:, 0, : n_write_pages * ptok]
+            pages = toks.reshape((leaf.steps, n_write_pages, ptok)
+                                 + leaf.rest)
+            leaf_pages.append(jnp.moveaxis(pages, 1, 0))  # (N, steps, ...)
+        ids = page_ids[:n_write_pages]
+        real = ids < spec.n_pages
+        if ctx is not None:
+            ctx = ctx.take(n_write_pages)
+        return self.write(pool, ids, leaf_pages, vn, real, ctx, uniform)
+
+    def write_dirty(self, pool: PagedKVPool, page_table: jax.Array,
+                    dense_leaves: list, lengths: jax.Array,
+                    active: jax.Array, vn, ctx: PageKeyCtx | None = None,
+                    uniform: bool = False) -> PagedKVPool:
+        """Re-encrypt + re-MAC the ONE dirty page per active slot.
+
+        ``lengths`` are the pre-increment lengths: the decode step just
+        wrote its token at position ``length``, so the dirty page is
+        ``length // page_tokens``.  Inactive slots write to the scratch
+        row.
+
+        ``ctx`` (one entry per slot) carries each slot's *current*
+        tenant epoch — this is where lazy rotation lands: a page's next
+        dirty write re-encrypts it under the new epoch keys.
+        """
+        spec = self.spec
+        s = page_table.shape[0]
+        ptok = spec.page_tokens
+        dirty = lengths // ptok                        # (S,) page slot-index
+        pid = jnp.take_along_axis(page_table, dirty[:, None], axis=1)[:, 0]
+        real = active & (pid >= 0)
+        pid = jnp.where(real, pid, spec.scratch_page)
+        tok_idx = (dirty[:, None] * ptok
+                   + jnp.arange(ptok, dtype=jnp.int32)[None])
+        leaf_pages = []
+        for leaf, dense_leaf in zip(spec.leaves, dense_leaves):
+            idx = tok_idx.reshape((1, s, ptok) + (1,) * len(leaf.rest))
+            page = jnp.take_along_axis(dense_leaf, idx, axis=2)
+            leaf_pages.append(jnp.moveaxis(page, 0, 1))  # (S, steps, ...)
+        return self.write(pool, pid, leaf_pages, vn, real, ctx, uniform)
+
+
+    def read_raw(self, pool: PagedKVPool, page_ids: jax.Array,
+                 ctx: PageKeyCtx | None = None, uniform: bool = False):
+        """Decrypt + verify N whole pages, returning token payloads.
+
+        Unlike :meth:`read` this is page-shaped, not slot-shaped: it
+        returns per paged leaf a (N, steps, page_tokens, *rest) array —
+        the exact ``leaf_pages`` layout :meth:`write` consumes — plus
+        the AND of every gated MAC check over the *real* pages
+        (scratch-page entries are ignored, so callers can pad to a
+        bucketed size).  This is the read half of resealing and secure
+        migration.
+        """
+        spec, keys = self.spec, self.keys
+        cfg = spec.cfg
+        n = page_ids.shape[0]
+        vns = pool.page_vns[page_ids]
+        real = page_ids < spec.n_pages
+        ok = jnp.asarray(True)
+        agg = jnp.zeros((n, mac.MAC_BYTES), jnp.uint8)
+        out = []
+        for li, leaf in enumerate(spec.leaves):
+            ct = pool.cts[li][page_ids]
+            need_macs = cfg.verify != "none"
+            if need_macs and _kernel_read_ok(spec):
+                pt, macs = _fused_read(spec, leaf, ct, page_ids, vns, keys,
+                                       ctx, uniform)
+            else:
+                pt = _crypt(spec, leaf, ct, page_ids, vns, keys, ctx,
+                            uniform)
+                macs = None
+                if need_macs:
+                    macs = _page_block_macs(spec, leaf, ct, page_ids, vns,
+                                            keys, ctx, uniform)
+            if cfg.verify == "block":
+                stored = pool.block_macs[li][page_ids]
+                ok = ok & jnp.all((macs == stored) | ~real[:, None, None])
+            elif cfg.verify == "layer":
+                agg = agg ^ mac.xor_aggregate(macs, axis=1)
+            out.append(_bytes_to_tokens(spec, leaf, pt))
+        if cfg.verify == "layer":
+            stored = pool.page_macs[page_ids]
+            ok = ok & jnp.all((agg == stored) | ~real[:, None])
+        if cfg.emulate_tree:
+            ok = ok & emulated_tree_probe(
+                n * sum(leaf.n_blocks for leaf in spec.leaves))
+        return out, ok
+
+    def reseal(self, pool: PagedKVPool, page_ids: jax.Array, vn,
+               old_ctx: PageKeyCtx | None = None,
+               new_ctx: PageKeyCtx | None = None,
+               uniform: bool = False):
+        """Decrypt N pages under ``old_ctx`` and re-protect under
+        ``new_ctx`` in place — the eager-rotation primitive.
+
+        One fused crossing: gather → decrypt+verify (old keys/epoch
+        words) → re-encrypt + re-MAC (new keys/epoch words, fresh
+        ``vn``) → scatter back to the SAME page ids.  Plaintext is
+        bit-preserved, so decode output is unchanged; the pool/page
+        metadata moves to the new epoch without preempting any slot.
+        Returns ``(new_pool, ok)`` — the caller must gate on ``ok`` (a
+        failed decrypt means the old bytes were tampered; writing their
+        reseal would launder them).
+        """
+        leaf_pages, ok = self.read_raw(pool, page_ids, old_ctx, uniform)
+        real = page_ids < self.spec.n_pages
+        new_pool = self.write(pool, page_ids, leaf_pages, vn, real, new_ctx,
+                              uniform)
+        return new_pool, ok
+
+    def copy(self, pool: PagedKVPool, src_ids: jax.Array,
+             dst_ids: jax.Array, vn,
+             src_ctx: PageKeyCtx | None = None,
+             dst_ctx: PageKeyCtx | None = None):
+        """Reseal N pages to *different* page ids within one pool.
+
+        The rebinding primitive the prefix cache builds on: decrypt +
+        verify the source pages under ``src_ctx``, re-encrypt + re-MAC
+        the same plaintext into ``dst_ids`` under ``dst_ctx``.  Cache
+        insert copies session pages into cache-bound pages
+        (session epoch word → :data:`PREFIX_ROLE`), copy-on-write
+        copies a shared cache page back into a private session page,
+        and reseal-on-share copies one tenant's cache page into
+        another's.  Returns ``(new_pool, ok)``; callers must gate on
+        ``ok`` before committing the new pool (a tampered source must
+        not be laundered into a freshly-MACed copy).
+        """
+        return self.migrate(pool, self.spec, pool, src_ids, dst_ids, vn,
+                            src_ctx, dst_ctx)
+
+    def migrate(self, src_pool: PagedKVPool, src_spec: PageSpec,
+                dst_pool: PagedKVPool, src_ids: jax.Array,
+                dst_ids: jax.Array, vn,
+                src_ctx: PageKeyCtx | None = None,
+                dst_ctx: PageKeyCtx | None = None):
+        """Secure page migration: reseal N pages from ``src_pool`` into
+        this IO's pool (single-dispatch form, for pools on one device).
+
+        Decrypts under the *source* shard binding (shard id in the RePA
+        fmap + CTR words), verifies, then re-encrypts + re-MACs under
+        the *destination* binding — the page arrives cryptographically
+        pinned to its new device and the old ciphertext is useless
+        there.  For pools on different devices, run :meth:`read_raw` on
+        the source device, transfer the plaintext leaf pages, and
+        :meth:`write` on the destination (what the cluster engine
+        does).  Returns ``(new_dst_pool, ok)``.
+        """
+        dst_spec = self.spec
+        if src_spec.leaves != dst_spec.leaves:
+            raise ValueError("migration needs identically-laid-out pools")
+        leaf_pages, ok = PageIO(src_spec, self.keys).read_raw(
+            src_pool, src_ids, src_ctx)
+        real = dst_ids < dst_spec.n_pages
+        new_dst = self.write(dst_pool, dst_ids, leaf_pages, vn, real,
+                             dst_ctx)
+        return new_dst, ok
+
+
+# ---------------------------------------------------------------------------
+# Free-function wrappers: the pre-PageIO module API, delegating 1:1.
+# ---------------------------------------------------------------------------
+
+
+def read_pages(pool: PagedKVPool, spec: PageSpec, keys, page_table: jax.Array,
+               lengths: jax.Array, ctx: PageKeyCtx | None = None,
+               uniform: bool = False):
+    """Thin wrapper over :meth:`PageIO.read` (kept for existing callers)."""
+    return PageIO(spec, keys).read(pool, page_table, lengths, ctx, uniform)
+
+
+def write_pages(pool: PagedKVPool, spec: PageSpec, keys, page_ids: jax.Array,
+                leaf_pages: list, vn, real_mask: jax.Array,
+                ctx: PageKeyCtx | None = None,
+                uniform: bool = False) -> PagedKVPool:
+    """Thin wrapper over :meth:`PageIO.write` (kept for existing callers)."""
+    return PageIO(spec, keys).write(pool, page_ids, leaf_pages, vn,
+                                    real_mask, ctx, uniform)
+
+
+def write_prefill(pool: PagedKVPool, spec: PageSpec, keys,
+                  page_ids: jax.Array, dense_leaves: list, n_write_pages: int,
+                  vn, ctx: PageKeyCtx | None = None,
+                  uniform: bool = False) -> PagedKVPool:
+    """Thin wrapper over :meth:`PageIO.write_prefill`."""
+    return PageIO(spec, keys).write_prefill(pool, page_ids, dense_leaves,
+                                            n_write_pages, vn, ctx, uniform)
+
+
+def write_dirty(pool: PagedKVPool, spec: PageSpec, keys,
+                page_table: jax.Array, dense_leaves: list,
+                lengths: jax.Array, active: jax.Array, vn,
+                ctx: PageKeyCtx | None = None,
+                uniform: bool = False) -> PagedKVPool:
+    """Thin wrapper over :meth:`PageIO.write_dirty`."""
+    return PageIO(spec, keys).write_dirty(pool, page_table, dense_leaves,
+                                          lengths, active, vn, ctx, uniform)
+
+
 def read_pages_raw(pool: PagedKVPool, spec: PageSpec, keys,
                    page_ids: jax.Array, ctx: PageKeyCtx | None = None,
                    uniform: bool = False):
-    """Decrypt + verify N whole pages, returning their token payloads.
-
-    Unlike :func:`read_pages` this is page-shaped, not slot-shaped: it
-    returns per paged leaf a (N, steps, page_tokens, *rest) array — the
-    exact ``leaf_pages`` layout :func:`write_pages` consumes — plus the
-    AND of every gated MAC check over the *real* pages (scratch-page
-    entries are ignored, so callers can pad to a bucketed size).  This
-    is the read half of resealing and secure migration.
-    """
-    cfg = spec.cfg
-    n = page_ids.shape[0]
-    vns = pool.page_vns[page_ids]
-    real = page_ids < spec.n_pages
-    ok = jnp.asarray(True)
-    agg = jnp.zeros((n, mac.MAC_BYTES), jnp.uint8)
-    out = []
-    for li, leaf in enumerate(spec.leaves):
-        ct = pool.cts[li][page_ids]
-        need_macs = cfg.verify != "none"
-        if need_macs and _kernel_read_ok(spec):
-            pt, macs = _fused_read(spec, leaf, ct, page_ids, vns, keys, ctx,
-                                   uniform)
-        else:
-            pt = _crypt(spec, leaf, ct, page_ids, vns, keys, ctx, uniform)
-            macs = None
-            if need_macs:
-                macs = _page_block_macs(spec, leaf, ct, page_ids, vns, keys,
-                                        ctx, uniform)
-        if cfg.verify == "block":
-            stored = pool.block_macs[li][page_ids]
-            ok = ok & jnp.all((macs == stored) | ~real[:, None, None])
-        elif cfg.verify == "layer":
-            agg = agg ^ mac.xor_aggregate(macs, axis=1)
-        out.append(_bytes_to_tokens(spec, leaf, pt))
-    if cfg.verify == "layer":
-        stored = pool.page_macs[page_ids]
-        ok = ok & jnp.all((agg == stored) | ~real[:, None])
-    if cfg.emulate_tree:
-        ok = ok & emulated_tree_probe(
-            n * sum(leaf.n_blocks for leaf in spec.leaves))
-    return out, ok
+    """Thin wrapper over :meth:`PageIO.read_raw`."""
+    return PageIO(spec, keys).read_raw(pool, page_ids, ctx, uniform)
 
 
 def reseal_pages(pool: PagedKVPool, spec: PageSpec, keys,
@@ -965,23 +1143,9 @@ def reseal_pages(pool: PagedKVPool, spec: PageSpec, keys,
                  old_ctx: PageKeyCtx | None = None,
                  new_ctx: PageKeyCtx | None = None,
                  uniform: bool = False):
-    """Decrypt N pages under ``old_ctx`` and re-protect under ``new_ctx``
-    in place — the eager-rotation primitive.
-
-    One fused crossing: gather → decrypt+verify (old keys/epoch words)
-    → re-encrypt + re-MAC (new keys/epoch words, fresh ``vn``) →
-    scatter back to the SAME page ids.  Plaintext is bit-preserved, so
-    decode output is unchanged; the pool/page metadata moves to the new
-    epoch without preempting any slot.  Returns ``(new_pool, ok)`` —
-    the caller must gate on ``ok`` (a failed decrypt means the old
-    bytes were tampered; writing their reseal would launder them).
-    """
-    leaf_pages, ok = read_pages_raw(pool, spec, keys, page_ids, old_ctx,
-                                    uniform)
-    real = page_ids < spec.n_pages
-    new_pool = write_pages(pool, spec, keys, page_ids, leaf_pages, vn, real,
-                           new_ctx, uniform)
-    return new_pool, ok
+    """Thin wrapper over :meth:`PageIO.reseal`."""
+    return PageIO(spec, keys).reseal(pool, page_ids, vn, old_ctx, new_ctx,
+                                     uniform)
 
 
 def migrate_pages(src_pool: PagedKVPool, src_spec: PageSpec,
@@ -989,26 +1153,10 @@ def migrate_pages(src_pool: PagedKVPool, src_spec: PageSpec,
                   src_ids: jax.Array, dst_ids: jax.Array, vn,
                   src_ctx: PageKeyCtx | None = None,
                   dst_ctx: PageKeyCtx | None = None):
-    """Secure page migration: reseal N pages from one shard's pool into
-    another's (single-dispatch form, for pools on one device).
-
-    Decrypts under the *source* shard binding (shard id in the RePA
-    fmap + CTR words), verifies, then re-encrypts + re-MACs under the
-    *destination* binding — the page arrives cryptographically pinned
-    to its new device and the old ciphertext is useless there.  For
-    pools on different devices, run :func:`read_pages_raw` on the
-    source device, transfer the plaintext leaf pages, and
-    :func:`write_pages` on the destination (what the cluster engine
-    does).  Returns ``(new_dst_pool, ok)``.
-    """
-    if src_spec.leaves != dst_spec.leaves:
-        raise ValueError("migration needs identically-laid-out pools")
-    leaf_pages, ok = read_pages_raw(src_pool, src_spec, keys, src_ids,
-                                    src_ctx)
-    real = dst_ids < dst_spec.n_pages
-    new_dst = write_pages(dst_pool, dst_spec, keys, dst_ids, leaf_pages, vn,
-                          real, dst_ctx)
-    return new_dst, ok
+    """Thin wrapper over :meth:`PageIO.migrate`."""
+    return PageIO(dst_spec, keys).migrate(src_pool, src_spec, dst_pool,
+                                          src_ids, dst_ids, vn, src_ctx,
+                                          dst_ctx)
 
 
 def deferred_pool_check(pool: PagedKVPool, spec: PageSpec) -> jax.Array:
@@ -1017,3 +1165,224 @@ def deferred_pool_check(pool: PagedKVPool, spec: PageSpec) -> jax.Array:
     the critical path (end of request / every N steps)."""
     return jnp.all(mac.xor_aggregate(pool.page_macs[: spec.n_pages])
                    == pool.pool_mac)
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache: content-addressed index over cache-bound shared pages.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PrefixCacheEntry:
+    """One cached prefix chunk: a sealed page + its chain position.
+
+    ``key`` is ``(tenant_index, chain_hash)`` where the chain hash
+    covers every token from position 0 through this chunk — a page is
+    only reachable by walking its full ancestry, so two prefixes
+    collide only if their entire token histories do.  ``n_tokens`` may
+    be short of a full page for the chain's leaf chunk (a partially
+    filled final page); only leaves may be partial.
+    """
+
+    key: tuple
+    parent: Optional["PrefixCacheEntry"]
+    page_id: int
+    n_tokens: int
+    refs: int = 0
+    last_use: int = 0
+
+
+class PrefixCache:
+    """Host-side content-addressed secure prefix cache.
+
+    Entries index pool pages sealed under the owning tenant's dedicated
+    *cache binding* — epoch word :data:`PREFIX_ROLE`, selecting the
+    tenant's epoch-independent cache keys (see
+    :meth:`repro.tenancy.registry.TenantRegistry.cache_row`).  A page
+    sealed once is verify-read by every session that matches its chain
+    (VN-stable: shared reads never re-MAC), and keys are per tenant, so
+    a match can only ever hand a session pages its own tenant sealed —
+    cross-tenant sharing must go through the engine's explicit
+    reseal-on-share.
+
+    **Keying.**  Token streams are chunked page-sized; chunk ``i``'s
+    chain hash is ``H(chain[i-1] ‖ tokens_i)``.  Lookup walks the chain
+    from chunk 0 and returns the longest fully-matched entry run (plus,
+    after the last full chunk, the longest matching *partial* leaf), so
+    a hit is always a page-aligned prefix of the slot's context — the
+    windows-are-prefixes invariant of :class:`TwoLevelPageTable` holds
+    with zero new window shapes.
+
+    **Lifecycle.**  Slots ``acquire`` the whole matched chain (every
+    ancestor's refcount rises, so a parent's refcount always dominates
+    its children's) and ``release`` it on finish/preempt/CoW.  Eviction
+    (``reclaim``) is LRU over refcount-zero *leaf* entries — the
+    dominance invariant means cascading from the leaves can never
+    strand a referenced descendant.
+
+    The cache stores page *ids* only; sealing bytes in and out of those
+    pages is the engine's job via :class:`PageIO`.
+    """
+
+    def __init__(self, page_tokens: int, capacity_pages: int):
+        if capacity_pages < 1:
+            raise ValueError("prefix cache needs capacity >= 1 page")
+        self.page_tokens = page_tokens
+        self.capacity_pages = capacity_pages
+        self._entries: dict[tuple, PrefixCacheEntry] = {}
+        self._children: dict[tuple, set] = {}
+        self._clock = 0
+
+    # -- chain hashing ------------------------------------------------------
+
+    @staticmethod
+    def _chain_hash(parent_hash: bytes, chunk) -> bytes:
+        buf = np.asarray(list(chunk), np.uint32).tobytes()
+        return hashlib.sha256(parent_hash + buf).digest()
+
+    def _chain(self, tokens):
+        """Page-sized chunks of ``tokens`` with their chain hashes:
+        list of ``(hash, n_tokens)``; only the last may be partial."""
+        out, h = [], b""
+        ptok = self.page_tokens
+        for start in range(0, len(tokens), ptok):
+            chunk = tokens[start: start + ptok]
+            h = self._chain_hash(h, chunk)
+            out.append((h, len(chunk)))
+        return out
+
+    # -- lookup / refcounts -------------------------------------------------
+
+    def match(self, tenant_index: int, tokens) -> list:
+        """Longest cached chain covering a prefix of ``tokens``.
+
+        Pure (no refcount/LRU side effects).  Walks full page-sized
+        chunks first; after the first miss, probes partial leaves of
+        the next chunk longest-first, so an exact-length partial page
+        cached by a shorter prompt still hits.
+        """
+        matched, h = [], b""
+        ptok = self.page_tokens
+        consumed = 0
+        while consumed < len(tokens):
+            chunk = tokens[consumed: consumed + ptok]
+            full_h = self._chain_hash(h, chunk)
+            entry = self._entries.get((tenant_index, full_h))
+            if entry is not None and entry.n_tokens == len(chunk):
+                matched.append(entry)
+                h = full_h
+                consumed += len(chunk)
+                continue
+            for c in range(len(chunk) - 1, 0, -1):
+                part_h = self._chain_hash(h, chunk[:c])
+                entry = self._entries.get((tenant_index, part_h))
+                if entry is not None and entry.n_tokens == c:
+                    matched.append(entry)
+                    break
+            break
+        return matched
+
+    def match_tokens(self, tenant_index: int, tokens) -> int:
+        """Tokens a :meth:`match` would cover (cluster routing metric)."""
+        return sum(e.n_tokens for e in self.match(tenant_index, tokens))
+
+    def missing(self, tenant_index: int, tokens):
+        """Insertion plan after the longest match: ``(matched,
+        missing)`` where ``missing`` is ``[(key, n_tokens), ...]`` for
+        the chunks a full-chain insert still needs, in chain order."""
+        matched = self.match(tenant_index, tokens)
+        covered = sum(e.n_tokens for e in matched)
+        if matched and matched[-1].n_tokens % self.page_tokens:
+            return matched, []          # partial leaf: chain can't extend
+        h = matched[-1].key[1] if matched else b""
+        missing = [((tenant_index, ch), n)
+                   for ch, n in self._chain(tokens[covered:])]
+        return matched, missing
+
+    def acquire(self, entries) -> None:
+        """Pin a matched chain: every entry's refcount rises by one
+        (ancestors included, preserving refcount dominance)."""
+        self._clock += 1
+        for e in entries:
+            e.refs += 1
+            e.last_use = self._clock
+
+    def release(self, entries) -> None:
+        for e in entries:
+            if e.refs <= 0:
+                raise RuntimeError(f"prefix-cache refcount underflow on "
+                                   f"{e.key[1].hex()[:12]}")
+            e.refs -= 1
+
+    # -- insertion / eviction -----------------------------------------------
+
+    def insert(self, key: tuple, parent: Optional[PrefixCacheEntry],
+               page_id: int, n_tokens: int) -> PrefixCacheEntry:
+        """Index a freshly cache-sealed page under its chain key.
+
+        The caller has already copied the page's bytes into
+        ``page_id`` under the cache binding (:meth:`PageIO.copy`); the
+        cache only tracks ownership.  New entries start unreferenced —
+        the inserting slot keeps decoding on its private pages.
+        """
+        if key in self._entries:
+            raise ValueError("prefix chunk already cached")
+        if len(self._entries) >= self.capacity_pages:
+            raise ValueError("prefix cache over capacity — reclaim first")
+        if parent is not None and parent.n_tokens % self.page_tokens:
+            raise ValueError("cannot extend a partial (leaf) chunk")
+        entry = PrefixCacheEntry(key=key, parent=parent, page_id=page_id,
+                                 n_tokens=n_tokens)
+        self._clock += 1
+        entry.last_use = self._clock
+        self._entries[key] = entry
+        if parent is not None:
+            self._children.setdefault(parent.key, set()).add(key)
+        return entry
+
+    @property
+    def pages_used(self) -> int:
+        return len(self._entries)
+
+    def free_capacity(self) -> int:
+        return self.capacity_pages - len(self._entries)
+
+    def _evict(self, entry: PrefixCacheEntry) -> None:
+        del self._entries[entry.key]
+        if entry.parent is not None:
+            kids = self._children.get(entry.parent.key)
+            if kids is not None:
+                kids.discard(entry.key)
+                if not kids:
+                    del self._children[entry.parent.key]
+
+    def reclaim(self, n_pages: int) -> list:
+        """Evict up to ``n_pages`` unreferenced entries, LRU leaf-first
+        (refcount dominance makes leaf-first cascade-safe); returns the
+        freed page ids for the engine to reuse."""
+        freed = []
+        while len(freed) < n_pages:
+            cands = [e for e in self._entries.values()
+                     if e.refs == 0 and not self._children.get(e.key)]
+            if not cands:
+                break
+            victim = min(cands, key=lambda e: e.last_use)
+            self._evict(victim)
+            freed.append(victim.page_id)
+        return freed
+
+    def flush(self, tenant_index: Optional[int] = None) -> list:
+        """Evict every unreferenced entry (optionally one tenant's) —
+        the revocation path for the epoch-independent cache binding.
+        Returns the freed page ids; referenced chains survive."""
+        freed, progress = [], True
+        while progress:
+            progress = False
+            for e in list(self._entries.values()):
+                if tenant_index is not None and e.key[0] != tenant_index:
+                    continue
+                if e.refs == 0 and not self._children.get(e.key):
+                    self._evict(e)
+                    freed.append(e.page_id)
+                    progress = True
+        return freed

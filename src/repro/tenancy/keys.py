@@ -19,6 +19,10 @@ else.
                cipher key    E_{t,e}  = PRF(E_t, "epoch" ‖ u64(e))
                NH hash key   lanes    = AES-CTR_{PRF(H_t, "epoch" ‖ u64(e))}
                counter salt  s_{t,e}  = PRF(V_t, "epoch" ‖ u64(e))[:4]
+             plus one epoch-independent prefix-cache branch (label
+             "cache:prefix") sealing shared-prefix KV pages that must
+             stay verifiable across rotations (see
+             :class:`repro.serve.kv_pages.PrefixCache`).
 
 PRF is AES-128-CBC-MAC over 0x80-padded message blocks, built on the
 same :mod:`repro.core.aes` engine the data plane uses (the hierarchy
@@ -100,6 +104,7 @@ class TenantKeySet:
     nh_lanes: int
     current_epoch: int = 0
     _epochs: dict = dataclasses.field(default_factory=dict)
+    _cache: tuple = None
 
     def epoch_keys(self, epoch: int) -> sm.SecureKeys:
         """Data-plane ``SecureKeys`` for one (tenant, epoch)."""
@@ -127,6 +132,35 @@ class TenantKeySet:
                 hash_key=jnp.asarray(lanes))
             self._epochs[epoch] = (keys, salt)
         return self._epochs[epoch]
+
+    def cache_keys(self) -> sm.SecureKeys:
+        """Data-plane keys for this tenant's prefix-cache binding.
+
+        Derived from the purpose keys under a dedicated ``cache``
+        label instead of an epoch label, so the binding is *epoch
+        independent*: pages sealed into the shared-prefix cache stay
+        verifiable across ``rotate()`` (VN-stable shared reads never
+        re-MAC).  Revocation of cached state is therefore an explicit
+        cache flush, not a key rotation.
+        """
+        return self._materialize_cache()[0]
+
+    def cache_salt(self) -> int:
+        """u32 CTR-counter salt for the prefix-cache binding."""
+        return self._materialize_cache()[1]
+
+    def _materialize_cache(self):
+        if self._cache is None:
+            label = b"cache:prefix"
+            cipher = prf(self.enc_key, label)
+            lanes = _expand_lanes(prf(self.mac_key, label), self.nh_lanes)
+            salt = int(prf(self.vn_key, label)[:4].view(np.uint32)[0])
+            keys = sm.SecureKeys(
+                key=jnp.asarray(cipher),
+                round_keys=jnp.asarray(aes.key_expansion_np(cipher)),
+                hash_key=jnp.asarray(lanes))
+            self._cache = (keys, salt)
+        return self._cache
 
     def rotate(self) -> int:
         """Bump the epoch; the new keys derive lazily on first use."""

@@ -19,7 +19,12 @@ The registry is the control plane of the tenancy subsystem:
 
 Bank row layout: ``row(tenant, epoch) = tenant.index * retain +
 epoch % retain`` — with the default ``retain=2`` each tenant owns two
-rows that current/previous epochs ping-pong between.
+rows that current/previous epochs ping-pong between.  One extra row
+per tenant sits after the epoch block: ``cache_row(tenant) =
+max_tenants * retain + tenant.index`` holds the tenant's
+epoch-independent prefix-cache keys (installed once at registration,
+untouched by rotation), so shared-prefix pages keep verifying across
+``rotate()``.
 """
 
 from __future__ import annotations
@@ -89,7 +94,7 @@ class TenantRegistry:
         self._rotation_hooks: list = []
         self._pre_rotation_hooks: list = []
         self._bank_replicas: dict = {}      # device -> KeyBank copy
-        k = max_tenants * retain
+        k = max_tenants * (retain + 1)   # epoch rows + one cache row each
         lanes = self.hierarchy.nh_lanes
         self._bank = KeyBank(
             key=jnp.zeros((k, 16), jnp.uint8),
@@ -115,6 +120,7 @@ class TenantRegistry:
         self.tenants[tenant_id] = tenant
         self._by_index.append(tenant)
         self._install_epoch(tenant, tenant.current_epoch)
+        self._install_cache_row(tenant)
         return tenant
 
     def open_session(self, tenant_id: str) -> SessionHandle:
@@ -180,6 +186,16 @@ class TenantRegistry:
                 f"retain {self.retain})")
         return index * self.retain + epoch % self.retain
 
+    def cache_row(self, index: int) -> int:
+        """Bank row holding ``index``'s epoch-independent cache keys."""
+        if not (0 <= index < len(self._by_index)):
+            raise KeyError(f"tenant index {index} not registered")
+        return self.max_tenants * self.retain + index
+
+    def cache_keys_for(self, index: int):
+        """Host-side ``SecureKeys`` for a tenant's prefix-cache binding."""
+        return self._by_index[index].keyset.cache_keys()
+
     def attach_rotation_hook(self, hook, *, pre: bool = False) -> None:
         """Register ``hook(tenant, new_epoch)`` to run around rotations.
 
@@ -236,3 +252,15 @@ class TenantRegistry:
                 keys.hash_key[: self._bank.hash_key.shape[1]]),
             salt=self._bank.salt.at[row].set(np.uint32(salt)))
         self._bank_replicas.clear()         # shard replicas re-fan-out lazily
+
+    def _install_cache_row(self, tenant: Tenant) -> None:
+        row = self.cache_row(tenant.index)
+        keys = tenant.keyset.cache_keys()
+        salt = tenant.keyset.cache_salt()
+        self._bank = KeyBank(
+            key=self._bank.key.at[row].set(keys.key),
+            round_keys=self._bank.round_keys.at[row].set(keys.round_keys),
+            hash_key=self._bank.hash_key.at[row].set(
+                keys.hash_key[: self._bank.hash_key.shape[1]]),
+            salt=self._bank.salt.at[row].set(np.uint32(salt)))
+        self._bank_replicas.clear()

@@ -1,0 +1,459 @@
+"""Secure shared-prefix KV cache + the unified submit / page-IO API.
+
+Covers this PR's tentpole guarantees:
+  * API parity — the keyword-only ``submit()`` (SubmitRequest) is
+    token-identical to the legacy positional form (which warns), on the
+    engine and the cluster alike;
+  * PageIO — the free-function wrappers are bit-identical to the
+    facade methods they delegate to;
+  * prefix cache — content-addressed match/insert/refcount/reclaim
+    host logic, and hit/miss/CoW serving that stays token-identical to
+    the no-cache engine for every scheme;
+  * isolation — a tenant never matches another tenant's chain, a
+    byte-identical replay of a cached page under another tenant's
+    session fails its MAC gate, and cross-tenant sharing works only
+    through the explicit reseal-on-share;
+  * cluster — routing prefers the shard holding the prefix, and stats
+    aggregation forwards counters it never heard of.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.secure_exec import SCHEMES
+from repro.models import lm as lm_mod
+from repro.models.layers import init_params
+from repro.serve import kv_pages as kvp
+from repro.serve.cluster import ClusterEngine
+from repro.serve.engine import (IntegrityError, SecureServingEngine,
+                                SubmitRequest)
+from repro.tenancy.keys import KeyHierarchy
+from repro.tenancy.registry import TenantRegistry
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    arch = get_arch("minitron-4b")
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    return arch, cfg, params
+
+
+def _tenant_engine(smoke, *, tenants=("alice",), prefix_cache=True,
+                   scheme="seda", **kw):
+    arch, cfg, params = smoke
+    registry = TenantRegistry(KeyHierarchy(0), max_tenants=4)
+    for t in tenants:
+        registry.register(t)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_tokens", 4)
+    kw.setdefault("pages_per_slot", 4)
+    kw.setdefault("n_pages", 16)
+    eng = SecureServingEngine(arch, cfg, params, scheme=scheme,
+                              registry=registry, prefix_cache=prefix_cache,
+                              **kw)
+    return eng, registry
+
+
+@pytest.fixture(scope="module")
+def hitmiss_prompts():
+    rng = np.random.default_rng(3)
+    p7 = list(map(int, rng.integers(1, 256, 7)))
+    p8 = p7 + [int(rng.integers(1, 256))]
+    p9 = list(map(int, rng.integers(1, 256, 9)))
+    # p7 seeds the chain (one full + one partial page with
+    # page_tokens=4); the second p7 hits; p8 extends the partial leaf
+    # (hit + copy-on-write); p9 is an unrelated miss.
+    return [p7, p7, p8, p9]
+
+
+@pytest.fixture(scope="module")
+def hitmiss_baseline(smoke, hitmiss_prompts):
+    """No-cache reference tokens for the hit/miss/CoW workload."""
+    eng, registry = _tenant_engine(smoke, prefix_cache=False, scheme="off")
+    sess = registry.open_session("alice")
+    rids = [eng.submit(prompt=p, max_new_tokens=4, session=sess)
+            for p in hitmiss_prompts]
+    done = eng.run()
+    return [done[r].generated for r in rids]
+
+
+class TestSubmitRequest:
+    def test_positional_form_warns_and_matches(self, smoke):
+        arch, cfg, params = smoke
+        legacy = SecureServingEngine(arch, cfg, params, scheme="off",
+                                     max_slots=2, page_tokens=4,
+                                     pages_per_slot=4)
+        prompt = [5, 6, 7, 8, 9]
+        with pytest.warns(DeprecationWarning):
+            r0 = legacy.submit(prompt, 4)
+        r1 = legacy.submit(prompt=prompt, max_new_tokens=4)
+        r2 = legacy.submit(SubmitRequest(prompt=prompt, max_new_tokens=4))
+        done = legacy.run()
+        assert done[r0].generated == done[r1].generated
+        assert done[r0].generated == done[r2].generated
+
+    def test_keyword_form_does_not_warn(self, smoke):
+        arch, cfg, params = smoke
+        eng = SecureServingEngine(arch, cfg, params, scheme="off",
+                                  max_slots=2, page_tokens=4,
+                                  pages_per_slot=4)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            eng.submit(prompt=[1, 2, 3], max_new_tokens=2)
+            eng.submit(SubmitRequest(prompt=[1, 2, 3], max_new_tokens=2))
+
+    def test_argument_validation(self, smoke):
+        arch, cfg, params = smoke
+        eng = SecureServingEngine(arch, cfg, params, scheme="off",
+                                  max_slots=2, page_tokens=4,
+                                  pages_per_slot=4)
+        sr = SubmitRequest(prompt=[1, 2], max_new_tokens=2)
+        with pytest.raises(TypeError):
+            eng.submit(sr, 4)
+        with pytest.raises(TypeError):
+            eng.submit(sr, max_new_tokens=4)
+        with pytest.raises(TypeError), pytest.warns(DeprecationWarning):
+            eng.submit([1, 2], prompt=[3, 4])
+        with pytest.raises(TypeError), pytest.warns(DeprecationWarning):
+            eng.submit([1, 2], 4, max_new_tokens=4)
+
+    def test_cluster_shares_the_surface(self, smoke):
+        arch, cfg, params = smoke
+        cluster = ClusterEngine(arch, cfg, params, shards=2, scheme="off",
+                                max_slots=2, page_tokens=4,
+                                pages_per_slot=4)
+        prompt = [9, 8, 7, 6, 5]
+        with pytest.warns(DeprecationWarning):
+            r0 = cluster.submit(prompt, 4)
+        r1 = cluster.submit(SubmitRequest(prompt=prompt, max_new_tokens=4))
+        done = cluster.run()
+        assert done[r0].generated == done[r1].generated
+
+    def test_share_prefix_opt_out(self, smoke):
+        eng, registry = _tenant_engine(smoke)
+        sess = registry.open_session("alice")
+        prompt = list(range(1, 10))
+        eng.submit(prompt=prompt, max_new_tokens=4, session=sess,
+                   share_prefix=False)
+        eng.run()
+        assert eng.prefix_cache.pages_used == 0      # never seeded
+        eng.submit(prompt=prompt, max_new_tokens=4, session=sess)
+        eng.run()
+        assert eng.prefix_cache.pages_used > 0
+        hits_before = eng.stats["prefix_hit_pages"]
+        eng.submit(prompt=prompt, max_new_tokens=4, session=sess,
+                   share_prefix=False)
+        eng.run()
+        assert eng.stats["prefix_hit_pages"] == hits_before  # never read
+
+
+class TestPageIO:
+    """The free functions must stay bit-identical to the facade."""
+
+    def _spec_and_data(self, keys, rng, scheme="seda"):
+        from repro.models.attention import KVCache
+        tree = [[KVCache(
+            k=jax.ShapeDtypeStruct((2, 2, 16, 2, 8), jnp.float32),
+            v=jax.ShapeDtypeStruct((2, 2, 16, 2, 8), jnp.float32),
+            length=jax.ShapeDtypeStruct((2,), jnp.int32))]]
+        spec = kvp.build_page_spec(tree, scheme=scheme, page_tokens=4,
+                                   n_pages=6, max_slots=2, max_len=16)
+        data = [jnp.asarray(rng.standard_normal((2, 1, 16, 2, 8)),
+                            jnp.float32) for _ in spec.leaves]
+        return spec, data
+
+    def test_wrappers_bit_identical(self, keys, rng):
+        spec, data = self._spec_and_data(keys, rng)
+        io = kvp.PageIO(spec, keys)
+        ids = jnp.asarray([0, 1, 2, 3], jnp.int32)
+        vn = jnp.uint32(1)
+
+        pool_fn = kvp.write_prefill(kvp.init_pool(spec), spec, keys, ids,
+                                    data, 4, vn)
+        pool_io = io.write_prefill(kvp.init_pool(spec), ids, data, 4, vn)
+        for a, b in zip(pool_fn, pool_io):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        table = jnp.asarray([[0, 1, 2, 3], [-1, -1, -1, -1]], jnp.int32)
+        lengths = jnp.asarray([16, 0], jnp.int32)
+        dense_fn, ok_fn = kvp.read_pages(pool_fn, spec, keys, table, lengths)
+        dense_io, ok_io = io.read(pool_io, table, lengths)
+        assert bool(ok_fn) and bool(ok_io)
+        for a, b in zip(dense_fn, dense_io):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        raw_fn, _ = kvp.read_pages_raw(pool_fn, spec, keys, ids)
+        raw_io, _ = io.read_raw(pool_io, ids)
+        for a, b in zip(raw_fn, raw_io):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        res_fn, ok1 = kvp.reseal_pages(pool_fn, spec, keys, ids,
+                                       jnp.uint32(2))
+        res_io, ok2 = io.reseal(pool_io, ids, jnp.uint32(2))
+        assert bool(ok1) and bool(ok2)
+        for a, b in zip(res_fn, res_io):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        dst = jnp.asarray([4, 5, spec.scratch_page, spec.scratch_page],
+                          jnp.int32)
+        mig_fn, ok3 = kvp.migrate_pages(pool_fn, spec, kvp.init_pool(spec),
+                                        spec, keys, ids, dst, vn)
+        mig_io, ok4 = io.migrate(pool_io, spec, kvp.init_pool(spec), ids,
+                                 dst, vn)
+        assert bool(ok3) and bool(ok4)
+        for a, b in zip(mig_fn, mig_io):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_copy_rebinds_within_one_pool(self, keys, rng):
+        spec, data = self._spec_and_data(keys, rng)
+        io = kvp.PageIO(spec, keys)
+        ids = jnp.asarray([0, 1], jnp.int32)
+        pool = io.write_prefill(kvp.init_pool(spec), ids, data, 2,
+                                jnp.uint32(1))
+        dst = jnp.asarray([3, 4], jnp.int32)
+        pool, ok = io.copy(pool, ids, dst, jnp.uint32(2))
+        assert bool(ok)
+        want, _ = io.read_raw(pool, ids)
+        got, ok_dst = io.read_raw(pool, dst)
+        assert bool(ok_dst)
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestPrefixCacheUnit:
+    """Host-side chain/refcount logic, no accelerator in the loop."""
+
+    def _cache(self, capacity=8):
+        return kvp.PrefixCache(page_tokens=4, capacity_pages=capacity)
+
+    def _seed(self, pc, tenant, tokens, first_page=0):
+        matched, missing = pc.missing(tenant, tokens)
+        assert matched == []
+        parent = None
+        for i, (key, n) in enumerate(missing):
+            parent = pc.insert(key, parent, first_page + i, n)
+        return missing
+
+    def test_match_walks_the_chain(self):
+        pc = self._cache()
+        toks = list(range(10, 19))                   # 4 + 4 + 1-partial
+        self._seed(pc, 0, toks)
+        assert [e.n_tokens for e in pc.match(0, toks)] == [4, 4, 1]
+        assert [e.n_tokens for e in pc.match(0, toks[:8])] == [4, 4]
+        assert [e.n_tokens for e in pc.match(0, toks[:6])] == [4]
+        assert pc.match(0, [99] + toks[1:]) == []    # divergent first token
+        assert pc.match_tokens(0, toks) == 9
+
+    def test_partial_leaf_matches_inside_longer_prompt(self):
+        pc = self._cache()
+        self._seed(pc, 0, list(range(7)))            # 4 + 3-partial
+        got = pc.match(0, list(range(9)))            # longer prompt
+        assert [e.n_tokens for e in got] == [4, 3]
+
+    def test_tenants_never_share_chains(self):
+        pc = self._cache()
+        toks = list(range(8))
+        self._seed(pc, 0, toks)
+        assert pc.match(1, toks) == []
+        matched, missing = pc.missing(1, toks)
+        assert matched == [] and len(missing) == 2
+
+    def test_refcounts_pin_whole_chain(self):
+        pc = self._cache()
+        toks = list(range(8))
+        self._seed(pc, 0, toks)
+        chain = pc.match(0, toks)
+        pc.acquire(chain)
+        assert [e.refs for e in chain] == [1, 1]
+        assert pc.reclaim(2) == []                   # pinned: nothing frees
+        pc.release(chain)
+        with pytest.raises(RuntimeError):
+            pc.release(chain)                        # refcount underflow
+
+    def test_reclaim_is_lru_leaf_first(self):
+        pc = self._cache()
+        self._seed(pc, 0, list(range(8)), first_page=0)      # pages 0, 1
+        self._seed(pc, 1, list(range(50, 54)), first_page=5)  # page 5
+        chain = pc.match(1, list(range(50, 54)))
+        pc.acquire(chain)                             # refresh LRU
+        pc.release(chain)
+        freed = pc.reclaim(3)
+        # Tenant 0's chain goes leaf-first (page 1 before its parent 0);
+        # tenant 1's page is most recently used, so it frees last.
+        assert freed == [1, 0, 5]
+
+    def test_insert_rejects_dup_and_partial_parent(self):
+        pc = self._cache(capacity=4)
+        missing = self._seed(pc, 0, list(range(7)))   # full + partial leaf
+        with pytest.raises(ValueError):
+            pc.insert(missing[0][0], None, 9, 4)      # duplicate chunk
+        partial = pc.match(0, list(range(7)))[-1]
+        assert partial.n_tokens == 3
+        with pytest.raises(ValueError):
+            pc.insert((0, b"y"), partial, 9, 4)       # extend partial leaf
+        _, plan = pc.missing(0, list(range(9)))
+        assert plan == []                             # plan agrees: no extend
+
+    def test_insert_rejects_over_capacity(self):
+        pc = self._cache(capacity=1)
+        self._seed(pc, 0, list(range(4)))
+        with pytest.raises(ValueError):
+            pc.insert((0, b"x"), None, 9, 4)
+
+    def test_flush_scoped_by_tenant(self):
+        pc = self._cache()
+        self._seed(pc, 0, list(range(8)), first_page=0)
+        self._seed(pc, 1, list(range(20, 28)), first_page=3)
+        freed = pc.flush(tenant_index=0)
+        assert sorted(freed) == [0, 1]
+        assert pc.match(1, list(range(20, 28)))       # other tenant intact
+
+
+class TestPrefixEngine:
+    @pytest.mark.parametrize("scheme", sorted(SCHEMES))
+    def test_hit_miss_cow_token_parity(self, smoke, hitmiss_prompts,
+                                       hitmiss_baseline, scheme):
+        eng, registry = _tenant_engine(smoke, scheme=scheme)
+        sess = registry.open_session("alice")
+        rids = [eng.submit(prompt=p, max_new_tokens=4, session=sess)
+                for p in hitmiss_prompts]
+        done = eng.run()
+        got = [done[r].generated for r in rids]
+        assert got == hitmiss_baseline, scheme
+        assert eng.stats["prefix_hit_pages"] > 0
+        assert eng.stats["prefill_pages_skipped"] > 0
+        assert eng.stats["prefix_cow_pages"] > 0      # p8 extends a partial
+        assert eng.stats["prefix_inserted_pages"] > 0
+
+    def test_cache_survives_rotation(self, smoke, hitmiss_prompts,
+                                     hitmiss_baseline):
+        eng, registry = _tenant_engine(smoke)
+        sess = registry.open_session("alice")
+        p7 = hitmiss_prompts[0]
+        r0 = eng.submit(prompt=p7, max_new_tokens=4, session=sess)
+        eng.run()
+        eng.rotate("alice")
+        eng.rotate("alice")          # old session epochs leave the window
+        hits0 = eng.stats["prefix_hit_pages"]
+        r1 = eng.submit(prompt=p7, max_new_tokens=4, session=sess)
+        done = eng.run()
+        assert eng.stats["prefix_hit_pages"] > hits0
+        assert done[r1].generated == hitmiss_baseline[0]
+        assert eng.requests[r0].generated == hitmiss_baseline[0]
+
+    def test_prefix_cache_requires_registry(self, smoke):
+        arch, cfg, params = smoke
+        with pytest.raises(ValueError, match="registry"):
+            SecureServingEngine(arch, cfg, params, scheme="seda",
+                                max_slots=2, page_tokens=4,
+                                pages_per_slot=4, prefix_cache=True)
+
+
+class TestPrefixIsolation:
+    def test_no_cross_tenant_match(self, smoke, hitmiss_prompts):
+        eng, registry = _tenant_engine(smoke, tenants=("alice", "bob"))
+        sa = registry.open_session("alice")
+        p7 = hitmiss_prompts[0]
+        eng.submit(prompt=p7, max_new_tokens=4, session=sa)
+        eng.run()
+        bob = registry.tenants["bob"].index
+        assert eng.prefix_cache.match(bob, p7) == []
+
+    def test_cross_tenant_replay_rejected(self, smoke, hitmiss_prompts):
+        """A byte-identical cached page forged into another tenant's
+        slot directory must fail its MAC gate (cache keys are per
+        tenant, and the fmap binding carries the owner)."""
+        eng, registry = _tenant_engine(smoke, tenants=("alice", "bob"))
+        sa = registry.open_session("alice")
+        sb = registry.open_session("bob")
+        p7 = hitmiss_prompts[0]
+        eng.submit(prompt=p7, max_new_tokens=4, session=sa)
+        eng.run()
+        entry = next(iter(eng.prefix_cache._entries.values()))
+        eng.submit(prompt=p7, max_new_tokens=6, session=sb)
+        eng.step()                   # admit bob's slot
+        slot = next(s for s in eng.slots if s is not None)
+        assert slot.tenant.tenant_id == "bob"
+        slot.pages[0] = entry.page_id         # replay alice's cache page
+        slot.page_epochs[0] = kvp.PREFIX_ROLE
+        with pytest.raises(IntegrityError):
+            for _ in range(8):
+                eng.step()
+
+    def test_reseal_on_share_crosses_tenants(self, smoke, hitmiss_prompts,
+                                             hitmiss_baseline):
+        eng, registry = _tenant_engine(smoke, tenants=("alice", "bob"))
+        sa = registry.open_session("alice")
+        sb = registry.open_session("bob")
+        p7 = hitmiss_prompts[0]
+        eng.submit(prompt=p7, max_new_tokens=4, session=sa)
+        eng.run()
+        shared = eng.share_prefix(p7, from_session=sa, to_session=sb)
+        assert shared > 0
+        assert eng.stats["prefix_shared_pages"] == shared
+        hits0 = eng.stats["prefix_hit_pages"]
+        rb = eng.submit(prompt=p7, max_new_tokens=4, session=sb)
+        done = eng.run()
+        assert eng.stats["prefix_hit_pages"] > hits0
+        assert done[rb].generated == hitmiss_baseline[0]
+
+    def test_share_needs_valid_sessions(self, smoke, hitmiss_prompts):
+        eng, registry = _tenant_engine(smoke, tenants=("alice", "bob"))
+        sa = registry.open_session("alice")
+        sb = registry.open_session("bob")
+        registry.revoke(sb)
+        with pytest.raises(PermissionError):
+            eng.share_prefix(hitmiss_prompts[0], from_session=sa,
+                             to_session=sb)
+
+
+class TestClusterPrefix:
+    def _cluster(self, smoke, prefix_cache=True):
+        arch, cfg, params = smoke
+        registry = TenantRegistry(KeyHierarchy(0), max_tenants=4)
+        registry.register("alice")
+        cluster = ClusterEngine(arch, cfg, params, shards=2, scheme="seda",
+                                max_slots=2, page_tokens=4,
+                                pages_per_slot=4, n_pages=16,
+                                registry=registry,
+                                prefix_cache=prefix_cache)
+        return cluster, registry
+
+    def test_routing_prefers_prefix_holder(self, smoke, hitmiss_prompts):
+        base, reg0 = self._cluster(smoke, prefix_cache=False)
+        s0 = reg0.open_session("alice")
+        p9 = hitmiss_prompts[3]
+        rids = [base.submit(prompt=p9, max_new_tokens=4, session=s0)
+                for _ in range(4)]
+        base.run()
+        want = [base.requests[r].generated for r in rids]
+
+        cluster, registry = self._cluster(smoke)
+        sess = registry.open_session("alice")
+        r0 = cluster.submit(prompt=p9, max_new_tokens=4, session=sess)
+        cluster.run()
+        rids2 = [cluster.submit(prompt=p9, max_new_tokens=4, session=sess)
+                 for _ in range(3)]
+        cluster.run()
+        got = [cluster.requests[r].generated for r in [r0] + rids2]
+        assert got == want
+        seeded = [e.stats["prefix_inserted_pages"] for e in cluster.engines]
+        hits = [e.stats["prefix_hit_pages"] for e in cluster.engines]
+        assert sum(1 for s in seeded if s) == 1       # cache is shard-local
+        # Every follow-up request routed to the seeded shard and hit.
+        assert hits[seeded.index(max(seeded))] > 0
+        assert cluster.engine_stats["prefix_hit_pages"] == sum(hits)
+
+    def test_engine_stats_sums_unknown_counters(self, smoke):
+        cluster, _ = self._cluster(smoke)
+        for i, eng in enumerate(cluster.engines):
+            eng.stats["brand_new_counter"] = i + 1
+        agg = cluster.engine_stats
+        assert agg["brand_new_counter"] == 3
+        assert agg["prefix_hit_pages"] == 0
