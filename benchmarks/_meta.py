@@ -1,0 +1,59 @@
+"""Provenance stamp for benchmark JSON artifacts.
+
+Every bench that writes a JSON file stamps it with a ``meta`` block —
+git commit, jax/jaxlib/python versions, platform, UTC timestamp — so a
+number in an uploaded CI artifact can always be traced back to the
+exact tree and toolchain that produced it.  ``check_fast_paths.py``
+and the other gates read only the ``benchmark``/``results`` keys and
+ignore ``meta`` entirely.
+"""
+
+from __future__ import annotations
+
+import platform
+import subprocess
+import sys
+from datetime import datetime, timezone
+
+__all__ = ["run_meta", "stamp"]
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def run_meta() -> dict:
+    """The provenance dict stamped onto every bench JSON artifact."""
+    versions = {}
+    try:
+        import jax
+        versions["jax"] = jax.__version__
+    except Exception:  # noqa: BLE001 - provenance must never kill a bench
+        versions["jax"] = "unknown"
+    try:
+        import jaxlib
+        versions["jaxlib"] = jaxlib.__version__
+    except Exception:  # noqa: BLE001
+        versions["jaxlib"] = "unknown"
+    return {
+        "git_sha": _git_sha(),
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "timestamp_utc": datetime.now(timezone.utc).isoformat(),
+        **versions,
+    }
+
+
+def stamp(payload: dict) -> dict:
+    """Return ``payload`` with a ``meta`` provenance block added."""
+    out = dict(payload)
+    out["meta"] = run_meta()
+    return out

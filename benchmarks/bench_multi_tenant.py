@@ -34,6 +34,11 @@ from repro.models.layers import init_params
 from repro.serve.engine import SecureServingEngine
 from repro.tenancy import KeyHierarchy, TenantRegistry
 
+try:                                    # package or script invocation
+    from benchmarks._meta import stamp
+except ImportError:
+    from _meta import stamp
+
 DEFAULT_TENANTS = (1, 2, 4)
 # Rotation period in ticks; 0 = never.  Must stay below the ~gen_len
 # tick run length or the rotation rows silently measure no rotations.
@@ -157,8 +162,8 @@ def main(argv=None) -> list:
               f"traffic={r.get('protection_traffic_bytes', 0):12.0f}B")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"benchmark": "multi_tenant_serving",
-                       "results": results}, f, indent=2)
+            json.dump(stamp({"benchmark": "multi_tenant_serving",
+                             "results": results}), f, indent=2)
         print(f"[mt-bench] wrote {args.json}")
     return results
 

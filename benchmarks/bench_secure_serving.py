@@ -45,6 +45,11 @@ from repro.models.layers import init_params
 from repro.serve import kv_pages as kvp
 from repro.serve.engine import SecureServingEngine
 
+try:                                    # package or script invocation
+    from benchmarks._meta import stamp
+except ImportError:
+    from _meta import stamp
+
 DEFAULT_SCHEMES = ("off", "seda", "seda512", "mgx64", "sgx64")
 DEFAULT_BATCHES = (1, 8, 32)
 DEFAULT_SCALING_CONTEXTS = (8, 24, 56)
@@ -108,6 +113,99 @@ def collect(schemes=DEFAULT_SCHEMES, batch_sizes=DEFAULT_BATCHES, *,
                                                  - base_bytes)
                 r["traffic_overhead"] = r["bytes_accessed"] / base_bytes - 1
             results.append(r)
+    return results
+
+
+def _measure_obs(arch, cfg, params, scheme: str, *, batch: int,
+                 page_tokens: int, pages_per_slot: int, gen_len: int,
+                 prompt_len: int, seed: int = 0, repeats: int = 3):
+    """One scheme's obs-overhead point: tok/s and tokens, obs off vs on.
+
+    The instrumented engine runs with tracing AND the audit log enabled
+    (the worst observability case); ``tokens_match`` asserts the
+    instrumentation is observation-only.  A warmup pass takes every
+    compile off the clock, then each variant is timed ``repeats``
+    times and the best rate kept, damping scheduler noise on loaded CI
+    runners.
+    """
+    prompts = [list(map(int,
+                        np.random.default_rng(seed + i)
+                        .integers(1, cfg.vocab, prompt_len)))
+               for i in range(batch)]
+
+    def run(obs: bool):
+        eng = SecureServingEngine(
+            arch, cfg, params, scheme=scheme, max_slots=batch,
+            page_tokens=page_tokens, pages_per_slot=pages_per_slot,
+            n_pages=batch * pages_per_slot, trace=obs, audit=obs)
+
+        def drain() -> tuple:
+            steps = 0
+            t0 = time.perf_counter()
+            while any(s is not None for s in eng.slots) or eng.waiting:
+                eng.step()
+                steps += 1
+            return steps, time.perf_counter() - t0
+
+        # Warmup pass: compiles every prefill shape and decode bucket
+        # this workload will ever touch, so the timed passes below
+        # measure steady-state ticks only (greedy decode: every pass
+        # over the same prompts generates the same tokens).
+        rids = [eng.submit(prompt=p, max_new_tokens=gen_len)
+                for p in prompts]
+        drain()
+        tokens = sorted((i, tuple(eng.requests[r].generated))
+                        for i, r in enumerate(rids))
+        best = 0.0
+        for _ in range(repeats):
+            for p in prompts:
+                eng.submit(prompt=p, max_new_tokens=gen_len)
+            steps, dt = drain()
+            best = max(best, batch * steps / max(dt, 1e-9))
+        return eng, best, tokens
+
+    _, best_off, tokens_off = run(False)
+    eng_on, best_on, tokens_on = run(True)
+    doc = eng_on.export_trace()
+    row = {
+        "scheme": scheme,
+        "batch": batch,
+        "tok_per_s_off": best_off,
+        "tok_per_s_on": best_on,
+        "obs_overhead": 1.0 - best_on / max(best_off, 1e-9),
+        "tokens_match": tokens_off == tokens_on,
+        "trace_events": len(doc["traceEvents"]),
+        "audit_records": len(eng_on.audit),
+        "audit_chain_ok": eng_on.audit.verify_chain(),
+    }
+    return row, eng_on
+
+
+def collect_obs_overhead(schemes=DEFAULT_SCHEMES, *,
+                         arch_name: str = "minitron-4b", batch: int = 4,
+                         page_tokens: int = 8, pages_per_slot: int = 4,
+                         gen_len: int = 8, prompt_len: int = 9,
+                         trace_out=None, metrics_json=None) -> list:
+    """Instrumented-vs-bare sweep: full observability must be ~free.
+
+    Optionally writes the LAST scheme's instrumented artifacts (Chrome
+    trace, metrics snapshot) — the CI perf-smoke uploads those.
+    """
+    arch = get_arch(arch_name)
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    results, eng = [], None
+    for scheme in schemes:
+        row, eng = _measure_obs(
+            arch, cfg, params, scheme, batch=batch, page_tokens=page_tokens,
+            pages_per_slot=pages_per_slot, gen_len=gen_len,
+            prompt_len=prompt_len)
+        results.append(row)
+    if trace_out and eng is not None:
+        eng.export_trace(trace_out)
+    if metrics_json and eng is not None:
+        with open(metrics_json, "w") as f:
+            json.dump(eng.snapshot(), f, indent=2, sort_keys=True)
     return results
 
 
@@ -336,7 +434,20 @@ def main(argv=None) -> list:
                          "results to this file")
     ap.add_argument("--hit-rates",
                     default=",".join(map(str, DEFAULT_HIT_RATES)))
+    ap.add_argument("--obs-json", default=None,
+                    help="also run the observability-overhead sweep "
+                         "(tok/s + token identity, tracing+audit on vs "
+                         "off) and write its results to this file")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the obs sweep's Chrome trace here "
+                         "(needs --obs-json)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the obs sweep's metrics snapshot here "
+                         "(needs --obs-json)")
     args = ap.parse_args(argv)
+    if (args.trace_out or args.metrics_json) and not args.obs_json:
+        raise SystemExit("--trace-out/--metrics-json need --obs-json "
+                         "(they dump the instrumented sweep's engine)")
 
     results = collect(
         schemes=tuple(args.schemes.split(",")),
@@ -350,8 +461,8 @@ def main(argv=None) -> list:
               f"traffic={r.get('protection_traffic_bytes', 0):12.0f}B")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"benchmark": "secure_serving", "results": results}, f,
-                      indent=2)
+            json.dump(stamp({"benchmark": "secure_serving",
+                             "results": results}), f, indent=2)
         print(f"[serve-bench] wrote {args.json}")
     if args.decode_scaling_json:
         scaling = collect_decode_scaling(
@@ -364,8 +475,8 @@ def main(argv=None) -> list:
                   f"page_reads/step={r['page_reads_per_step']:.1f} "
                   f"(all-resident {r['all_resident_page_reads_per_step']})")
         with open(args.decode_scaling_json, "w") as f:
-            json.dump({"benchmark": "decode_scaling", "results": scaling}, f,
-                      indent=2)
+            json.dump(stamp({"benchmark": "decode_scaling",
+                             "results": scaling}), f, indent=2)
         print(f"[serve-bench] wrote {args.decode_scaling_json}")
     if args.shared_prefix_json:
         prefix = collect_shared_prefix(
@@ -378,9 +489,27 @@ def main(argv=None) -> list:
                   f"cow={r['prefix_cow_pages']:<2} "
                   f"tokens_match={r['tokens_match']}")
         with open(args.shared_prefix_json, "w") as f:
-            json.dump({"benchmark": "shared_prefix", "results": prefix}, f,
-                      indent=2)
+            json.dump(stamp({"benchmark": "shared_prefix",
+                             "results": prefix}), f, indent=2)
         print(f"[serve-bench] wrote {args.shared_prefix_json}")
+    if args.obs_json:
+        obs = collect_obs_overhead(
+            tuple(args.schemes.split(",")), arch_name=args.arch,
+            page_tokens=args.page_tokens,
+            pages_per_slot=args.pages_per_slot, gen_len=args.gen_len,
+            prompt_len=args.prompt_len, trace_out=args.trace_out,
+            metrics_json=args.metrics_json)
+        for r in obs:
+            print(f"[serve-bench] obs scheme={r['scheme']:<8} "
+                  f"off={r['tok_per_s_off']:9.1f} "
+                  f"on={r['tok_per_s_on']:9.1f} tok/s "
+                  f"({r['obs_overhead']:+.1%}) "
+                  f"tokens_match={r['tokens_match']} "
+                  f"trace_events={r['trace_events']}")
+        with open(args.obs_json, "w") as f:
+            json.dump(stamp({"benchmark": "obs_overhead", "results": obs}),
+                      f, indent=2)
+        print(f"[serve-bench] wrote {args.obs_json}")
     return results
 
 

@@ -23,6 +23,11 @@ from repro.models.layers import init_params
 from repro.train.optimizer import AdamWConfig, init_opt_state
 from repro.train.train_step import make_train_step
 
+try:                                    # package or script invocation
+    from benchmarks._meta import stamp
+except ImportError:
+    from _meta import stamp
+
 
 def run() -> list:
     arch = get_arch("minitron-4b")
@@ -91,8 +96,8 @@ def main(argv=None) -> list:
               f"{row['us_per_call']:12.1f}us  {row['derived']}")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"benchmark": "secure_step", "results": rows}, f,
-                      indent=2)
+            json.dump(stamp({"benchmark": "secure_step", "results": rows}),
+                      f, indent=2)
         print(f"[secure-step] wrote {args.json}")
     return rows
 

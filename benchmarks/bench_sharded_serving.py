@@ -42,6 +42,11 @@ from repro.models import lm as lm_mod  # noqa: E402
 from repro.models.layers import init_params  # noqa: E402
 from repro.serve.cluster import ClusterEngine  # noqa: E402
 
+try:                                    # package or script invocation
+    from benchmarks._meta import stamp
+except ImportError:
+    from _meta import stamp  # noqa: E402
+
 DEFAULT_SHARDS = (1, 2, 4)
 
 
@@ -187,9 +192,9 @@ def main(argv=None) -> list:
               f"migrations={r['migrations']}")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"benchmark": "sharded_serving",
-                       "device_count": jax.local_device_count(),
-                       "results": results}, f, indent=2)
+            json.dump(stamp({"benchmark": "sharded_serving",
+                             "device_count": jax.local_device_count(),
+                             "results": results}), f, indent=2)
         print(f"[sharded-bench] wrote {args.json}")
     return results
 

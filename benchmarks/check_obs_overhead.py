@@ -1,0 +1,66 @@
+"""Gate the observability overhead recorded by the obs sweep.
+
+    python benchmarks/check_obs_overhead.py bench-obs-overhead.json
+
+Reads the ``obs_overhead`` JSON written by ``bench_secure_serving.py
+--obs-json`` and fails (exit 1) when any scheme's fully-instrumented
+run (tracing + metrics + audit) breaks the contract:
+
+* ``tokens_match`` — instrumentation must be observation-only: the
+  generated tokens are bit-identical with obs on and off;
+* ``tok_per_s_on >= (1 - tolerance) * tok_per_s_off`` — the
+  instrumented rate stays within ``--tolerance`` (default 5%) of the
+  bare rate;
+* the trace recorded events and the audit chain verifies.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(data: dict, tolerance: float) -> list:
+    """Returns a list of failure strings (empty = pass)."""
+    if data.get("benchmark") != "obs_overhead":
+        return [f"not an obs_overhead artifact: {data.get('benchmark')!r}"]
+    failures = []
+    for r in data["results"]:
+        tag = f"scheme={r['scheme']} batch={r['batch']}"
+        if not r["tokens_match"]:
+            failures.append(f"{tag}: tokens differ with observability on")
+        floor = (1.0 - tolerance) * r["tok_per_s_off"]
+        if r["tok_per_s_on"] < floor:
+            failures.append(
+                f"{tag}: instrumented {r['tok_per_s_on']:.1f} tok/s is "
+                f"below {floor:.1f} ({tolerance:.0%} under bare "
+                f"{r['tok_per_s_off']:.1f})")
+        if r["trace_events"] <= 0:
+            failures.append(f"{tag}: tracer recorded no events")
+        if not r["audit_chain_ok"]:
+            failures.append(f"{tag}: audit chain failed verification")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("json_path")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="allowed fractional tok/s regression (default 5%%)")
+    args = ap.parse_args(argv)
+    with open(args.json_path) as f:
+        data = json.load(f)
+    failures = check(data, args.tolerance)
+    for msg in failures:
+        print(f"[check-obs] FAIL {msg}")
+    if failures:
+        return 1
+    n = len(data["results"])
+    print(f"[check-obs] OK: {n} schemes within {args.tolerance:.0%}, "
+          f"tokens identical, traces non-empty, audit chains verify")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

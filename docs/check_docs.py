@@ -110,6 +110,17 @@ def check_doctests(path: pathlib.Path) -> list:
     return errors
 
 
+def _check_stats_module():
+    """Load the stats gate (sibling file; importlib so both the script
+    and the tests' file-path loading of THIS module find it)."""
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_stats", pathlib.Path(__file__).parent / "check_stats.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
 def run_checks() -> list:
     errors = []
     for path in doc_files():
@@ -119,6 +130,7 @@ def run_checks() -> list:
         errors += check_links(path)
         errors += check_test_refs(path)
         errors += check_doctests(path)
+    errors += _check_stats_module().run_checks()
     return errors
 
 

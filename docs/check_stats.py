@@ -1,0 +1,152 @@
+"""Stats gate: every metric name used is declared AND documented.
+
+The observability layer (``src/repro/obs/metrics.py``) declares every
+counter/gauge/histogram once, with a help string.  This gate keeps the
+three surfaces that mention metric names from drifting apart:
+
+* **code** — AST-scans ``src/repro/serve/`` (plus the serve launcher)
+  for ``stats["..."]`` subscripts and ``metrics.counter/gauge/
+  histogram("...")`` declaration calls: every literal name must be
+  declared in the canonical dicts (a typo'd key can no longer mint a
+  silent counter), and a non-literal key inside the serving stack is
+  itself an error;
+* **architecture doc** — every declared *counter* must appear
+  (backticked) in the stats table of ``docs/architecture.md`` §8;
+* **observability doc** — every declared counter, gauge, and
+  histogram must appear (backticked) in ``docs/observability.md``.
+
+Everything is parsed from source text — no ``repro`` import — so the
+gate runs in the dependency-free CI docs job.  ``docs/check_docs.py``
+runs it as part of ``run_checks()``; ``tests/test_docs.py`` covers it
+in tier-1.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+METRICS_PY = ROOT / "src" / "repro" / "obs" / "metrics.py"
+ARCH_MD = ROOT / "docs" / "architecture.md"
+OBS_MD = ROOT / "docs" / "observability.md"
+
+_DECL_DICTS = {
+    "ENGINE_COUNTERS": "counter",
+    "CLUSTER_COUNTERS": "counter",
+    "ENGINE_GAUGES": "gauge",
+    "ENGINE_HISTOGRAMS": "histogram",
+    "CLUSTER_HISTOGRAMS": "histogram",
+}
+
+
+def scanned_files() -> list:
+    """The serving-stack sources whose metric names this gate owns."""
+    return sorted((ROOT / "src" / "repro" / "serve").glob("*.py")) + [
+        ROOT / "src" / "repro" / "launch" / "serve.py"]
+
+
+def declared() -> dict:
+    """``{kind: set(names)}`` parsed from the canonical metrics dicts."""
+    tree = ast.parse(METRICS_PY.read_text())
+    out = {"counter": set(), "gauge": set(), "histogram": set()}
+    for node in tree.body:
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            continue
+        kind = _DECL_DICTS.get(node.targets[0].id)
+        if kind is None or not isinstance(node.value, ast.Dict):
+            continue
+        for key in node.value.keys:
+            if isinstance(key, ast.Constant) and isinstance(key.value, str):
+                out[kind].add(key.value)
+    return out
+
+
+def _is_stats_subscript(node: ast.Subscript) -> bool:
+    base = node.value
+    return ((isinstance(base, ast.Attribute) and base.attr == "stats")
+            or (isinstance(base, ast.Name) and base.id == "stats"))
+
+
+def used_in(path: pathlib.Path) -> tuple:
+    """(stats keys, declaration-call names per kind, errors) for a file."""
+    tree = ast.parse(path.read_text())
+    keys, calls, errors = set(), {"counter": set(), "gauge": set(),
+                                  "histogram": set()}, []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Subscript) and _is_stats_subscript(node):
+            if isinstance(node.slice, ast.Constant) and \
+                    isinstance(node.slice.value, str):
+                keys.add(node.slice.value)
+            else:
+                errors.append(
+                    f"{path.relative_to(ROOT)}:{node.lineno}: non-literal "
+                    f"stats[...] key (the gate cannot check it)")
+        elif isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in calls and node.args:
+            first = node.args[0]
+            if isinstance(first, ast.Constant) and \
+                    isinstance(first.value, str):
+                calls[node.func.attr].add(first.value)
+    return keys, calls, errors
+
+
+def _documented(path: pathlib.Path) -> set:
+    """Backticked identifiers mentioned anywhere in one markdown file."""
+    return set(re.findall(r"`([a-z][a-z0-9_]*)`", path.read_text()))
+
+
+def run_checks() -> list:
+    decls = declared()
+    counters = decls["counter"]
+    errors = []
+    if not counters:
+        return [f"no counter declarations parsed from "
+                f"{METRICS_PY.relative_to(ROOT)}"]
+    for path in scanned_files():
+        keys, calls, errs = used_in(path)
+        errors += errs
+        rel = path.relative_to(ROOT)
+        for key in sorted(keys - counters):
+            errors.append(f"{rel}: stats[{key!r}] is not a declared counter")
+        for kind, names in calls.items():
+            for name in sorted(names - decls[kind]):
+                errors.append(f"{rel}: {kind} {name!r} is not in the "
+                              f"canonical declaration dicts")
+    if ARCH_MD.exists():
+        table = _documented(ARCH_MD)
+        for name in sorted(counters - table):
+            errors.append(f"architecture.md: counter `{name}` missing from "
+                          f"the stats table")
+    else:
+        errors.append("docs/architecture.md does not exist")
+    if OBS_MD.exists():
+        documented = _documented(OBS_MD)
+        for kind in ("counter", "gauge", "histogram"):
+            for name in sorted(decls[kind] - documented):
+                errors.append(f"observability.md: {kind} `{name}` is "
+                              f"undocumented")
+    else:
+        errors.append("docs/observability.md does not exist")
+    return errors
+
+
+def main() -> int:
+    errors = run_checks()
+    for e in errors:
+        print(f"[stats] FAIL: {e}")
+    if errors:
+        return 1
+    decls = declared()
+    print(f"[stats] ok ({len(decls['counter'])} counters, "
+          f"{len(decls['gauge'])} gauges, "
+          f"{len(decls['histogram'])} histograms declared + documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

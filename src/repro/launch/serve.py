@@ -41,6 +41,8 @@ initializes)::
 from __future__ import annotations
 
 import argparse
+import json
+import logging
 import os
 import sys
 import time
@@ -83,6 +85,40 @@ from repro.models.layers import init_params, shape_structs  # noqa: E402
 from repro.serve.serve_step import (greedy_sample, make_decode_step,  # noqa: E402
                                     make_prefill_step)
 
+log = logging.getLogger("repro.serve")
+
+
+class _JsonFormatter(logging.Formatter):
+    """One JSON object per record: ts/level/event/msg + extra fields."""
+
+    def format(self, record: logging.LogRecord) -> str:
+        doc = {"ts": round(record.created, 3),
+               "level": record.levelname.lower(),
+               "event": getattr(record, "event", "message"),
+               "msg": record.getMessage()}
+        doc.update(getattr(record, "fields", None) or {})
+        return json.dumps(doc, sort_keys=True)
+
+
+def _setup_logging(args) -> None:
+    """Route CLI output through the ``repro.serve`` logger.
+
+    Default: plain messages on stdout, character-identical to the old
+    ``print`` output.  ``--json-logs`` swaps in one structured JSON
+    record per line; ``--quiet`` drops everything below WARNING.
+    """
+    log.handlers.clear()
+    handler = logging.StreamHandler(sys.stdout)
+    handler.setFormatter(_JsonFormatter() if args.json_logs
+                         else logging.Formatter("%(message)s"))
+    log.addHandler(handler)
+    log.setLevel(logging.WARNING if args.quiet else logging.INFO)
+    log.propagate = False
+
+
+def _log(event: str, msg: str, **fields) -> None:
+    log.info(msg, extra={"event": event, "fields": fields})
+
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
@@ -111,7 +147,22 @@ def main(argv=None) -> dict:
                     help="serve through an N-shard cluster engine, one "
                          "paged pool per device (--engine paged only; "
                          "0 = single shard engine)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress informational output")
+    ap.add_argument("--json-logs", action="store_true",
+                    help="one structured JSON record per log line")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable tick-phase tracing; write Chrome "
+                         "trace-event JSON here (--engine paged only)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write a metrics snapshot (JSON) after the run")
+    ap.add_argument("--metrics-prom", default=None, metavar="PATH",
+                    help="write Prometheus text exposition after the run")
+    ap.add_argument("--audit-out", default=None, metavar="PATH",
+                    help="enable the hash-chained audit log; dump it "
+                         "here as JSON lines (--engine paged only)")
     args = ap.parse_args(argv)
+    _setup_logging(args)
     if args.tenants and args.engine != "paged":
         raise SystemExit("--tenants needs --engine paged")
     if args.shards and args.engine != "paged":
@@ -119,6 +170,11 @@ def main(argv=None) -> dict:
     if args.rotate_every and not args.tenants:
         raise SystemExit("--rotate-every needs --tenants (there are no "
                          "tenant keys to rotate otherwise)")
+    if args.engine != "paged" and (args.trace_out or args.metrics_json
+                                   or args.metrics_prom or args.audit_out):
+        raise SystemExit("--trace-out/--metrics-json/--metrics-prom/"
+                         "--audit-out need --engine paged (the simple "
+                         "loop has no observability surface)")
 
     arch = get_arch(args.arch)
     if arch.kind == "encdec":
@@ -131,10 +187,11 @@ def main(argv=None) -> dict:
         step = latest_step(args.ckpt_dir)
         path = os.path.join(args.ckpt_dir, f"step_{step:08d}")
         params, _ = load_checkpoint(path, shape_structs(specs), keys)
-        print(f"[serve] loaded + verified checkpoint {path}")
+        _log("checkpoint", f"[serve] loaded + verified checkpoint {path}",
+             path=path)
     else:
         params = init_params(specs, jax.random.PRNGKey(args.seed))
-        print("[serve] no checkpoint: serving fresh init")
+        _log("checkpoint", "[serve] no checkpoint: serving fresh init")
 
     if args.engine == "paged":
         return _serve_paged(arch, cfg, params, args)
@@ -158,8 +215,9 @@ def main(argv=None) -> dict:
     dt = time.perf_counter() - t0
     toks = jnp.concatenate(out, axis=1)
     rate = args.batch * args.gen_len / max(dt, 1e-9)
-    print(f"[serve] {args.gen_len} tokens x {args.batch} requests "
-          f"({rate:.1f} tok/s)")
+    _log("summary", f"[serve] {args.gen_len} tokens x {args.batch} requests "
+         f"({rate:.1f} tok/s)",
+         gen_len=args.gen_len, batch=args.batch, tok_per_s=rate)
     return {"tokens": np.asarray(toks), "tok_per_s": rate}
 
 
@@ -179,6 +237,7 @@ def _serve_paged(arch, cfg, params, args) -> dict:
         for t in range(args.tenants):
             registry.register(f"tenant-{t}")
             sessions.append(registry.open_session(f"tenant-{t}"))
+    obs_kw = dict(trace=bool(args.trace_out), audit=bool(args.audit_out))
     if args.shards:
         from repro.serve.cluster import ClusterEngine
         per_shard = -(-args.batch // args.shards)
@@ -188,14 +247,14 @@ def _serve_paged(arch, cfg, params, args) -> dict:
             pages_per_slot=pages_per_slot,
             n_pages=-(-n_pages // args.shards),
             keys=SecureKeys.derive(args.seed),
-            registry=registry, rotate_every=args.rotate_every)
+            registry=registry, rotate_every=args.rotate_every, **obs_kw)
         stats_of = lambda: dict(eng.engine_stats, **eng.stats)  # noqa: E731
     else:
         eng = SecureServingEngine(
             arch, cfg, params, scheme=args.scheme, max_slots=args.batch,
             page_tokens=args.page_tokens, pages_per_slot=pages_per_slot,
             n_pages=n_pages, keys=SecureKeys.derive(args.seed),
-            registry=registry, rotate_every=args.rotate_every)
+            registry=registry, rotate_every=args.rotate_every, **obs_kw)
         stats_of = lambda: eng.stats  # noqa: E731
     rng = np.random.default_rng(args.seed)
     rids = []
@@ -214,20 +273,51 @@ def _serve_paged(arch, cfg, params, args) -> dict:
         f"/{args.tenants} tenants" if args.tenants else "") + (
         f"/{args.shards} shards" if args.shards else "")
     extra = (f", {stats['migrations']} migrations" if args.shards else "")
-    print(f"[serve] {mode}: {n_tokens} tokens over "
-          f"{args.batch} requests ({rate:.1f} tok/s incl. compile), "
-          f"{stats['preemptions']} preemptions, "
-          f"{stats['rotations']} key rotations{extra}, "
-          f"deferred {'root' if args.shards else 'pool'} MAC "
-          f"{'OK' if eng.deferred_check() else 'FAIL'}")
+    mac_ok = eng.deferred_check()
+    _log("summary", f"[serve] {mode}: {n_tokens} tokens over "
+         f"{args.batch} requests ({rate:.1f} tok/s incl. compile), "
+         f"{stats['preemptions']} preemptions, "
+         f"{stats['rotations']} key rotations{extra}, "
+         f"deferred {'root' if args.shards else 'pool'} MAC "
+         f"{'OK' if mac_ok else 'FAIL'}",
+         mode=mode, tokens=n_tokens, requests=args.batch, tok_per_s=rate,
+         ticks=eng.tick, stats=dict(stats), deferred_mac_ok=bool(mac_ok))
     if done.latency:
-        print(f"[serve] latency (ticks): "
-              f"ttft p50={done.latency['p50_ttft_ticks']:.1f} "
-              f"p95={done.latency['p95_ttft_ticks']:.1f} "
-              f"p99={done.latency['p99_ttft_ticks']:.1f}")
+        _log("latency", f"[serve] latency (ticks): "
+             f"ttft p50={done.latency['p50_ttft_ticks']:.1f} "
+             f"p95={done.latency['p95_ttft_ticks']:.1f} "
+             f"p99={done.latency['p99_ttft_ticks']:.1f}",
+             **done.latency)
+    _dump_obs(eng, args)
     toks = np.asarray([done[r].generated for r in rids], np.int32)
     return {"tokens": toks, "tok_per_s": rate, "stats": stats,
             "latency": done.latency}
+
+
+def _dump_obs(eng, args) -> None:
+    """Write the requested observability artifacts after a paged run."""
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(eng.snapshot(), f, indent=2, sort_keys=True)
+        _log("metrics", f"[serve] metrics snapshot -> {args.metrics_json}",
+             path=args.metrics_json)
+    if args.metrics_prom:
+        with open(args.metrics_prom, "w") as f:
+            f.write(eng.prometheus())
+        _log("metrics", f"[serve] prometheus text -> {args.metrics_prom}",
+             path=args.metrics_prom)
+    if args.trace_out:
+        doc = eng.export_trace(args.trace_out)
+        _log("trace", f"[serve] {len(doc['traceEvents'])} trace events -> "
+             f"{args.trace_out}",
+             path=args.trace_out, events=len(doc["traceEvents"]))
+    if args.audit_out:
+        eng.audit.dump(args.audit_out)
+        _log("audit", f"[serve] {len(eng.audit)} audit records "
+             f"(chain {'OK' if eng.audit.verify_chain() else 'BROKEN'}) -> "
+             f"{args.audit_out}",
+             path=args.audit_out, records=len(eng.audit),
+             chain_ok=eng.audit.verify_chain())
 
 
 if __name__ == "__main__":

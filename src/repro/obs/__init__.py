@@ -1,0 +1,30 @@
+"""Observability layer for the secure serving stack.
+
+Three cooperating pieces, all host-side and dependency-free:
+
+* :mod:`repro.obs.metrics` — a declared-metrics registry (counters,
+  gauges, histograms) that replaces the engines' raw ``stats`` dicts
+  while keeping the old dict API bit-compatible via
+  :class:`~repro.obs.metrics.StatsView`;
+* :mod:`repro.obs.trace` — a ring-buffer span tracer for the tick
+  phases, exporting Chrome trace-event JSON (Perfetto-loadable);
+* :mod:`repro.obs.audit` — an append-only SHA-256 hash-chained audit
+  log of security-relevant events (integrity verdicts, rotations,
+  reseals, migrations, prefix cache traffic) whose
+  ``verify_chain()`` makes tampering with the log itself detectable.
+
+Everything here is disabled-by-default on the hot path: counters cost
+one attribute bump (same order as the dict they replaced), gauges are
+sampled lazily at snapshot time, and span/phase timing only runs when
+a tracer was explicitly attached (``Engine(trace=...)``).
+"""
+
+from repro.obs.audit import AuditLog
+from repro.obs.metrics import (CLUSTER_COUNTERS, ENGINE_COUNTERS,
+                               ENGINE_GAUGES, ENGINE_HISTOGRAMS,
+                               MetricsRegistry, StatsView)
+from repro.obs.trace import SpanTracer
+
+__all__ = ["AuditLog", "CLUSTER_COUNTERS", "ENGINE_COUNTERS",
+           "ENGINE_GAUGES", "ENGINE_HISTOGRAMS", "MetricsRegistry",
+           "SpanTracer", "StatsView"]

@@ -40,12 +40,16 @@ replay rejection — behaves identically.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
 import jax
 
 from repro.core import secure_memory as sm
+from repro.obs import audit as audit_mod
+from repro.obs import metrics as metrics_mod
+from repro.obs import trace as trace_mod
 from repro.serve import kv_pages as kvp
 from repro.serve.engine import (IntegrityError, RunResult,
                                 SecureServingEngine, SubmitAPI,
@@ -79,7 +83,8 @@ class ClusterEngine(SubmitAPI):
                  keys: Optional[sm.SecureKeys] = None,
                  registry=None, rotate_every: int = 0,
                  defer_interval: int = 16, devices=None,
-                 migrate: bool = True, **engine_kw):
+                 migrate: bool = True, trace=None, audit=None,
+                 **engine_kw):
         if shards < 1:
             raise ValueError("need at least one shard")
         if rotate_every and registry is None:
@@ -98,6 +103,15 @@ class ClusterEngine(SubmitAPI):
         self.migrate = migrate
         if keys is None:
             keys = sm.SecureKeys.derive(0)
+        # One chained audit log for the whole cluster: every shard's
+        # records land on a single chain (the shard id is a field), so
+        # cross-shard event ordering is itself tamper-evident.
+        if isinstance(audit, audit_mod.AuditLog):
+            self.audit = audit                # adopt even when empty/falsy
+        elif audit:
+            self.audit = audit_mod.AuditLog()
+        else:
+            self.audit = None
         self.engines = []
         for s in range(shards):
             dev = devices[s]
@@ -110,7 +124,8 @@ class ClusterEngine(SubmitAPI):
                 registry=registry, rotate_every=0,
                 shard_id=s, n_shards=shards, device=dev,
                 preempt_hook=self._take_preempted,
-                defer_interval=defer_interval, **engine_kw))
+                defer_interval=defer_interval,
+                trace=bool(trace), audit=self.audit, **engine_kw))
         self.sharded = ShardedKVPool(self.engines)
         self.devices = devices
         self.tick = 0
@@ -118,8 +133,79 @@ class ClusterEngine(SubmitAPI):
         self._next_rid = 0
         self._rotate_rr = 0
         self._orphans: deque = deque()      # preempted, awaiting re-route
-        self.stats = {"migrations": 0, "root_checks": 0,
-                      "rerouted_preemptions": 0}
+        self.metrics = metrics_mod.MetricsRegistry()
+        for name, help_ in metrics_mod.CLUSTER_COUNTERS.items():
+            self.metrics.counter(name, help_)
+        self._stats = metrics_mod.StatsView(self.metrics)
+        # The cluster's own tracer sits on its own pid track (one past
+        # the last shard) so the cluster_tick span does not interleave
+        # with shard 0's phase spans.  Each shard engine traces under
+        # pid=shard_id (they build their own tracers above).
+        self.tracer = None
+        if trace:
+            self.tracer = (trace if isinstance(trace, trace_mod.SpanTracer)
+                           else trace_mod.SpanTracer(pid=shards))
+            self._instrument_step()
+
+    # -- observability -------------------------------------------------------
+
+    def _instrument_step(self) -> None:
+        """Wrap :meth:`step` with a span + wall-clock histogram."""
+        hist = self.metrics.histogram(
+            "cluster_tick_seconds",
+            metrics_mod.CLUSTER_HISTOGRAMS["cluster_tick_seconds"])
+        tracer, inner = self.tracer, self.step
+
+        def wrapper(*a, **kw):
+            t0 = time.perf_counter_ns()
+            try:
+                return inner(*a, **kw)
+            finally:
+                t1 = time.perf_counter_ns()
+                tracer.add("cluster_tick", t0, t1, {"tick": self.tick})
+                hist.observe((t1 - t0) / 1e9)
+
+        self.step = wrapper
+
+    @property
+    def stats(self):
+        """The cluster-level counters under the old dict API."""
+        return self._stats
+
+    def _audit(self, event: str, **fields) -> None:
+        """Append one cluster-level security event (no-op when off)."""
+        if self.audit is not None:
+            self.audit.append(event, shard=-1, tick=self.tick, **fields)
+
+    def snapshot(self) -> dict:
+        """Cluster metrics + every shard's snapshot + the rollup.
+
+        ``shards`` carries each engine's own snapshot (labeled
+        ``shard=<id>``); ``rollup`` is the summed counter view
+        (:attr:`engine_stats` — ``rotations`` takes the max, not the
+        sum).
+        """
+        out = self.metrics.snapshot()
+        out["shards"] = [e.snapshot() for e in self.engines]
+        out["rollup"] = dict(self.engine_stats)
+        return out
+
+    def prometheus(self) -> str:
+        """Prometheus text: cluster metrics + per-shard blocks
+        (each shard's samples carry its ``shard=`` label)."""
+        return "".join([self.metrics.prometheus()]
+                       + [e.prometheus() for e in self.engines])
+
+    def export_trace(self, path: Optional[str] = None) -> dict:
+        """One Chrome trace merging cluster + every shard's spans
+        (per-shard ``pid`` tracks show the dispatch/collect overlap)."""
+        if self.tracer is None:
+            raise ValueError("cluster was built without trace=...")
+        extra = []
+        for engine in self.engines:
+            if engine.tracer is not None:
+                extra += engine.tracer.events()
+        return self.tracer.export(path, extra_events=extra)
 
     # -- submission / routing ------------------------------------------------
 
@@ -265,8 +351,9 @@ class ClusterEngine(SubmitAPI):
     def _root_check(self) -> None:
         self.stats["root_checks"] += 1
         if not self.sharded.deferred_root_check():
-            raise IntegrityError(
-                f"cluster root MAC check failed (tick {self.tick})")
+            msg = f"cluster root MAC check failed (tick {self.tick})"
+            self._audit("integrity_error", op="root_check", detail=msg)
+            raise IntegrityError(msg)
 
     def deferred_check(self) -> bool:
         """Cluster root MAC + every shard's deferred pool MAC."""
@@ -372,17 +459,20 @@ class ClusterEngine(SubmitAPI):
                 try:
                     rows[j] = self.registry.key_row(tenant.index, e)
                 except KeyError as exc:
-                    raise IntegrityError(
+                    raise es._integrity_fail(
                         f"migration source shard {src} slot {slot_idx} "
-                        f"page {j}: {exc.args[0]}") from exc
+                        f"page {j}: {exc.args[0]}",
+                        op="migration", tenant=tenant.tenant_id,
+                        to_shard=dst) from exc
             owners = np.full((p,), tenant.index, np.uint32)
             leaf_pages, ok = es._page_reader(p)(
                 es.pool, jnp.asarray(src_ids), es._bank(),
                 jnp.asarray(rows), jnp.asarray(owners), jnp.asarray(epochs))
-        if not bool(ok):
-            raise IntegrityError(
+        if not es.page_io.report_verdict(ok, "migration"):
+            raise es._integrity_fail(
                 f"secure migration: source shard {src} page verification "
-                f"failed (slot {slot_idx}, scheme={es.scheme})")
+                f"failed (slot {slot_idx}, scheme={es.scheme})",
+                op="migration", to_shard=dst)
         dst_pages = [ed.free_pages.pop() for _ in range(n)]
         dst_ids = np.full((p,), ed.spec.scratch_page, np.int32)
         dst_ids[:n] = dst_pages
@@ -425,3 +515,5 @@ class ClusterEngine(SubmitAPI):
         ed.slots[dst_slot] = slot
         ed.page_table.install(dst_slot, slot)
         self.stats["migrations"] += 1
+        self._audit("migration", from_shard=src, to_shard=dst, pages=n,
+                    tenant=tenant.tenant_id if tenant is not None else None)

@@ -67,6 +67,7 @@ is plain Python; everything that touches tensor data stays inside jit.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from collections import deque
 from typing import Optional
@@ -80,6 +81,9 @@ from repro.core import secure_memory as sm
 from repro.core import vn as vn_mod
 from repro.core.secure_exec import SCHEMES
 from repro.models import lm as lm_mod
+from repro.obs import audit as audit_mod
+from repro.obs import metrics as metrics_mod
+from repro.obs import trace as trace_mod
 from repro.serve import kv_pages as kvp
 from repro.serve.serve_step import greedy_sample
 
@@ -104,6 +108,7 @@ class Request:
     first_tick: Optional[int] = None    # tick the first token appeared
     done_tick: Optional[int] = None
     share_prefix: bool = True       # may use / populate the prefix cache
+    submit_time: float = 0.0        # perf_counter at submit (ttft_seconds)
 
     @property
     def done(self) -> bool:
@@ -287,7 +292,8 @@ class SecureServingEngine(SubmitAPI):
                  shard_id: int = 0, n_shards: int = 1,
                  device=None, preempt_hook=None,
                  prefix_cache: bool = False,
-                 prefix_cache_pages: Optional[int] = None):
+                 prefix_cache_pages: Optional[int] = None,
+                 trace=None, audit=None):
         if arch.kind != "lm":
             raise ValueError("the paged serving engine supports decoder-only "
                              "LMs (enc-dec serving stays on serve_step)")
@@ -387,15 +393,7 @@ class SecureServingEngine(SubmitAPI):
         self._epoch = 0
         self.tick = 0
         self._prefill_shapes: set = set()
-        self.stats = {"admitted": 0, "preemptions": 0, "decode_steps": 0,
-                      "deferred_checks": 0, "rotations": 0,
-                      "prefill_compiles": 0, "reseals": 0,
-                      "uniform_fast_ticks": 0, "fused_mixed_ticks": 0,
-                      "fused_write_ticks": 0,
-                      "decode_bucket_compiles": 0, "decode_page_reads": 0,
-                      "prefix_hit_pages": 0, "prefix_cow_pages": 0,
-                      "prefix_inserted_pages": 0, "prefix_shared_pages": 0,
-                      "prefill_pages_skipped": 0}
+        self._init_obs(trace, audit)
 
         # Two-level page table: the slot directory (level 1) feeds pow2
         # page-count-bucketed decode windows (level 2); the decode step
@@ -435,6 +433,153 @@ class SecureServingEngine(SubmitAPI):
         the cluster's sharded pool mirrors per-shard deferred MACs into
         its root MAC this way, without syncing the device."""
         self._pool_listeners.append(listener)
+
+    # -- observability (metrics / tracing / audit) ---------------------------
+
+    def _init_obs(self, trace, audit) -> None:
+        """Wire the observability layer (:mod:`repro.obs`).
+
+        The metrics registry is always on — its counters ARE the old
+        ``stats`` dict, one attribute bump per event — and gauges are
+        lazy callbacks sampled only at :meth:`snapshot` time.  The span
+        tracer and the wall-clock phase histograms only exist when
+        ``trace`` was passed (``True`` or a
+        :class:`~repro.obs.trace.SpanTracer`): the tick phases are then
+        wrapped per-instance, so a default engine pays zero timing
+        calls on its hot path.  ``audit`` (``True`` or a shared
+        :class:`~repro.obs.audit.AuditLog`) enables the hash-chained
+        security event log.
+        """
+        self.metrics = metrics_mod.MetricsRegistry()
+        for name, help_ in metrics_mod.ENGINE_COUNTERS.items():
+            self.metrics.counter(name, help_)
+        self._stats = metrics_mod.StatsView(self.metrics)
+        g = metrics_mod.ENGINE_GAUGES
+        self.metrics.gauge("pool_free_pages", g["pool_free_pages"],
+                           fn=lambda: len(self.free_pages))
+        self.metrics.gauge("pool_pages_total", g["pool_pages_total"],
+                           fn=lambda: self.n_pages)
+        self.metrics.gauge("slots_active", g["slots_active"],
+                           fn=lambda: sum(1 for s in self.slots
+                                          if s is not None))
+        self.metrics.gauge("waiting_requests", g["waiting_requests"],
+                           fn=self._n_waiting)
+        if self.registry is not None:
+            self.metrics.gauge(
+                "tenant_resident_pages", g["tenant_resident_pages"],
+                label="tenant",
+                fn=lambda: {
+                    self.registry.by_index(i).tenant_id:
+                        self.tenant_resident_pages(i)
+                    for i in range(self.registry.n_tenants)})
+        if self.prefix_cache is not None:
+            self.metrics.gauge("prefix_cache_pages",
+                               g["prefix_cache_pages"],
+                               fn=lambda: self.prefix_cache.pages_used)
+            self.metrics.gauge("prefix_cache_refs", g["prefix_cache_refs"],
+                               fn=lambda: self.prefix_cache.total_refs)
+        h = metrics_mod.ENGINE_HISTOGRAMS
+        self._ttft_ticks = self.metrics.histogram("ttft_ticks",
+                                                  h["ttft_ticks"])
+        self._ttft_seconds = self.metrics.histogram("ttft_seconds",
+                                                    h["ttft_seconds"])
+        self._bucket_hist = self.metrics.histogram("decode_bucket",
+                                                   h["decode_bucket"])
+        # isinstance first: an EMPTY shared log is falsy (len == 0) but
+        # must still be adopted — the cluster hands shards a fresh one.
+        if isinstance(audit, audit_mod.AuditLog):
+            self.audit = audit
+        elif audit:
+            self.audit = audit_mod.AuditLog()
+        else:
+            self.audit = None
+        self.tracer = None
+        if trace:
+            self.tracer = (trace if isinstance(trace, trace_mod.SpanTracer)
+                           else trace_mod.SpanTracer(pid=self.shard_id))
+            self._instrument_phases()
+        # kv_pages-level integrity verdict hook: every host-synced MAC
+        # gate verdict (decode read, reseal, CoW, cache insert/share,
+        # migration, deferred checks) lands in the counters no matter
+        # which crossing produced it.
+        self.page_io.verdict_hooks.append(self._on_verdict)
+
+    def _on_verdict(self, ok: bool, op: str, ctx: dict) -> None:
+        self.stats["integrity_verdicts"] += 1
+        if not ok:
+            self.stats["integrity_failures"] += 1
+
+    def _observe_ttft(self, req: Request) -> None:
+        self._ttft_ticks.observe(req.first_tick - req.submit_tick)
+        if req.submit_time:
+            self._ttft_seconds.observe(time.perf_counter() - req.submit_time)
+
+    def _instrument_phases(self) -> None:
+        """Per-instance wrap of the tick phases with spans + histograms.
+
+        Instance attributes shadow the class methods, so both
+        ``step()`` and a cluster driving the phases directly hit the
+        instrumented versions — and an engine without a tracer never
+        executes a single timing call.
+        """
+        h = metrics_mod.ENGINE_HISTOGRAMS
+        tracer = self.tracer
+
+        def timed(span_name, fn, hist):
+            def wrapper(*a, **kw):
+                t0 = time.perf_counter_ns()
+                try:
+                    return fn(*a, **kw)
+                finally:
+                    t1 = time.perf_counter_ns()
+                    tracer.add(span_name, t0, t1, {"tick": self.tick})
+                    hist.observe((t1 - t0) / 1e9)
+            return wrapper
+
+        for name in ("_tick_begin", "_decode_dispatch", "_decode_collect",
+                     "_tick_end"):
+            key = f"phase{name}_seconds"
+            hist = self.metrics.histogram(key, h[key])
+            setattr(self, name, timed(name.lstrip("_"), getattr(self, name),
+                                      hist))
+        tick_hist = self.metrics.histogram("tick_seconds",
+                                           h["tick_seconds"])
+        self.step = timed("tick", self.step, tick_hist)
+
+    @property
+    def stats(self):
+        """The counters under the old dict API (see
+        :class:`repro.obs.metrics.StatsView`)."""
+        return self._stats
+
+    def _audit(self, event: str, **fields) -> None:
+        """Append one security event (no-op without an audit log)."""
+        if self.audit is not None:
+            self.audit.append(event, shard=self.shard_id,
+                              scheme=self.scheme, tick=self.tick, **fields)
+            self.stats["audit_events"] += 1
+
+    def _integrity_fail(self, msg: str, **ctx) -> IntegrityError:
+        """Audit + build (the caller raises) one integrity failure."""
+        self._audit("integrity_error", detail=msg, **ctx)
+        return IntegrityError(msg)
+
+    def snapshot(self) -> dict:
+        """JSON-able metrics snapshot (gauges sampled now)."""
+        return self.metrics.snapshot(labels={"shard": str(self.shard_id)}
+                                     if self.n_shards > 1 else None)
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition of this engine's metrics."""
+        return self.metrics.prometheus(
+            labels={"shard": str(self.shard_id)}
+            if self.n_shards > 1 else None)
+
+    def export_trace(self, path: Optional[str] = None) -> dict:
+        """Chrome trace-event JSON of the recorded phase spans."""
+        if self.tracer is None:
+            raise ValueError("engine was built without trace=...")
+        return self.tracer.export(path)
 
     # -- traced builders ----------------------------------------------------
 
@@ -615,7 +760,8 @@ class SecureServingEngine(SubmitAPI):
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, prompt, max_new_tokens, submit_tick=self.tick,
-                      share_prefix=bool(request.share_prefix))
+                      share_prefix=bool(request.share_prefix),
+                      submit_time=time.perf_counter())
         self.requests[rid] = req
         if tenant is not None:
             req.tenant_idx = tenant.index
@@ -717,16 +863,19 @@ class SecureServingEngine(SubmitAPI):
             jnp.full((n,), src.index, jnp.uint32), jnp.asarray(dst_rows),
             jnp.asarray(role), jnp.full((n,), dst.index, jnp.uint32),
             self._next_epoch())
-        if not bool(ok):
+        if not self.page_io.report_verdict(ok, "prefix_share"):
             self.free_pages.extend(dst_pages)
-            raise IntegrityError(
+            raise self._integrity_fail(
                 f"reseal-on-share {src.tenant_id!r} -> {dst.tenant_id!r} "
-                f"failed source verification")
+                f"failed source verification", op="prefix_share",
+                tenant=src.tenant_id, to_tenant=dst.tenant_id)
         self.pool = new_pool
         parent = matched_dst[-1] if matched_dst else None
         for (key, n_tok), page_id in zip(missing, dst_pages):
             parent = pc.insert(key, parent, page_id, n_tok)
         self.stats["prefix_shared_pages"] += k
+        self._audit("prefix_share", tenant=src.tenant_id,
+                    to_tenant=dst.tenant_id, pages=k)
         return k
 
     def _pre_rotation(self, tenant, new_epoch: int) -> None:
@@ -776,14 +925,18 @@ class SecureServingEngine(SubmitAPI):
         # Gate BEFORE committing: a failed decrypt means the old bytes
         # were tampered, and storing their reseal would launder them
         # under fresh, valid MACs.
-        if not bool(ok):
-            raise IntegrityError(
+        if not self.page_io.report_verdict(ok, "reseal"):
+            raise self._integrity_fail(
                 f"reseal of slot {slot_idx} pages {page_pos} failed "
-                f"verification (tenant {tenant.tenant_id!r})")
+                f"verification (tenant {tenant.tenant_id!r})",
+                op="reseal", tenant=tenant.tenant_id, slot=slot_idx,
+                pages=[int(slot.pages[j]) for j in page_pos])
         self.pool = new_pool
         for j in page_pos:
             slot.page_epochs[j] = to_epoch
         self.stats["reseals"] += 1
+        self._audit("reseal", tenant=tenant.tenant_id, slot=slot_idx,
+                    pages=len(page_pos), to_epoch=to_epoch)
 
     def _resealer(self, n: int):
         if n not in self._resealers:
@@ -815,6 +968,8 @@ class SecureServingEngine(SubmitAPI):
                             for e in slot.page_epochs)):
                 self._preempt(i)
         self.stats["rotations"] += 1
+        self._audit("rotation", tenant=tenant.tenant_id,
+                    new_epoch=new_epoch)
 
     def step(self) -> list:
         """One scheduler tick: admit, grow/evict, batched decode.
@@ -871,8 +1026,10 @@ class SecureServingEngine(SubmitAPI):
             raise RuntimeError("run() exceeded max_ticks")
         if self.policy.deferred_model_mac:
             self._deferred_check()
-        if not self.verify_every_step and not bool(self._ok_accum):
-            raise IntegrityError("accumulated page-MAC verification failed")
+        if not self.verify_every_step and not self.page_io.report_verdict(
+                self._ok_accum, "decode_accum"):
+            raise self._integrity_fail(
+                "accumulated page-MAC verification failed", op="decode_accum")
         result = RunResult({rid: r for rid, r in self.requests.items()
                             if r.state == "finished"})
         result.latency = self.latency_stats()
@@ -1051,6 +1208,7 @@ class SecureServingEngine(SubmitAPI):
         req.generated.append(int(tok[0, 0]))
         if req.first_tick is None:
             req.first_tick = self.tick
+            self._observe_ttft(req)
         if (self.prefix_cache is not None and tenant is not None
                 and req.share_prefix):
             self._prefix_insert(tenant, seq, slot)
@@ -1128,16 +1286,18 @@ class SecureServingEngine(SubmitAPI):
             jnp.asarray(src_epochs), jnp.asarray(owners),
             jnp.asarray(dst_rows), jnp.asarray(dst_epochs),
             jnp.asarray(owners), self._next_epoch())
-        if not bool(ok):
+        if not self.page_io.report_verdict(ok, "prefix_insert"):
             self.free_pages.extend(dst_pages)
-            raise IntegrityError(
+            raise self._integrity_fail(
                 f"prefix-cache insert for tenant {tenant.tenant_id!r} "
-                f"failed source verification")
+                f"failed source verification",
+                op="prefix_insert", tenant=tenant.tenant_id)
         self.pool = new_pool
         parent = None
         for (key, n_tok), page_id in zip(missing, dst_pages):
             parent = pc.insert(key, parent, page_id, n_tok)
         self.stats["prefix_inserted_pages"] += k
+        self._audit("prefix_insert", tenant=tenant.tenant_id, pages=k)
 
     def _copier(self, n: int):
         """Jitted page-copy reseal (cache insert / CoW / share), padded
@@ -1231,17 +1391,20 @@ class SecureServingEngine(SubmitAPI):
             jnp.asarray(src_epochs), jnp.asarray(owners),
             jnp.asarray(dst_rows), jnp.asarray(dst_epochs),
             jnp.asarray(owners), self._next_epoch())
-        if not bool(ok):
+        if not self.page_io.report_verdict(ok, "cow"):
             self.free_pages.append(dst)
-            raise IntegrityError(
+            raise self._integrity_fail(
                 f"copy-on-write of slot {idx} shared page {pos} failed "
-                f"verification (tenant {tenant.tenant_id!r})")
+                f"verification (tenant {tenant.tenant_id!r})",
+                op="cow", tenant=tenant.tenant_id, slot=idx,
+                page=int(slot.pages[pos]))
         self.pool = new_pool
         slot.pages[pos] = dst
         slot.page_epochs[pos] = epoch
         slot.shared_n -= 1
         self.prefix_cache.release([slot.shared_entries.pop()])
         self.stats["prefix_cow_pages"] += 1
+        self._audit("cow", tenant=tenant.tenant_id, slot=idx, page=int(dst))
 
     def _pick_victim(self, tenant=None) -> int:
         """Youngest running slot (LIFO preemption, vLLM-style) — scoped
@@ -1378,8 +1541,10 @@ class SecureServingEngine(SubmitAPI):
                     # no retained key for is an integrity violation
                     # (stale-epoch replay / page-table tamper), not a
                     # scheduling error.
-                    raise IntegrityError(
-                        f"slot {i} page {j}: {e.args[0]}") from e
+                    raise self._integrity_fail(
+                        f"slot {i} page {j}: {e.args[0]}",
+                        op="stale_epoch", tenant=tenant.tenant_id,
+                        slot=i, page=int(slot.pages[j])) from e
         return ([self._bank(), jnp.asarray(key_idx),
                  jnp.asarray(owners), jnp.asarray(key_epochs),
                  jnp.asarray(cur_key_idx), jnp.asarray(cur_epochs)], False)
@@ -1441,6 +1606,7 @@ class SecureServingEngine(SubmitAPI):
             # write_pages never touches the vmapped reference.
             self.stats["fused_write_ticks"] += 1
         self.stats["decode_page_reads"] += len(active_idx) * bucket
+        self._bucket_hist.observe(bucket)
         self.pool, self.onchip, toks, ok = decode_fn(*args)
         self.stats["decode_steps"] += 1
         return toks, ok
@@ -1450,10 +1616,11 @@ class SecureServingEngine(SubmitAPI):
         """Sync on a dispatched decode and apply host bookkeeping."""
         toks, ok = pending
         if self.verify_every_step:
-            if not bool(ok):
-                raise IntegrityError(
+            if not self.page_io.report_verdict(ok, "decode"):
+                raise self._integrity_fail(
                     f"page MAC verification failed at tick {self.tick} "
-                    f"(scheme={self.scheme}, shard={self.shard_id})")
+                    f"(scheme={self.scheme}, shard={self.shard_id})",
+                    op="decode")
         else:
             self._ok_accum = self._ok_accum & ok
         toks = np.asarray(toks)
@@ -1475,10 +1642,12 @@ class SecureServingEngine(SubmitAPI):
             slot.req.generated.append(int(toks[i, 0]))
             if slot.req.first_tick is None:
                 slot.req.first_tick = self.tick
+                self._observe_ttft(slot.req)
             self._maybe_finish(i, finished)
 
     def _deferred_check(self) -> None:
         self.stats["deferred_checks"] += 1
-        if not self.deferred_check():
-            raise IntegrityError("deferred pool-level MAC check failed "
-                                 f"(tick {self.tick}, scheme={self.scheme})")
+        if not self.page_io.report_verdict(self.deferred_check(), "deferred"):
+            raise self._integrity_fail(
+                "deferred pool-level MAC check failed "
+                f"(tick {self.tick}, scheme={self.scheme})", op="deferred")

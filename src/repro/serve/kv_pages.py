@@ -789,6 +789,24 @@ class PageIO:
     def __init__(self, spec: PageSpec, keys):
         self.spec = spec
         self.keys = keys
+        # Host-side integrity verdict observers: the crossings below
+        # run inside jit (verdicts are async device booleans), so the
+        # caller reports each verdict the moment it host-syncs one via
+        # :meth:`report_verdict` — the observability layer counts and
+        # audit-logs them without touching the traced computation.
+        self.verdict_hooks: list = []
+
+    def report_verdict(self, ok, op: str, **ctx) -> bool:
+        """Fan one host-synced MAC-gate verdict out to the hooks.
+
+        Returns ``bool(ok)`` so gate sites can write
+        ``if not io.report_verdict(ok, "decode_read"): raise ...``
+        with zero extra device syncs.
+        """
+        ok = bool(ok)
+        for hook in self.verdict_hooks:
+            hook(ok, op, ctx)
+        return ok
 
     def read(self, pool: PagedKVPool, page_table: jax.Array,
              lengths: jax.Array, ctx: PageKeyCtx | None = None,
@@ -1343,6 +1361,11 @@ class PrefixCache:
     @property
     def pages_used(self) -> int:
         return len(self._entries)
+
+    @property
+    def total_refs(self) -> int:
+        """Total refcount pins across entries (gauge exposition)."""
+        return sum(e.refs for e in self._entries.values())
 
     def free_capacity(self) -> int:
         return self.capacity_pages - len(self._entries)
