@@ -10,6 +10,7 @@ ignore ``meta`` entirely.
 
 from __future__ import annotations
 
+import os
 import platform
 import subprocess
 import sys
@@ -30,6 +31,21 @@ def _git_sha() -> str:
     return "unknown"
 
 
+def _git_dirty() -> bool:
+    """True when the worktree has uncommitted changes (or git is
+    unavailable) — history rows from dirty runs are excluded from
+    regression baselines (``benchmarks/check_regression.py``)."""
+    try:
+        out = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10)
+        if out.returncode == 0:
+            return bool(out.stdout.strip())
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return True
+
+
 def run_meta() -> dict:
     """The provenance dict stamped onto every bench JSON artifact."""
     versions = {}
@@ -45,8 +61,14 @@ def run_meta() -> dict:
         versions["jaxlib"] = "unknown"
     return {
         "git_sha": _git_sha(),
+        "git_dirty": _git_dirty(),
         "python": sys.version.split()[0],
         "platform": platform.platform(),
+        # Fingerprint includes the core count: wall-clock baselines in
+        # the bench history only bind runs on comparable machines
+        # (check_regression.py compares tok/s within-host only).
+        "host": f"{platform.system()}-{platform.machine()}"
+                f"-c{os.cpu_count()}",
         "timestamp_utc": datetime.now(timezone.utc).isoformat(),
         **versions,
     }

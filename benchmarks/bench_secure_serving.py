@@ -209,6 +209,41 @@ def collect_obs_overhead(schemes=DEFAULT_SCHEMES, *,
     return results
 
 
+def collect_protection_profiles(schemes=DEFAULT_SCHEMES, *,
+                                arch_name: str = "minitron-4b",
+                                page_tokens: int = 4,
+                                pages_per_slot: int = 2,
+                                use_kernel: bool = False) -> list:
+    """One ``Engine.profile()`` per scheme: the HLO-attributed
+    protection-vs-model split for the largest decode bucket.
+
+    The flattened ``overhead_*_ratio`` numbers feed the bench history
+    (they are deterministic per compile, so the regression gate holds
+    them to a tight band); the full per-file attribution rides along
+    under ``profile`` for the artifact reader.
+    """
+    arch = get_arch(arch_name)
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    rows = []
+    for scheme in schemes:
+        eng = SecureServingEngine(
+            arch, cfg, params, scheme=scheme, max_slots=1,
+            page_tokens=page_tokens, pages_per_slot=pages_per_slot,
+            use_kernel=use_kernel and scheme != "off")
+        for prof in eng.profile()["profiles"]:
+            rows.append({
+                "scheme": scheme,
+                "bucket": prof["bucket"],
+                "overhead_bytes_ratio": prof["overhead_bytes_ratio"],
+                "overhead_flops_ratio": prof["overhead_flops_ratio"],
+                "coverage_bytes": prof["coverage"]["bytes"],
+                "coverage_flops": prof["coverage"]["flops"],
+                "profile": prof,
+            })
+    return rows
+
+
 def _measure_decode_scaling(arch, cfg, params, scheme: str, *, batch: int,
                             page_tokens: int, pages_per_slot: int,
                             prompt_len: int, gen_len: int,
@@ -444,6 +479,10 @@ def main(argv=None) -> list:
     ap.add_argument("--metrics-json", default=None,
                     help="write the obs sweep's metrics snapshot here "
                          "(needs --obs-json)")
+    ap.add_argument("--profile-json", default=None,
+                    help="also run the protection-overhead profiler "
+                         "(Engine.profile() per scheme) and write its "
+                         "results to this file")
     args = ap.parse_args(argv)
     if (args.trace_out or args.metrics_json) and not args.obs_json:
         raise SystemExit("--trace-out/--metrics-json need --obs-json "
@@ -510,6 +549,21 @@ def main(argv=None) -> list:
             json.dump(stamp({"benchmark": "obs_overhead", "results": obs}),
                       f, indent=2)
         print(f"[serve-bench] wrote {args.obs_json}")
+    if args.profile_json:
+        profiles = collect_protection_profiles(
+            tuple(args.schemes.split(",")), arch_name=args.arch,
+            use_kernel=args.use_kernel)
+        for r in profiles:
+            print(f"[serve-bench] profile scheme={r['scheme']:<8} "
+                  f"bucket={r['bucket']} "
+                  f"overhead_bytes={r['overhead_bytes_ratio']:.3f} "
+                  f"overhead_flops={r['overhead_flops_ratio']:.3f} "
+                  f"coverage={r['coverage_bytes']:.2%}/"
+                  f"{r['coverage_flops']:.2%}")
+        with open(args.profile_json, "w") as f:
+            json.dump(stamp({"benchmark": "protection_profile",
+                             "results": profiles}), f, indent=2)
+        print(f"[serve-bench] wrote {args.profile_json}")
     return results
 
 

@@ -1,0 +1,152 @@
+"""CI gate: fail when a bench run regresses vs. the history baseline.
+
+Reads the current run's bench JSON artifacts, normalizes them exactly
+like ``history.py``, and compares every metric against the **best
+clean prior row** in ``BENCH_history.jsonl`` for the same
+(benchmark, scheme, config) key:
+
+* baseline rows must be clean — ``git_dirty`` rows are skipped, so a
+  lucky number from an uncommitted tree never ratchets the bar;
+* wall-clock metrics (tok/s, us/step) additionally require the
+  baseline's host fingerprint to match the current run's (a dev
+  workstation's tok/s is meaningless as a CI-runner bar) and get a
+  wide tolerance band (``--throughput-tol``, default 50% relative) —
+  shared runners are noisy;
+* ratio metrics (traffic / protection overhead) are deterministic-ish
+  and compared host-independently with a tight band
+  (``--ratio-tol`` relative, default 25%, plus ``--ratio-abs``
+  absolute slack, default 0.05).
+
+Keys with no clean matching baseline are reported WARN (first-run
+mode: the gate passes); once a baseline row exists a regression is a
+hard failure.  A trajectory table (baseline -> current per key) is
+always printed.
+
+Usage::
+
+    python benchmarks/check_regression.py \\
+        --history BENCH_history.jsonl bench-*.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from history import METRIC_KEYS, load_history, normalize
+
+# Wall-clock metrics: noisy, host-dependent.
+_THROUGHPUT_METRICS = frozenset({
+    "tok_per_s", "tok_per_s_off", "tok_per_s_on", "us_per_call",
+    "us_per_step",
+})
+
+
+def _key(row: dict) -> tuple:
+    return (row["benchmark"], row["scheme"], row["config"])
+
+
+def _best_baseline(history: list, key: tuple, metric: str,
+                   higher_better: bool, host: str) -> float | None:
+    values = []
+    for row in history:
+        if _key(row) != key or row.get("git_dirty", True):
+            continue
+        if metric in _THROUGHPUT_METRICS and row.get("host") != host:
+            continue
+        v = row.get("metrics", {}).get(metric)
+        if v is not None:
+            values.append(float(v))
+    if not values:
+        return None
+    return max(values) if higher_better else min(values)
+
+
+def check(current_rows: list, history: list, *,
+          throughput_tol: float = 0.50, ratio_tol: float = 0.25,
+          ratio_abs: float = 0.05) -> tuple:
+    """Returns (failures, warnings, table_lines)."""
+    failures, warnings, table = [], [], []
+    header = (f"{'benchmark':<18} {'scheme':<8} {'config':<28} "
+              f"{'metric':<22} {'baseline':>12} {'current':>12} {'':<6}")
+    table.append(header)
+    table.append("-" * len(header))
+    for row in current_rows:
+        key = _key(row)
+        for metric, value in sorted(row["metrics"].items()):
+            higher_better = METRIC_KEYS.get(metric, True)
+            base = _best_baseline(history, key, metric, higher_better,
+                                  row.get("host", "unknown"))
+            tag = ""
+            if base is None:
+                tag = "WARN"
+                warnings.append(
+                    f"{key} {metric}: no clean baseline yet (first run "
+                    f"for this key/host) — recording only")
+            else:
+                if metric in _THROUGHPUT_METRICS:
+                    tol = throughput_tol
+                    if higher_better:
+                        bad = value < base * (1.0 - tol)
+                    else:
+                        bad = value > base * (1.0 + tol)
+                else:
+                    if higher_better:
+                        bad = value < min(base * (1.0 - ratio_tol),
+                                          base - ratio_abs)
+                    else:
+                        bad = value > max(base * (1.0 + ratio_tol),
+                                          base + ratio_abs)
+                if bad:
+                    tag = "FAIL"
+                    failures.append(
+                        f"{key} {metric}: {value:.6g} regressed past "
+                        f"baseline {base:.6g} (band: "
+                        f"{'+-' + format(throughput_tol, '.0%') if metric in _THROUGHPUT_METRICS else f'{ratio_tol:.0%} rel / {ratio_abs} abs'})")
+                else:
+                    tag = "ok"
+            table.append(
+                f"{key[0]:<18} {key[1]:<8} {key[2]:<28.28} {metric:<22} "
+                f"{base if base is not None else float('nan'):>12.5g} "
+                f"{value:>12.5g} {tag:<6}")
+    return failures, warnings, table
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("jsons", nargs="+", help="current bench JSON artifacts")
+    ap.add_argument("--history", default="BENCH_history.jsonl")
+    ap.add_argument("--throughput-tol", type=float, default=0.50,
+                    help="relative band for wall-clock metrics")
+    ap.add_argument("--ratio-tol", type=float, default=0.25,
+                    help="relative band for overhead-ratio metrics")
+    ap.add_argument("--ratio-abs", type=float, default=0.05,
+                    help="absolute slack for overhead-ratio metrics")
+    args = ap.parse_args(argv)
+
+    current = []
+    for path in args.jsons:
+        with open(path) as f:
+            current.extend(normalize(json.load(f)))
+    history = load_history(args.history)
+    failures, warnings, table = check(
+        current, history, throughput_tol=args.throughput_tol,
+        ratio_tol=args.ratio_tol, ratio_abs=args.ratio_abs)
+
+    print(f"[regression] {len(history)} history rows, "
+          f"{len(current)} current rows")
+    for line in table:
+        print("[regression] " + line)
+    for w in warnings:
+        print("[regression] WARN " + w)
+    for f in failures:
+        print("[regression] FAIL " + f)
+    if failures:
+        print(f"[regression] {len(failures)} regression(s) vs. baseline")
+        return 1
+    print("[regression] OK — no metric regressed past its baseline band")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,146 @@
+"""Cross-PR bench trajectory: normalize bench JSONs into history rows.
+
+Every benchmark in this directory writes a ``stamp()``-ed JSON
+artifact per run.  Those are point-in-time: nothing connected run N to
+run N-1, so a perf regression only showed up if someone diffed two CI
+artifacts by hand.  This module gives the repo performance *memory*:
+
+    python benchmarks/history.py --history BENCH_history.jsonl \\
+        bench-*.json
+
+appends one normalized row per (benchmark, scheme, config) result to
+``BENCH_history.jsonl`` — an append-only JSON-lines file that is
+committed to the repo and re-appended by every CI perf-smoke run.
+``check_regression.py`` reads it back as the baseline set.
+
+Row shape (one JSON object per line)::
+
+    {"benchmark": "secure_serving", "scheme": "seda",
+     "config": "batch=8",                      # stable key, sorted k=v
+     "metrics": {"tok_per_s": 1234.5, "traffic_overhead": 0.11},
+     "git_sha": "...", "git_dirty": false, "host": "Linux-x86_64",
+     "timestamp_utc": "..."}
+
+Config keys are whitelisted (:data:`CONFIG_KEYS`) so incidental row
+fields (latency dicts, counters) never fragment the baseline key.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+
+__all__ = ["CONFIG_KEYS", "METRIC_KEYS", "normalize", "append_history",
+           "load_history"]
+
+# Fields that identify *which* experiment a row is (part of the key).
+CONFIG_KEYS = ("batch", "shards", "tenants", "rotate_every", "hit_rate",
+               "context_len", "gen_len", "name", "mode", "bucket")
+
+# Fields that are *measurements* (compared by check_regression.py).
+# True = higher is better, False = lower is better.
+METRIC_KEYS = {
+    "tok_per_s": True,
+    "tok_per_s_off": True,
+    "tok_per_s_on": True,
+    "us_per_call": False,
+    "us_per_step": False,
+    "traffic_overhead": False,
+    "overhead_pct": False,
+    "overhead_bytes_ratio": False,
+    "overhead_flops_ratio": False,
+}
+
+_SCHEME_IN_NAME = re.compile(
+    r"_(off|sgx64|sgx512|mgx64|mgx512|seda512|seda)(_|$)")
+
+
+def _row_scheme(result: dict) -> str:
+    scheme = result.get("scheme")
+    if scheme:
+        return str(scheme)
+    m = _SCHEME_IN_NAME.search(str(result.get("name", "")))
+    return m.group(1) if m else "unknown"
+
+
+def _config_key(result: dict) -> str:
+    parts = []
+    for k in CONFIG_KEYS:
+        if k in result and result[k] is not None:
+            parts.append(f"{k}={result[k]}")
+    return ",".join(parts)
+
+
+def normalize(payload: dict) -> list:
+    """One bench JSON (``{"benchmark", "results", "meta"}``) to rows."""
+    meta = payload.get("meta", {})
+    rows = []
+    for result in payload.get("results", []):
+        metrics = {k: float(result[k]) for k in METRIC_KEYS
+                   if k in result and result[k] is not None}
+        if not metrics:
+            continue
+        rows.append({
+            "benchmark": payload.get("benchmark", "unknown"),
+            "scheme": _row_scheme(result),
+            "config": _config_key(result),
+            "metrics": metrics,
+            "git_sha": meta.get("git_sha", "unknown"),
+            "git_dirty": bool(meta.get("git_dirty", True)),
+            "host": meta.get("host", "unknown"),
+            "timestamp_utc": meta.get("timestamp_utc", ""),
+        })
+    return rows
+
+
+def append_history(history_path: str, payloads: list) -> int:
+    """Append normalized rows for each bench payload; returns count."""
+    rows = []
+    for payload in payloads:
+        rows.extend(normalize(payload))
+    if rows:
+        with open(history_path, "a") as f:
+            for row in rows:
+                f.write(json.dumps(row, sort_keys=True) + "\n")
+    return len(rows)
+
+
+def load_history(history_path: str) -> list:
+    """Parse the JSONL history (missing file -> empty; bad lines are
+    skipped so one corrupt append can never brick the gate)."""
+    if not os.path.exists(history_path):
+        return []
+    rows = []
+    with open(history_path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(row, dict) and "metrics" in row:
+                rows.append(row)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("jsons", nargs="+", help="bench JSON artifacts")
+    ap.add_argument("--history", default="BENCH_history.jsonl")
+    args = ap.parse_args(argv)
+    payloads = []
+    for path in args.jsons:
+        with open(path) as f:
+            payloads.append(json.load(f))
+    n = append_history(args.history, payloads)
+    print(f"[history] appended {n} rows from {len(args.jsons)} bench "
+          f"files to {args.history}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

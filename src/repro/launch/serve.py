@@ -161,6 +161,22 @@ def main(argv=None) -> dict:
     ap.add_argument("--audit-out", default=None, metavar="PATH",
                     help="enable the hash-chained audit log; dump it "
                          "here as JSON lines (--engine paged only)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help="per-tenant wall-clock ttft SLO target in ms; "
+                         "breaches are counted + audited "
+                         "(--engine paged only)")
+    ap.add_argument("--slo-p99-ticks", type=float, default=0.0,
+                    help="rolling p99 tick-latency SLO target in ms "
+                         "(--engine paged only)")
+    ap.add_argument("--http-port", type=int, default=0,
+                    help="serve /healthz (SLO health JSON) and /metrics "
+                         "(Prometheus text) on 127.0.0.1:PORT during "
+                         "the run (--engine paged only)")
+    ap.add_argument("--profile-json", default=None, metavar="PATH",
+                    help="write the protection-vs-model device-cost "
+                         "profile (obs/profiler.py) here after the run "
+                         "(--engine paged only; compiles one decode "
+                         "variant per bucket)")
     args = ap.parse_args(argv)
     _setup_logging(args)
     if args.tenants and args.engine != "paged":
@@ -171,10 +187,13 @@ def main(argv=None) -> dict:
         raise SystemExit("--rotate-every needs --tenants (there are no "
                          "tenant keys to rotate otherwise)")
     if args.engine != "paged" and (args.trace_out or args.metrics_json
-                                   or args.metrics_prom or args.audit_out):
+                                   or args.metrics_prom or args.audit_out
+                                   or args.slo_ttft_ms or args.slo_p99_ticks
+                                   or args.http_port or args.profile_json):
         raise SystemExit("--trace-out/--metrics-json/--metrics-prom/"
-                         "--audit-out need --engine paged (the simple "
-                         "loop has no observability surface)")
+                         "--audit-out/--slo-*/--http-port/--profile-json "
+                         "need --engine paged (the simple loop has no "
+                         "observability surface)")
 
     arch = get_arch(args.arch)
     if arch.kind == "encdec":
@@ -256,6 +275,24 @@ def _serve_paged(arch, cfg, params, args) -> dict:
             n_pages=n_pages, keys=SecureKeys.derive(args.seed),
             registry=registry, rotate_every=args.rotate_every, **obs_kw)
         stats_of = lambda: eng.stats  # noqa: E731
+
+    # SLO watchdogs: one monitor per shard engine; /healthz reports the
+    # worst shard.  Without targets (and without --http-port) nothing
+    # attaches, so the hot path stays untouched.
+    monitors = []
+    if args.slo_ttft_ms or args.slo_p99_ticks or args.http_port:
+        from repro.obs.slo import SLOMonitor
+        for shard_eng in (eng.engines if args.shards else [eng]):
+            monitors.append(SLOMonitor(
+                ttft_ms=args.slo_ttft_ms or None,
+                p99_tick_ms=args.slo_p99_ticks or None,
+                min_stall_s=1.0).attach(shard_eng))
+    server = None
+    if args.http_port:
+        server = _start_http(args.http_port, monitors, eng)
+        _log("http", f"[serve] /healthz + /metrics on "
+             f"127.0.0.1:{args.http_port}", port=args.http_port)
+
     rng = np.random.default_rng(args.seed)
     rids = []
     for i in range(args.batch):
@@ -288,10 +325,66 @@ def _serve_paged(arch, cfg, params, args) -> dict:
              f"p95={done.latency['p95_ttft_ticks']:.1f} "
              f"p99={done.latency['p99_ttft_ticks']:.1f}",
              **done.latency)
+    # Final stall poll *now*, before the obs dumps: profiling compiles
+    # for seconds, and idle time after the run finished is not a stall.
+    for m in monitors:
+        m.check_stalled()
     _dump_obs(eng, args)
+    if monitors:
+        from repro.obs.slo import merge_health
+        health = merge_health([m.health() for m in monitors])
+        _log("slo", f"[serve] SLO health: {health['status']}",
+             **{"health": health})
+    if server is not None:
+        server.shutdown()
     toks = np.asarray([done[r].generated for r in rids], np.int32)
+    if any(m.hard_breach for m in monitors):
+        _log("slo", "[serve] hard SLO breach (integrity alarm or stuck "
+             "tick) — exiting non-zero")
+        raise SystemExit(3)
     return {"tokens": toks, "tok_per_s": rate, "stats": stats,
             "latency": done.latency}
+
+
+def _start_http(port: int, monitors: list, eng):
+    """Stdlib /healthz + /metrics endpoint on localhost, daemon thread.
+
+    /healthz returns the merged monitor health (HTTP 503 once any
+    shard is *failing* — integrity alarm or stuck tick — so probes can
+    pull the instance); /metrics returns the Prometheus exposition of
+    the engine (cluster: all shards, ``shard=`` labels).
+    """
+    import threading
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    from repro.obs.slo import merge_health
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):  # noqa: N802 - http.server API
+            if self.path.split("?")[0] == "/healthz":
+                for m in monitors:
+                    m.check_stalled()
+                doc = merge_health([m.health() for m in monitors])
+                code = 503 if doc["status"] == "failing" else 200
+                body = json.dumps(doc, indent=2, sort_keys=True).encode()
+                ctype = "application/json"
+            elif self.path.split("?")[0] == "/metrics":
+                body = eng.prometheus().encode()
+                code, ctype = 200, "text/plain; version=0.0.4"
+            else:
+                body, code, ctype = b"not found\n", 404, "text/plain"
+            self.send_response(code)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):  # noqa: D102 - quiet by default
+            pass
+
+    server = ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    return server
 
 
 def _dump_obs(eng, args) -> None:
@@ -311,6 +404,12 @@ def _dump_obs(eng, args) -> None:
         _log("trace", f"[serve] {len(doc['traceEvents'])} trace events -> "
              f"{args.trace_out}",
              path=args.trace_out, events=len(doc["traceEvents"]))
+    if args.profile_json:
+        doc = eng.profile()
+        with open(args.profile_json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        _log("profile", f"[serve] device-cost profile -> "
+             f"{args.profile_json}", path=args.profile_json)
     if args.audit_out:
         eng.audit.dump(args.audit_out)
         _log("audit", f"[serve] {len(eng.audit)} audit records "

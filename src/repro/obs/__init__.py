@@ -11,7 +11,13 @@ Three cooperating pieces, all host-side and dependency-free:
 * :mod:`repro.obs.audit` — an append-only SHA-256 hash-chained audit
   log of security-relevant events (integrity verdicts, rotations,
   reseals, migrations, prefix cache traffic) whose
-  ``verify_chain()`` makes tampering with the log itself detectable.
+  ``verify_chain()`` makes tampering with the log itself detectable;
+* :mod:`repro.obs.profiler` — compiled-HLO cost attribution splitting
+  the decode step's bytes/flops into protection vs. model work, with
+  roofline utilization per decode variant;
+* :mod:`repro.obs.slo` — per-tenant SLO watchdog (TTFT, p99 tick
+  latency, integrity-failure rate, stuck ticks) that feeds breach
+  counters and audit events off the existing tick-phase hooks.
 
 Everything here is disabled-by-default on the hot path: counters cost
 one attribute bump (same order as the dict they replaced), gauges are
@@ -23,8 +29,13 @@ from repro.obs.audit import AuditLog
 from repro.obs.metrics import (CLUSTER_COUNTERS, ENGINE_COUNTERS,
                                ENGINE_GAUGES, ENGINE_HISTOGRAMS,
                                MetricsRegistry, StatsView)
+from repro.obs.profiler import (CostProfile, attribute_hlo,
+                                classify_source, profile_decode)
+from repro.obs.slo import SLOMonitor, merge_health
 from repro.obs.trace import SpanTracer
 
-__all__ = ["AuditLog", "CLUSTER_COUNTERS", "ENGINE_COUNTERS",
-           "ENGINE_GAUGES", "ENGINE_HISTOGRAMS", "MetricsRegistry",
-           "SpanTracer", "StatsView"]
+__all__ = ["AuditLog", "CLUSTER_COUNTERS", "CostProfile",
+           "ENGINE_COUNTERS", "ENGINE_GAUGES", "ENGINE_HISTOGRAMS",
+           "MetricsRegistry", "SLOMonitor", "SpanTracer", "StatsView",
+           "attribute_hlo", "classify_source", "merge_health",
+           "profile_decode"]

@@ -58,6 +58,14 @@ ENGINE_COUNTERS = {
     "integrity_verdicts": "host-synced MAC-gate verdicts observed",
     "integrity_failures": "MAC-gate / deferred-MAC verdicts that failed",
     "audit_events": "records appended to the security audit log",
+    "slo_ttft_breaches": "requests whose wall-clock ttft missed the "
+                         "per-tenant SLO target",
+    "slo_tick_p99_breaches": "ok->breach transitions of the rolling p99 "
+                             "tick-latency target",
+    "slo_integrity_alarms": "ok->alarm transitions of the windowed "
+                            "integrity-failure-rate alarm",
+    "slo_stuck_ticks": "watchdog firings: no tick end within N x the "
+                       "rolling median tick",
 }
 
 CLUSTER_COUNTERS = {
@@ -74,6 +82,13 @@ ENGINE_GAUGES = {
     "tenant_resident_pages": "pool pages owned per tenant (label: tenant)",
     "prefix_cache_pages": "prefix-cache entries resident (pages)",
     "prefix_cache_refs": "total refcount pins across cache entries",
+    "protection_overhead_ratio": "attributed protection/model HLO bytes "
+                                 "per decode variant (label: bucket)",
+    "protection_overhead_flops_ratio": "attributed protection/model HLO "
+                                       "flops per decode variant "
+                                       "(label: bucket)",
+    "roofline_utilization": "attributed roofline time / measured p50 "
+                            "tick per decode variant (label: bucket)",
 }
 
 ENGINE_HISTOGRAMS = {
@@ -258,24 +273,41 @@ class MetricsRegistry:
 
     def prometheus(self, prefix: str = "repro",
                    labels: Optional[dict] = None) -> str:
-        """Prometheus text exposition format (one block per metric)."""
+        """Prometheus text exposition format (one block per metric).
+
+        Label values and help strings are escaped per the text-format
+        spec (label values: ``\\`` ``"`` and newline; help: ``\\`` and
+        newline), so tenant ids and file paths with arbitrary bytes
+        round-trip through a Prometheus parser —
+        ``tests/test_obs.py`` parses the exposition back and compares.
+        """
         base = dict(labels or {})
+
+        def esc_label(v) -> str:
+            return (str(v).replace("\\", r"\\").replace('"', r'\"')
+                    .replace("\n", r"\n"))
+
+        def esc_help(s: str) -> str:
+            return str(s).replace("\\", r"\\").replace("\n", r"\n")
 
         def fmt_labels(extra: Optional[dict] = None) -> str:
             items = dict(base, **(extra or {}))
             if not items:
                 return ""
-            inner = ",".join(f'{k}="{v}"' for k, v in sorted(items.items()))
+            inner = ",".join(f'{k}="{esc_label(v)}"'
+                             for k, v in sorted(items.items()))
             return "{" + inner + "}"
 
         lines = []
         for name, c in sorted(self.counters.items()):
             full = f"{prefix}_{name}"
-            lines += [f"# HELP {full} {c.help}", f"# TYPE {full} counter",
+            lines += [f"# HELP {full} {esc_help(c.help)}",
+                      f"# TYPE {full} counter",
                       f"{full}{fmt_labels()} {c.value}"]
         for name, g in sorted(self.gauges.items()):
             full = f"{prefix}_{name}"
-            lines += [f"# HELP {full} {g.help}", f"# TYPE {full} gauge"]
+            lines += [f"# HELP {full} {esc_help(g.help)}",
+                      f"# TYPE {full} gauge"]
             value = g.sample()
             if isinstance(value, dict):
                 key = g.label or "label"
@@ -285,7 +317,8 @@ class MetricsRegistry:
                 lines.append(f"{full}{fmt_labels()} {value}")
         for name, h in sorted(self.histograms.items()):
             full = f"{prefix}_{name}"
-            lines += [f"# HELP {full} {h.help}", f"# TYPE {full} summary"]
+            lines += [f"# HELP {full} {esc_help(h.help)}",
+                      f"# TYPE {full} summary"]
             if h.count:
                 for q in (50, 95, 99):
                     lines.append(

@@ -196,6 +196,35 @@ class ClusterEngine(SubmitAPI):
         return "".join([self.metrics.prometheus()]
                        + [e.prometheus() for e in self.engines])
 
+    def profile(self, buckets=None, uniform: bool = False,
+                refresh: bool = False) -> dict:
+        """Per-shard device-cost profiles + the cluster rollup.
+
+        ``shards`` carries each engine's :meth:`profile` export (every
+        entry labeled with its ``shard`` id, matching the ``shard=``
+        labels on the per-shard profiler gauges); ``rollup`` sums the
+        attributed protection/model bytes+flops across shards and
+        recomputes the combined overhead ratios.
+        """
+        shards = [e.profile(buckets, uniform, refresh)
+                  for e in self.engines]
+        rollup = {k: {"bytes": 0.0, "flops": 0.0}
+                  for k in ("protection", "model", "other", "total")}
+        for shard in shards:
+            for prof in shard["profiles"]:
+                for k in rollup:
+                    rollup[k]["bytes"] += prof[k]["bytes"]
+                    rollup[k]["flops"] += prof[k]["flops"]
+        model = rollup["model"]
+        rollup["overhead_bytes_ratio"] = (
+            rollup["protection"]["bytes"] / model["bytes"]
+            if model["bytes"] else 0.0)
+        rollup["overhead_flops_ratio"] = (
+            rollup["protection"]["flops"] / model["flops"]
+            if model["flops"] else 0.0)
+        return {"scheme": self.engines[0].scheme if self.engines else None,
+                "shards": shards, "rollup": rollup}
+
     def export_trace(self, path: Optional[str] = None) -> dict:
         """One Chrome trace merging cluster + every shard's spans
         (per-shard ``pid`` tracks show the dispatch/collect overlap)."""

@@ -83,6 +83,7 @@ from repro.core.secure_exec import SCHEMES
 from repro.models import lm as lm_mod
 from repro.obs import audit as audit_mod
 from repro.obs import metrics as metrics_mod
+from repro.obs import profiler as profiler_mod
 from repro.obs import trace as trace_mod
 from repro.serve import kv_pages as kvp
 from repro.serve.serve_step import greedy_sample
@@ -478,6 +479,30 @@ class SecureServingEngine(SubmitAPI):
                                fn=lambda: self.prefix_cache.pages_used)
             self.metrics.gauge("prefix_cache_refs", g["prefix_cache_refs"],
                                fn=lambda: self.prefix_cache.total_refs)
+        # Device-cost profiler gauges sample the profile() cache only —
+        # an engine that never called profile() exposes empty dicts and
+        # never compiles anything at snapshot time.
+        self._cost_profiles: dict = {}
+
+        def _profile_gauge(attr):
+            return lambda: {
+                f"{b}{'u' if u else ''}": getattr(p, attr)
+                for (b, u), p in sorted(self._cost_profiles.items())}
+
+        self.metrics.gauge(
+            "protection_overhead_ratio", g["protection_overhead_ratio"],
+            label="bucket", fn=_profile_gauge("overhead_bytes_ratio"))
+        self.metrics.gauge(
+            "protection_overhead_flops_ratio",
+            g["protection_overhead_flops_ratio"],
+            label="bucket", fn=_profile_gauge("overhead_flops_ratio"))
+        self.metrics.gauge(
+            "roofline_utilization", g["roofline_utilization"],
+            label="bucket",
+            fn=lambda: {
+                f"{b}{'u' if u else ''}":
+                    p.roofline().get("utilization", 0.0)
+                for (b, u), p in sorted(self._cost_profiles.items())})
         h = metrics_mod.ENGINE_HISTOGRAMS
         self._ttft_ticks = self.metrics.histogram("ttft_ticks",
                                                   h["ttft_ticks"])
@@ -1056,6 +1081,19 @@ class SecureServingEngine(SubmitAPI):
         """
         if bucket is None:
             bucket = self.pages_per_slot
+        try:
+            fn = self._decode_fn_for(bucket)
+            args = self._decode_analysis_args(bucket)
+            cost = fn.lower(*args).compile().cost_analysis()
+        except Exception:  # noqa: BLE001 - backend-dependent availability
+            return {}
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        return dict(cost or {})
+
+    def _decode_analysis_args(self, bucket: int) -> list:
+        """Shape-representative args for lowering one decode variant
+        (shared by :meth:`decode_cost_analysis` and the profiler)."""
         args = [
             self.params, self.pool, self.onchip,
             jnp.zeros((self.max_slots, bucket), jnp.int32),
@@ -1073,14 +1111,29 @@ class SecureServingEngine(SubmitAPI):
                 jnp.zeros((self.max_slots,), jnp.int32),
                 jnp.zeros((self.max_slots,), jnp.uint32),
             ]
-        try:
-            fn = self._decode_fn_for(bucket)
-            cost = fn.lower(*args).compile().cost_analysis()
-        except Exception:  # noqa: BLE001 - backend-dependent availability
-            return {}
-        if isinstance(cost, (list, tuple)):
-            cost = cost[0] if cost else {}
-        return dict(cost or {})
+        return args
+
+    def profile(self, buckets=None, uniform: bool = False,
+                refresh: bool = False) -> dict:
+        """Attributed device-cost profile (protection vs model HLO
+        cost) of the decode variants — see :mod:`repro.obs.profiler`.
+
+        Compiles each requested (bucket, uniform) variant on first use
+        and caches the :class:`~repro.obs.profiler.CostProfile`; the
+        ``protection_overhead_ratio`` / ``roofline_utilization`` lazy
+        gauges sample this cache, so snapshots never trigger a compile.
+        """
+        if buckets is None:
+            buckets = [self.pages_per_slot]
+        profiles = []
+        for bucket in buckets:
+            key = (int(bucket), bool(uniform))
+            if refresh or key not in self._cost_profiles:
+                self._cost_profiles[key] = profiler_mod.profile_decode(
+                    self, bucket, uniform)
+            profiles.append(self._cost_profiles[key])
+        return {"scheme": self.scheme, "shard": self.shard_id,
+                "profiles": [p.to_dict() for p in profiles]}
 
     @property
     def n_free_pages(self) -> int:

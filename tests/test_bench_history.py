@@ -1,0 +1,170 @@
+"""Bench history rows and the regression gate.
+
+Pure-host tests over ``benchmarks/history.py`` and
+``benchmarks/check_regression.py``: normalization is stable and
+whitelisted, dirty/foreign-host rows never become baselines, a
+synthetic regressed row exits non-zero, a clean run exits zero.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                       / "benchmarks"))
+
+import check_regression  # noqa: E402
+import history  # noqa: E402
+from _meta import run_meta, stamp  # noqa: E402
+
+META = {"git_sha": "abc123", "git_dirty": False, "host": "Linux-x86_64",
+        "timestamp_utc": "2026-01-01T00:00:00+00:00"}
+
+
+def _payload(tok_per_s=100.0, overhead=0.2, dirty=False,
+             host="Linux-x86_64"):
+    meta = dict(META, git_dirty=dirty, host=host)
+    return {"benchmark": "secure_serving",
+            "results": [{"scheme": "seda", "batch": 8,
+                         "tok_per_s": tok_per_s,
+                         "traffic_overhead": overhead,
+                         "latency": {"p50": 1.0}}],     # not whitelisted
+            "meta": meta}
+
+
+class TestNormalize:
+    def test_row_shape_and_whitelists(self):
+        rows = history.normalize(_payload())
+        assert len(rows) == 1
+        row = rows[0]
+        assert row["benchmark"] == "secure_serving"
+        assert row["scheme"] == "seda"
+        assert row["config"] == "batch=8"
+        assert row["metrics"] == {"tok_per_s": 100.0,
+                                  "traffic_overhead": 0.2}
+        assert row["git_dirty"] is False
+        assert row["host"] == "Linux-x86_64"
+
+    def test_scheme_extracted_from_name(self):
+        payload = {"benchmark": "secure_step",
+                   "results": [{"name": "decode_seda512_kernel",
+                                "us_per_call": 42.0}],
+                   "meta": META}
+        row = history.normalize(payload)[0]
+        assert row["scheme"] == "seda512"
+        assert row["config"] == "name=decode_seda512_kernel"
+
+    def test_missing_meta_defaults_dirty(self):
+        payload = {"benchmark": "b", "results": [{"scheme": "off",
+                                                  "tok_per_s": 1.0}]}
+        row = history.normalize(payload)[0]
+        assert row["git_dirty"] is True        # unprovenanced = untrusted
+
+    def test_resultless_metrics_skipped(self):
+        payload = {"benchmark": "b", "results": [{"scheme": "off",
+                                                  "note": "no metrics"}],
+                   "meta": META}
+        assert history.normalize(payload) == []
+
+
+class TestHistoryFile:
+    def test_append_load_roundtrip_and_bad_lines(self, tmp_path):
+        path = tmp_path / "hist.jsonl"
+        n = history.append_history(str(path), [_payload(),
+                                               _payload(110.0)])
+        assert n == 2
+        path.write_text(path.read_text() + "{corrupt\n\n")
+        rows = history.load_history(str(path))
+        assert len(rows) == 2
+        assert rows[1]["metrics"]["tok_per_s"] == 110.0
+
+    def test_missing_file_is_empty(self, tmp_path):
+        assert history.load_history(str(tmp_path / "nope.jsonl")) == []
+
+
+class TestStamp:
+    def test_meta_has_dirty_bool_and_host(self):
+        meta = stamp({"benchmark": "x", "results": []})["meta"]
+        assert isinstance(meta["git_dirty"], bool)
+        assert meta["host"] and "-" in meta["host"]
+        assert meta is not run_meta()          # fresh dict per call
+
+
+class TestGate:
+    def _history(self, *payloads):
+        rows = []
+        for p in payloads:
+            rows.extend(history.normalize(p))
+        return rows
+
+    def test_first_run_warns_only(self):
+        current = history.normalize(_payload())
+        failures, warnings, table = check_regression.check(current, [])
+        assert not failures
+        assert len(warnings) == 2              # one per metric
+        assert any("WARN" in line for line in table)
+
+    def test_throughput_regression_fails(self):
+        base = self._history(_payload(tok_per_s=100.0))
+        current = history.normalize(_payload(tok_per_s=40.0))  # -60%
+        failures, _, _ = check_regression.check(current, base)
+        assert any("tok_per_s" in f for f in failures)
+
+    def test_within_band_passes(self):
+        base = self._history(_payload(tok_per_s=100.0))
+        current = history.normalize(_payload(tok_per_s=60.0))  # -40%
+        failures, _, _ = check_regression.check(current, base)
+        assert not any("tok_per_s" in f for f in failures)
+
+    def test_ratio_regression_tight_band(self):
+        base = self._history(_payload(overhead=0.10))
+        worse = history.normalize(_payload(overhead=0.30))
+        failures, _, _ = check_regression.check(worse, base)
+        assert any("traffic_overhead" in f for f in failures)
+        # Inside rel+abs slack: 0.10 -> 0.14 is fine.
+        ok = history.normalize(_payload(overhead=0.14))
+        failures, _, _ = check_regression.check(ok, base)
+        assert not failures
+
+    def test_dirty_baseline_excluded(self):
+        base = self._history(_payload(tok_per_s=1000.0, dirty=True))
+        current = history.normalize(_payload(tok_per_s=40.0))
+        failures, warnings, _ = check_regression.check(current, base)
+        assert not failures                    # dirty row never a baseline
+        assert warnings
+
+    def test_foreign_host_throughput_excluded(self):
+        base = self._history(_payload(tok_per_s=1000.0,
+                                      host="Darwin-arm64"))
+        current = history.normalize(_payload(tok_per_s=40.0))
+        failures, _, _ = check_regression.check(current, base)
+        assert not any("tok_per_s" in f for f in failures)
+        # Ratio metrics stay host-independent.
+        base = self._history(_payload(overhead=0.10, host="Darwin-arm64"))
+        worse = history.normalize(_payload(overhead=0.40))
+        failures, _, _ = check_regression.check(worse, base)
+        assert any("traffic_overhead" in f for f in failures)
+
+    def test_cli_exit_codes(self, tmp_path, capsys):
+        hist = tmp_path / "hist.jsonl"
+        history.append_history(str(hist), [_payload(tok_per_s=100.0)])
+        good = tmp_path / "good.json"
+        good.write_text(json.dumps(_payload(tok_per_s=95.0)))
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps(_payload(tok_per_s=10.0)))
+
+        assert check_regression.main(
+            ["--history", str(hist), str(good)]) == 0
+        assert check_regression.main(
+            ["--history", str(hist), str(bad)]) == 1
+        out = capsys.readouterr().out
+        assert "FAIL" in out and "baseline" in out
+
+    def test_improvement_never_fails(self):
+        base = self._history(_payload(tok_per_s=100.0, overhead=0.2))
+        current = history.normalize(_payload(tok_per_s=500.0,
+                                             overhead=0.01))
+        failures, _, _ = check_regression.check(current, base)
+        assert not failures

@@ -16,6 +16,7 @@ Covers the telemetry contracts:
 """
 
 import json
+import re
 
 import jax
 import numpy as np
@@ -122,6 +123,50 @@ class TestRegistry:
         assert 'repro_free{shard="1"} 11' in text
         assert 'repro_resident{shard="1",tenant="t0"} 4' in text
         assert 'repro_lat_count{shard="1"} 1' in text
+
+    def test_prometheus_escaping_parses_back(self):
+        # Hostile label values and help text: backslash, quote, newline.
+        reg = MetricsRegistry()
+        evil = 'a\\b"c\nd'
+        reg.gauge("resident", 'help \\ with\nnewline',
+                  fn=lambda: {evil: 7}, label="tenant")
+        reg.counter("ticks", "plain").inc(2)
+        text = reg.prometheus(labels={"shard": evil})
+
+        # Exposition-format invariant: every sample is one line, every
+        # quoted label value uses only \\ \" \n escapes.
+        samples = {}
+        helps = {}
+        for line in text.splitlines():
+            if line.startswith("# HELP "):
+                name, help_ = line[7:].split(" ", 1)
+                helps[name] = help_
+                continue
+            if line.startswith("#") or not line:
+                continue
+            name_part, value = line.rsplit(" ", 1)
+            labels = {}
+            if "{" in name_part:
+                name, rest = name_part.split("{", 1)
+                body = rest.rsplit("}", 1)[0]
+                for m in re.finditer(r'(\w+)="((?:[^"\\]|\\.)*)"', body):
+                    raw = m.group(2)
+                    assert "\n" not in raw
+                    labels[m.group(1)] = (raw.replace("\\n", "\n")
+                                          .replace('\\"', '"')
+                                          .replace("\\\\", "\\"))
+            else:
+                name = name_part
+            samples[(name, tuple(sorted(labels.items())))] = float(value)
+
+        key = ("repro_resident",
+               (("shard", evil), ("tenant", evil)))
+        assert samples[key] == 7
+        assert "\n" not in helps["repro_resident"]
+        assert helps["repro_resident"].replace("\\n", "\n").replace(
+            "\\\\", "\\") == 'help \\ with\nnewline'
+        # Labeled-gauge expansions carry HELP/TYPE headers too.
+        assert "# TYPE repro_resident gauge" in text
 
 
 class TestHistogram:
@@ -297,3 +342,37 @@ class TestEngineObs:
         pids = {e["pid"] for e in
                 cluster.export_trace()["traceEvents"]}
         assert pids == {0, 1, 2}
+
+    def test_trace_valid_under_cluster_rotation(self, smoke, prompts,
+                                                tmp_path):
+        """Key rotation mid-run must not corrupt the merged trace:
+        still valid JSON, and per pid the spans of any single phase
+        never overlap (a rotation pausing a shard cannot interleave
+        two `decode_dispatch` spans on one track)."""
+        reg = TenantRegistry(KeyHierarchy(2), max_tenants=2)
+        reg.register("a")
+        reg.register("b")
+        sessions = [reg.open_session(t) for t in ("a", "b", "a")]
+        cluster = ClusterEngine(*smoke, shards=2, max_slots=2,
+                                page_tokens=4, pages_per_slot=4,
+                                scheme="seda", registry=reg,
+                                rotate_every=2, trace=True, audit=True)
+        for p, s in zip(prompts, sessions):
+            cluster.submit(p, max_new_tokens=6, session=s)
+        cluster.run()
+        assert cluster.snapshot()["rollup"]["rotations"] > 0
+
+        path = tmp_path / "trace.json"
+        doc = cluster.export_trace(str(path))
+        loaded = json.loads(path.read_text())   # valid JSON on disk
+        assert loaded == doc
+        by_pid_phase: dict = {}
+        for e in loaded["traceEvents"]:
+            assert set(e) >= {"name", "ph", "pid", "tid", "ts", "dur"}
+            by_pid_phase.setdefault((e["pid"], e["name"]), []).append(e)
+        assert len(by_pid_phase) > 1
+        for (pid, name), spans in by_pid_phase.items():
+            spans.sort(key=lambda e: e["ts"])
+            for prev, nxt in zip(spans, spans[1:]):
+                assert prev["ts"] + prev["dur"] <= nxt["ts"] + 1e-6, \
+                    (pid, name)

@@ -1,0 +1,172 @@
+"""Per-tenant SLO watchdog: breach counters, audit events, health.
+
+Breaches are injected deterministically — a fake ``now`` for the
+stuck-tick watchdog, direct verdict-hook calls for the integrity
+alarm, an absurdly tight target for TTFT — so the tests never depend
+on wall-clock speed.  The observation-only contract also holds:
+attaching a monitor must not change a single generated token.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import lm as lm_mod
+from repro.models.layers import init_params
+from repro.obs.audit import AuditLog
+from repro.obs.slo import SLOMonitor, merge_health
+from repro.serve.engine import SecureServingEngine
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    arch = get_arch("minitron-4b")
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    return arch, cfg, params
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(0)
+    return [list(map(int, rng.integers(1, 256, n))) for n in (3, 4)]
+
+
+def _engine(smoke, **kw):
+    arch, cfg, params = smoke
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_tokens", 4)
+    kw.setdefault("pages_per_slot", 4)
+    return SecureServingEngine(arch, cfg, params, **kw)
+
+
+def _run_some(eng, prompts, n=4):
+    for p in prompts:
+        eng.submit(prompt=p, max_new_tokens=n)
+    eng.run()
+
+
+class TestBreaches:
+    def test_stalled_tick_fires_counter_audit_and_health(self, smoke,
+                                                         prompts):
+        eng = _engine(smoke, scheme="seda", audit=AuditLog())
+        mon = SLOMonitor(stall_factor=2.0)
+        mon.attach(eng)
+        _run_some(eng, prompts)
+        assert eng.stats["slo_stuck_ticks"] == 0
+        assert not mon.hard_breach
+
+        # Idle engine (queue drained, slots empty): never stuck, even
+        # an eternity after the last tick.
+        assert mon.check_stalled(now=time.monotonic() + 1e6) is False
+        assert eng.stats["slo_stuck_ticks"] == 0
+
+        # Inject the stall: queue work, then pretend an eternity
+        # passed since the last _tick_end without a tick landing.
+        eng.submit(prompt=prompts[0], max_new_tokens=2)
+        mon.check_stalled(now=time.monotonic() + 1e6)
+        assert eng.stats["slo_stuck_ticks"] == 1
+        assert mon.hard_breach
+        health = mon.health()
+        assert health["status"] == "failing"
+        assert health["stuck"] is True
+        events = eng.audit.events("slo_breach")
+        assert any(e["kind"] == "stuck_tick" for e in events)
+        assert eng.audit.verify_chain()
+        # Latch: repeated checks while stuck don't re-count.
+        mon.check_stalled(now=time.monotonic() + 2e6)
+        assert eng.stats["slo_stuck_ticks"] == 1
+        # A fresh tick clears the latch.
+        _run_some(eng, prompts[:1], n=2)
+        assert mon.check_stalled(now=mon._last_end + 1e-9) is False
+        assert not mon.hard_breach
+
+    def test_integrity_burst_fires_alarm(self, smoke, prompts):
+        eng = _engine(smoke, scheme="seda", audit=AuditLog())
+        mon = SLOMonitor(integrity_window=16, integrity_threshold=0.5,
+                         integrity_min_failures=3)
+        mon.attach(eng)
+        _run_some(eng, prompts)
+        assert eng.stats["slo_integrity_alarms"] == 0
+
+        for _ in range(4):                      # injected IntegrityError burst
+            for hook in eng.page_io.verdict_hooks:
+                hook(False, "read", {"slot": 0})
+        assert eng.stats["slo_integrity_alarms"] == 1
+        assert mon.hard_breach
+        health = mon.health()
+        assert health["status"] == "failing"
+        assert health["integrity"]["alarm"] is True
+        assert health["integrity"]["failures"] >= 3
+        events = eng.audit.events("slo_breach")
+        assert any(e["kind"] == "integrity_rate" for e in events)
+        # More failures while alarmed: no double-count (transition-based).
+        for hook in eng.page_io.verdict_hooks:
+            hook(False, "read", {"slot": 0})
+        assert eng.stats["slo_integrity_alarms"] == 1
+        # A run of successes clears the alarm.
+        for _ in range(64):
+            for hook in eng.page_io.verdict_hooks:
+                hook(True, "read", {"slot": 0})
+        assert not mon.hard_breach
+
+    def test_ttft_breach_per_tenant(self, smoke, prompts):
+        eng = _engine(smoke, scheme="off", audit=AuditLog())
+        mon = SLOMonitor(ttft_ms=1e-6)          # nothing can meet this
+        mon.attach(eng)
+        _run_some(eng, prompts)
+        assert eng.stats["slo_ttft_breaches"] == len(prompts)
+        health = mon.health()
+        assert health["tenants"]["default"]["breaches"] == len(prompts)
+        # TTFT alone degrades but is not a hard breach.
+        assert health["status"] == "degraded"
+        assert not mon.hard_breach
+
+    def test_tick_p99_breach(self, smoke, prompts):
+        eng = _engine(smoke, scheme="off")
+        mon = SLOMonitor(p99_tick_ms=1e-9, min_ticks=2)
+        mon.attach(eng)
+        _run_some(eng, prompts)
+        assert eng.stats["slo_tick_p99_breaches"] == 1   # transition, once
+        assert mon.health()["ticks"]["p99_breached"] is True
+
+
+class TestContract:
+    def test_tokens_bit_identical_with_monitor(self, smoke, prompts):
+        bare = _engine(smoke, scheme="seda")
+        rids = [bare.submit(prompt=p, max_new_tokens=4) for p in prompts]
+        want = [bare.run()[r].generated for r in rids]
+
+        eng = _engine(smoke, scheme="seda", audit=AuditLog())
+        SLOMonitor(ttft_ms=1e-6, p99_tick_ms=1e-9).attach(eng)
+        rids = [eng.submit(prompt=p, max_new_tokens=4) for p in prompts]
+        done = eng.run()
+        assert [done[r].generated for r in rids] == want
+
+    def test_attach_twice_rejected(self, smoke):
+        eng = _engine(smoke, scheme="off")
+        SLOMonitor().attach(eng)
+        with pytest.raises(ValueError):
+            SLOMonitor().attach(eng)
+
+    def test_no_monitor_no_hooks(self, smoke):
+        eng = _engine(smoke, scheme="off")
+        assert not any(
+            isinstance(getattr(h, "__self__", None), SLOMonitor)
+            for h in eng.page_io.verdict_hooks)
+        assert not hasattr(eng, "slo")
+
+
+class TestHealth:
+    def test_merge_health_worst_wins(self):
+        ok = {"status": "ok", "shard": 0}
+        degraded = {"status": "degraded", "shard": 1}
+        failing = {"status": "failing", "shard": 2}
+        assert merge_health([ok, ok])["status"] == "ok"
+        assert merge_health([ok, degraded])["status"] == "degraded"
+        merged = merge_health([ok, degraded, failing])
+        assert merged["status"] == "failing"
+        assert len(merged["shards"]) == 3
