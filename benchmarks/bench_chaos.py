@@ -1,0 +1,240 @@
+"""Chaos benchmark: recovery latency + blast radius under injected faults.
+
+Replays a fixed, seeded fault schedule (``serve.faults.FaultPlan``)
+against the fault-tolerant engine and measures what containment costs:
+
+* **tamper rows** (one per verifying scheme) — a ciphertext bitflip is
+  injected into slot 0 mid-run; the row records end-to-end throughput
+  of the faulted run, the victim session's recovery latency in ticks
+  (fault tick -> finished), quarantine/recovery counters, and two
+  identity bits: ``unaffected_identical`` (every other session's tokens
+  bit-match the fault-free run) and ``recovered_identical`` (the
+  victim's recomputed tokens bit-match the fault-free run);
+* **shard-kill rows** (``off`` and ``seda``) — one shard of a 2-shard
+  cluster raises mid-run; the row records the failover counter and the
+  same identity bits across the drained-and-recomputed sessions.
+
+``check_chaos.py`` gates CI on these rows: every session recovered,
+none lost, no token divergence.  Standalone JSON mode::
+
+    PYTHONPATH=src python benchmarks/bench_chaos.py --seed 7 \\
+        --json bench-chaos.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.secure_exec import SCHEMES
+from repro.models import lm as lm_mod
+from repro.models.layers import init_params
+from repro.serve.cluster import ClusterEngine
+from repro.serve.engine import SecureServingEngine
+from repro.serve.faults import Fault, FaultPlan
+
+try:                                    # package or script invocation
+    from benchmarks._meta import stamp
+except ImportError:
+    from _meta import stamp  # noqa: E402
+
+VERIFYING = tuple(s for s in SCHEMES if SCHEMES[s].verify != "none")
+FAULT_TICK = 3
+
+
+def _prompts(cfg, seed: int, batch: int, prompt_len: int) -> list:
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
+            for _ in range(batch)]
+
+
+def _run(eng, prompts, gen_len: int):
+    """Serve the batch; returns (rids, tokens-per-rid, steady tok/s)."""
+    rids = [eng.submit(prompt=p, max_new_tokens=gen_len) for p in prompts]
+    eng.step()                      # admission + first decode (compiles)
+    t0 = time.perf_counter()
+    while eng._n_waiting() or any(s is not None for s in eng.slots):
+        eng.step()
+    eng.run()                       # end-of-run deferred checks
+    dt = time.perf_counter() - t0
+    toks = [list(eng.requests[r].generated) for r in rids]
+    n_tok = sum(len(t) for t in toks)
+    return rids, toks, n_tok / max(dt, 1e-9)
+
+
+def _run_cluster(eng, prompts, gen_len: int):
+    rids = [eng.submit(prompt=p, max_new_tokens=gen_len) for p in prompts]
+    eng.step()
+    t0 = time.perf_counter()
+    while eng._busy():
+        eng.step()
+    eng.run()
+    dt = time.perf_counter() - t0
+    toks = [list(eng.requests[r].generated) for r in rids]
+    n_tok = sum(len(t) for t in toks)
+    return rids, toks, n_tok / max(dt, 1e-9)
+
+
+def _identity(eng, rids, toks, want) -> dict:
+    victims = [i for i, r in enumerate(rids)
+               if eng.requests[r].integrity_retries
+               or eng.requests[r].n_evictions]
+    return {
+        "unaffected_identical": all(
+            toks[i] == want[i] for i in range(len(rids))
+            if i not in victims),
+        "recovered_identical": all(toks[i] == want[i] for i in victims),
+        "n_victims": len(victims),
+    }
+
+
+def _measure_tamper(arch, cfg, params, scheme: str, *, seed: int,
+                    batch: int, gen_len: int, prompt_len: int,
+                    page_tokens: int, pages_per_slot: int) -> dict:
+    kw = dict(scheme=scheme, max_slots=batch, page_tokens=page_tokens,
+              pages_per_slot=pages_per_slot,
+              n_pages=batch * pages_per_slot + 4)  # quarantine headroom
+    prompts = _prompts(cfg, seed, batch, prompt_len)
+
+    base = SecureServingEngine(arch, cfg, params, fault_tolerance=True,
+                               **kw)
+    _, want, _ = _run(base, prompts, gen_len)
+
+    eng = SecureServingEngine(arch, cfg, params, fault_tolerance=True,
+                              **kw)
+    FaultPlan([Fault(tick=FAULT_TICK, kind="bitflip", slot=0)]).attach(eng)
+    rids, toks, tok_per_s = _run(eng, prompts, gen_len)
+
+    victims = [r for r in rids if eng.requests[r].integrity_retries]
+    recovery_ticks = max(
+        (eng.requests[r].done_tick - FAULT_TICK for r in victims
+         if eng.requests[r].done_tick is not None), default=None)
+    row = {
+        "name": f"chaos_bitflip_{scheme}",
+        "mode": "bitflip",
+        "scheme": scheme,
+        "batch": batch,
+        "gen_len": gen_len,
+        "tok_per_s": tok_per_s,
+        "recovery_ticks": recovery_ticks,
+        "quarantined_pages": eng.stats["integrity_quarantined_pages"],
+        "sessions_recovered": eng.stats["sessions_recovered"],
+        "sessions_lost": eng.stats["sessions_lost"],
+        "deferred_mac_ok": bool(eng.deferred_check()),
+    }
+    row.update(_identity(eng, rids, toks, want))
+    return row
+
+
+def _measure_shard_kill(arch, cfg, params, scheme: str, *, seed: int,
+                        batch: int, gen_len: int, prompt_len: int,
+                        page_tokens: int, pages_per_slot: int,
+                        shards: int = 2) -> dict:
+    kw = dict(shards=shards, scheme=scheme,
+              max_slots=-(-batch // shards), page_tokens=page_tokens,
+              pages_per_slot=pages_per_slot)
+    prompts = _prompts(cfg, seed, batch, prompt_len)
+
+    base = ClusterEngine(arch, cfg, params, fault_tolerance=True, **kw)
+    _, want, _ = _run_cluster(base, prompts, gen_len)
+
+    eng = ClusterEngine(arch, cfg, params, fault_tolerance=True, **kw)
+    FaultPlan([Fault(tick=FAULT_TICK, kind="shard_kill",
+                     shard=shards - 1)]).attach_cluster(eng)
+    rids, toks, tok_per_s = _run_cluster(eng, prompts, gen_len)
+
+    agg = eng.engine_stats
+    row = {
+        "name": f"chaos_shardkill_{scheme}",
+        "mode": "shard_kill",
+        "scheme": scheme,
+        "batch": batch,
+        "shards": shards,
+        "gen_len": gen_len,
+        "tok_per_s": tok_per_s,
+        "shard_failovers": eng.stats["shard_failovers"],
+        "quarantined_pages": agg.get("integrity_quarantined_pages", 0),
+        "sessions_recovered": agg.get("sessions_recovered", 0),
+        "sessions_lost": agg.get("sessions_lost", 0),
+        "root_mac_ok": bool(eng.deferred_check()),
+    }
+    row.update(_identity(eng, rids, toks, want))
+    return row
+
+
+def collect(schemes=VERIFYING, kill_schemes=("off", "seda"), *,
+            arch_name: str = "minitron-4b", seed: int = 7,
+            batch: int = 4, gen_len: int = 6, prompt_len: int = 9,
+            page_tokens: int = 8, pages_per_slot: int = 4) -> list:
+    arch = get_arch(arch_name)
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    common = dict(seed=seed, batch=batch, gen_len=gen_len,
+                  prompt_len=prompt_len, page_tokens=page_tokens,
+                  pages_per_slot=pages_per_slot)
+    results = []
+    for scheme in schemes:
+        results.append(_measure_tamper(arch, cfg, params, scheme, **common))
+    for scheme in kill_schemes:
+        results.append(_measure_shard_kill(arch, cfg, params, scheme,
+                                           **common))
+    return results
+
+
+def run() -> list:
+    """benchmarks.run suite hook: CSV rows for a reduced sweep."""
+    rows = []
+    for r in collect(schemes=("seda",), kill_schemes=("seda",)):
+        rows.append({
+            "name": r["name"],
+            "us_per_call": 1e6 / max(r["tok_per_s"], 1e-9),
+            "derived": (f"tok/s={r['tok_per_s']:.1f} "
+                        f"recovered={r['sessions_recovered']} "
+                        f"lost={r['sessions_lost']} "
+                        f"identical={r['unaffected_identical']}"
+                        f"/{r['recovered_identical']}"),
+        })
+    return rows
+
+
+def main(argv=None) -> list:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="minitron-4b")
+    ap.add_argument("--schemes", default=",".join(VERIFYING))
+    ap.add_argument("--kill-schemes", default="off,seda")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen-len", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=9)
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--pages-per-slot", type=int, default=4)
+    ap.add_argument("--json", default=None, help="write results to this file")
+    args = ap.parse_args(argv)
+
+    results = collect(
+        schemes=tuple(args.schemes.split(",")),
+        kill_schemes=tuple(args.kill_schemes.split(",")),
+        arch_name=args.arch, seed=args.seed, batch=args.batch,
+        gen_len=args.gen_len, prompt_len=args.prompt_len,
+        page_tokens=args.page_tokens, pages_per_slot=args.pages_per_slot)
+    for r in results:
+        print(f"[chaos-bench] {r['name']:<24} tok/s={r['tok_per_s']:8.1f} "
+              f"recovered={r['sessions_recovered']} "
+              f"lost={r['sessions_lost']} "
+              f"identical={r['unaffected_identical']}"
+              f"/{r['recovered_identical']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(stamp({"benchmark": "chaos", "seed": args.seed,
+                             "results": results}), f, indent=2)
+        print(f"[chaos-bench] wrote {args.json}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

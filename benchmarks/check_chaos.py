@@ -1,0 +1,73 @@
+"""CI gate: the chaos bench must show faults contained, not survived
+by luck.
+
+Reads a ``bench_chaos.py`` JSON artifact and fails (exit 1) unless
+every row shows:
+
+* ``sessions_lost == 0`` — no session was declared dead; every victim
+  of the injected fault recovered within the retry budget;
+* ``sessions_recovered > 0`` — the fault actually fired and recovery
+  actually ran (a silently dead injection hook would otherwise make
+  the identity checks vacuous);
+* ``unaffected_identical`` — sessions untouched by the fault produced
+  bit-identical tokens to the fault-free run (quarantine blast radius
+  stayed at one session / one shard);
+* ``recovered_identical`` — the recovered sessions' recomputed tokens
+  bit-match the fault-free run (secure recompute, not approximation);
+
+and every ``shard_kill`` row additionally ``shard_failovers > 0``.
+
+Usage::
+
+    python benchmarks/check_chaos.py bench-chaos.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check_rows(results: list) -> int:
+    if not results:
+        print("[chaos] FAIL: no chaos rows to gate on")
+        return 1
+    ok = True
+
+    def fail(label: str, msg: str) -> None:
+        nonlocal ok
+        print(f"[chaos] FAIL: {label}: {msg}")
+        ok = False
+
+    for r in results:
+        label = r.get("name", r.get("scheme", "?"))
+        if r.get("sessions_lost", 0) != 0:
+            fail(label, f"{r['sessions_lost']} session(s) lost — recovery "
+                        f"did not bring every victim back")
+        if not r.get("sessions_recovered", 0):
+            fail(label, "zero sessions_recovered — the injected fault "
+                        "never fired or containment never ran")
+        if not r.get("unaffected_identical", False):
+            fail(label, "unaffected sessions diverged from the fault-free "
+                        "run — containment leaked across sessions")
+        if not r.get("recovered_identical", False):
+            fail(label, "recovered sessions diverged from the fault-free "
+                        "run — recompute recovery is not exact")
+        if r.get("mode") == "shard_kill" and not r.get("shard_failovers", 0):
+            fail(label, "shard-kill row recorded zero shard_failovers")
+    n_kill = sum(1 for r in results if r.get("mode") == "shard_kill")
+    print(f"[chaos] {len(results)} rows ({n_kill} shard-kill) checked")
+    return 0 if ok else 1
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        data = json.load(f)
+    rc = check_rows(data.get("results", []))
+    if rc == 0:
+        print("[chaos] ok")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1]))

@@ -12,11 +12,11 @@ import sys
 import traceback
 import types
 
-from benchmarks import (bench_area_power, bench_crypt_kernels,
-                        bench_memory_traffic, bench_multi_tenant,
-                        bench_performance, bench_secure_serving,
-                        bench_secure_step, bench_sharded_serving,
-                        bench_table3)
+from benchmarks import (bench_area_power, bench_chaos,
+                        bench_crypt_kernels, bench_memory_traffic,
+                        bench_multi_tenant, bench_performance,
+                        bench_secure_serving, bench_secure_step,
+                        bench_sharded_serving, bench_table3)
 
 SUITES = {
     "fig4_area_power": bench_area_power,
@@ -30,6 +30,7 @@ SUITES = {
         run=bench_secure_serving.run_decode_scaling),
     "multi_tenant_serving": bench_multi_tenant,
     "sharded_serving": bench_sharded_serving,
+    "chaos": bench_chaos,
 }
 
 

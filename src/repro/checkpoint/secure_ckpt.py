@@ -8,7 +8,13 @@ state.  Restore verifies before trusting — a flipped byte anywhere
 fails loudly.
 
 Fault-tolerance properties:
-  * atomic: write to ``<dir>.tmp`` then rename;
+  * crash-safe: leaves and manifest are fsynced into ``<dir>.tmp``, the
+    manifest is written last, and the publish is a rename that never
+    destroys the previous checkpoint first (the old directory is moved
+    aside and removed only after the new one is in place) — a crash at
+    any point leaves either the old or the new checkpoint discoverable,
+    never a torn one (``latest_step``/``load_checkpoint`` ignore
+    ``.tmp``/``.old`` debris and manifest-less directories);
   * self-describing manifest (step, specs, mesh shape at save time);
   * elastic: arrays are stored unsharded (gathered), so restore can
     re-shard onto any mesh (launch/elastic.py);
@@ -43,6 +49,35 @@ def _leaf_files(flat_paths) -> list:
     return [f"leaf_{i:05d}.bin" for i in range(len(flat_paths))]
 
 
+def _write_durable(path: str, data: bytes) -> None:
+    """Write + flush + fsync: the bytes are on disk before rename."""
+    with open(path, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(path: str) -> None:
+    """Persist directory-entry metadata (renames) — best effort on
+    filesystems that reject directory fds."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform-dependent
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - platform-dependent
+        pass
+    finally:
+        os.close(fd)
+
+
+def _is_complete(path: str) -> bool:
+    """A checkpoint directory counts only once its manifest exists —
+    the manifest is written last, so its presence implies every leaf."""
+    return os.path.isfile(os.path.join(path, MANIFEST))
+
+
 def save_checkpoint(directory: str, step: int, tree: Any,
                     keys: sm.SecureKeys, *, block_bytes: int = 512,
                     extra_state: Optional[dict] = None,
@@ -56,15 +91,17 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     state = sm.protect(tree, keys, spec, step=step)
 
     final = os.path.join(directory, f"step_{step:08d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    tmp, old = final + ".tmp", final + ".old"
+    for stale in (tmp, old):            # debris from a prior crash
+        if os.path.exists(stale):
+            shutil.rmtree(stale)
     os.makedirs(tmp, exist_ok=True)
 
     flat, _ = jax.tree_util.tree_flatten(tree)
     files = _leaf_files(flat)
     for ct, fname in zip(state.ciphertexts, files):
-        np.asarray(ct).tofile(os.path.join(tmp, fname))
+        _write_durable(os.path.join(tmp, fname),
+                       np.asarray(ct).tobytes())
 
     manifest = {
         "step": step,
@@ -81,11 +118,19 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         "mesh_shape": list(mesh_shape) if mesh_shape else None,
         "extra_state": extra_state or {},
     }
-    with open(os.path.join(tmp, MANIFEST), "w") as f:
-        json.dump(manifest, f, indent=1)
+    # The manifest is written LAST (and fsynced): its presence is the
+    # commit record for the whole directory.
+    _write_durable(os.path.join(tmp, MANIFEST),
+                   json.dumps(manifest, indent=1).encode())
+    _fsync_dir(tmp)
+    # Publish without a destroy-then-rename window: move any previous
+    # checkpoint aside, rename the new one in, only then drop the old.
     if os.path.exists(final):
-        shutil.rmtree(final)
+        os.rename(final, old)
     os.rename(tmp, final)  # atomic publish
+    _fsync_dir(directory)
+    if os.path.exists(old):
+        shutil.rmtree(old)
     return final
 
 
@@ -96,6 +141,9 @@ def load_checkpoint(path: str, template: Any, keys: sm.SecureKeys,
 
     Raises CheckpointError when integrity verification fails.
     """
+    if not _is_complete(path):
+        raise CheckpointError(f"no manifest in {path}: not a published "
+                              f"checkpoint (torn or foreign directory)")
     with open(os.path.join(path, MANIFEST)) as f:
         manifest = json.load(f)
 
@@ -136,8 +184,13 @@ def load_checkpoint(path: str, template: Any, keys: sm.SecureKeys,
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """The newest *published* step: ``.tmp``/``.old`` debris and
+    directories without a manifest (torn by a crash predating the
+    write-manifest-last protocol) are never offered for restore."""
     if not os.path.isdir(directory):
         return None
     steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")]
+             if d.startswith("step_")
+             and not d.endswith(".tmp") and not d.endswith(".old")
+             and _is_complete(os.path.join(directory, d))]
     return max(steps) if steps else None

@@ -147,6 +147,11 @@ def main(argv=None) -> dict:
                     help="serve through an N-shard cluster engine, one "
                          "paged pool per device (--engine paged only; "
                          "0 = single shard engine)")
+    ap.add_argument("--fault-tolerance", action="store_true",
+                    help="contain integrity faults instead of aborting: "
+                         "quarantine failing pages, recover sessions by "
+                         "secure recompute, fail over compromised shards "
+                         "(--engine paged only)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress informational output")
     ap.add_argument("--json-logs", action="store_true",
@@ -189,11 +194,12 @@ def main(argv=None) -> dict:
     if args.engine != "paged" and (args.trace_out or args.metrics_json
                                    or args.metrics_prom or args.audit_out
                                    or args.slo_ttft_ms or args.slo_p99_ticks
-                                   or args.http_port or args.profile_json):
+                                   or args.http_port or args.profile_json
+                                   or args.fault_tolerance):
         raise SystemExit("--trace-out/--metrics-json/--metrics-prom/"
-                         "--audit-out/--slo-*/--http-port/--profile-json "
-                         "need --engine paged (the simple loop has no "
-                         "observability surface)")
+                         "--audit-out/--slo-*/--http-port/--profile-json/"
+                         "--fault-tolerance need --engine paged (the "
+                         "simple loop has no observability surface)")
 
     arch = get_arch(args.arch)
     if arch.kind == "encdec":
@@ -257,6 +263,7 @@ def _serve_paged(arch, cfg, params, args) -> dict:
             registry.register(f"tenant-{t}")
             sessions.append(registry.open_session(f"tenant-{t}"))
     obs_kw = dict(trace=bool(args.trace_out), audit=bool(args.audit_out))
+    ft = True if args.fault_tolerance else None
     if args.shards:
         from repro.serve.cluster import ClusterEngine
         per_shard = -(-args.batch // args.shards)
@@ -266,14 +273,16 @@ def _serve_paged(arch, cfg, params, args) -> dict:
             pages_per_slot=pages_per_slot,
             n_pages=-(-n_pages // args.shards),
             keys=SecureKeys.derive(args.seed),
-            registry=registry, rotate_every=args.rotate_every, **obs_kw)
+            registry=registry, rotate_every=args.rotate_every,
+            fault_tolerance=ft, **obs_kw)
         stats_of = lambda: dict(eng.engine_stats, **eng.stats)  # noqa: E731
     else:
         eng = SecureServingEngine(
             arch, cfg, params, scheme=args.scheme, max_slots=args.batch,
             page_tokens=args.page_tokens, pages_per_slot=pages_per_slot,
             n_pages=n_pages, keys=SecureKeys.derive(args.seed),
-            registry=registry, rotate_every=args.rotate_every, **obs_kw)
+            registry=registry, rotate_every=args.rotate_every,
+            fault_tolerance=ft, **obs_kw)
         stats_of = lambda: eng.stats  # noqa: E731
 
     # SLO watchdogs: one monitor per shard engine; /healthz reports the
@@ -301,9 +310,17 @@ def _serve_paged(arch, cfg, params, args) -> dict:
         rids.append(eng.submit(prompt=prompt, max_new_tokens=args.gen_len,
                                session=session))
     t0 = time.perf_counter()
-    done = eng.run()
+    done, sig = _run_graceful(eng, is_cluster=bool(args.shards))
     dt = time.perf_counter() - t0
-    n_tokens = sum(len(done[r].generated) for r in rids)
+    if sig is not None:
+        n_done = sum(1 for r in rids
+                     if eng.requests[r].state == "finished")
+        _log("shutdown", f"[serve] signal {sig}: graceful shutdown after "
+             f"tick {eng.tick} ({n_done}/{args.batch} requests finished); "
+             f"flushing observability artifacts",
+             signal=int(sig), tick=eng.tick, finished=n_done,
+             requests=args.batch)
+    n_tokens = sum(len(eng.requests[r].generated) for r in rids)
     rate = n_tokens / max(dt, 1e-9)
     stats = stats_of()
     mode = f"paged/{args.scheme}" + (
@@ -337,13 +354,68 @@ def _serve_paged(arch, cfg, params, args) -> dict:
              **{"health": health})
     if server is not None:
         server.shutdown()
-    toks = np.asarray([done[r].generated for r in rids], np.int32)
+    if sig is None and all(eng.requests[r].state == "finished"
+                           for r in rids):
+        toks = np.asarray([done[r].generated for r in rids], np.int32)
+    else:
+        # Interrupted (or fault-tolerant with lost sessions): per-
+        # request emission lengths are ragged.
+        toks = [list(map(int, eng.requests[r].generated)) for r in rids]
     if any(m.hard_breach for m in monitors):
         _log("slo", "[serve] hard SLO breach (integrity alarm or stuck "
              "tick) — exiting non-zero")
         raise SystemExit(3)
     return {"tokens": toks, "tok_per_s": rate, "stats": stats,
             "latency": done.latency}
+
+
+def _run_graceful(eng, *, is_cluster: bool):
+    """Drive the engine tick-by-tick so SIGINT/SIGTERM drain cleanly.
+
+    A signal only sets a flag: the in-flight tick always finishes (no
+    torn pool state, audit chain stays intact), the loop exits before
+    the next one, and the caller flushes artifacts and applies the
+    normal SLO exit-code discipline on the partial result.  Returns
+    ``(result, signum-or-None)``; prior handlers are restored."""
+    import signal
+
+    from repro.serve.engine import RunResult, latency_percentiles
+
+    got: list = []
+    prev = {}
+    for s in (signal.SIGINT, signal.SIGTERM):
+        try:
+            prev[s] = signal.signal(s, lambda signum, frame:
+                                    got.append(signum))
+        except ValueError:  # pragma: no cover - not the main thread
+            pass
+
+    def busy() -> bool:
+        if is_cluster:
+            return eng._busy()
+        return bool(eng._n_waiting()
+                    or any(s is not None for s in eng.slots))
+
+    try:
+        for _ in range(100_000):
+            if not busy() or got:
+                break
+            eng.step()
+        else:
+            raise RuntimeError("serve loop exceeded max_ticks")
+        if got:
+            result = RunResult(
+                {rid: req for rid, req in eng.requests.items()
+                 if req.state == "finished"})
+            result.latency = latency_percentiles(eng.requests.values())
+            return result, got[0]
+        # Drained: run() performs the end-of-run deferred checks (and,
+        # under fault tolerance, keeps ticking if containment requeued
+        # work) and builds the result exactly as before.
+        return eng.run(), None
+    finally:
+        for s, h in prev.items():
+            signal.signal(s, h)
 
 
 def _start_http(port: int, monitors: list, eng):

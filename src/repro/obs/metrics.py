@@ -57,6 +57,12 @@ ENGINE_COUNTERS = {
                              "prefill",
     "integrity_verdicts": "host-synced MAC-gate verdicts observed",
     "integrity_failures": "MAC-gate / deferred-MAC verdicts that failed",
+    "integrity_quarantined_pages": "physical frames permanently retired "
+                                   "after a localized integrity failure",
+    "sessions_recovered": "preempted sessions re-admitted via secure "
+                          "recompute after an integrity fault",
+    "sessions_lost": "sessions declared dead after exhausting the "
+                     "integrity-recovery retry budget",
     "audit_events": "records appended to the security audit log",
     "slo_ttft_breaches": "requests whose wall-clock ttft missed the "
                          "per-tenant SLO target",
@@ -72,6 +78,8 @@ CLUSTER_COUNTERS = {
     "migrations": "slots moved cross-shard via secure page migration",
     "root_checks": "cluster root-MAC checks",
     "rerouted_preemptions": "preempted requests re-routed across shards",
+    "shard_failovers": "shards folded out of the cluster after an "
+                       "integrity failure, sessions drained to survivors",
 }
 
 ENGINE_GAUGES = {

@@ -227,13 +227,27 @@ class SLOMonitor:
     @property
     def hard_breach(self) -> bool:
         """True when the engine should be pulled out of rotation (and
-        the launcher should exit non-zero): integrity alarm or stall."""
-        return self._integrity_alarm or self._stuck
+        the launcher should exit non-zero): integrity alarm, stall, or
+        a session lost for good to integrity recovery."""
+        return (self._integrity_alarm or self._stuck
+                or self._sessions_lost() > 0)
+
+    def _sessions_lost(self) -> int:
+        if self.engine is None:
+            return 0
+        return int(self.engine.stats.get("sessions_lost", 0))
+
+    def _recovering(self) -> int:
+        if self.engine is None or not hasattr(self.engine, "_n_recovering"):
+            return 0
+        return self.engine._n_recovering()
 
     def health(self) -> dict:
-        """/healthz body: ok | degraded (soft SLO misses) | failing."""
+        """/healthz body: ok | degraded (soft SLO misses or sessions
+        in integrity recovery) | failing."""
+        recovering = self._recovering()
         soft = (sum(self.tenant_breaches.values()) > 0
-                or self._tick_breached)
+                or self._tick_breached or recovering > 0)
         status = ("failing" if self.hard_breach
                   else "degraded" if soft else "ok")
         tenants = {t: {"p99_ms": round(_percentile(dq, 99), 3),
@@ -257,12 +271,25 @@ class SLOMonitor:
         }
         if self.engine is not None:
             out["shard"] = self.engine.shard_id
+            out["recovery"] = {
+                "recovering": recovering,
+                "sessions_lost": self._sessions_lost(),
+                "quarantined_pages":
+                    len(getattr(self.engine, "quarantined", ())),
+            }
         return out
 
 
 def merge_health(healths: list) -> dict:
-    """Cluster /healthz rollup: worst shard status wins."""
+    """Cluster /healthz rollup: worst shard status wins; recovery
+    state (sessions recovering/lost, quarantined pages) is summed."""
     if not healths:
         return {"status": "ok", "shards": []}
     worst = max(healths, key=lambda h: _STATUS_RANK.get(h["status"], 0))
-    return {"status": worst["status"], "shards": healths}
+    out = {"status": worst["status"], "shards": healths}
+    recs = [h["recovery"] for h in healths if h.get("recovery")]
+    if recs:
+        out["recovery"] = {k: sum(r[k] for r in recs)
+                          for k in ("recovering", "sessions_lost",
+                                    "quarantined_pages")}
+    return out

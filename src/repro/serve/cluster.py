@@ -29,7 +29,14 @@ its own accelerator:
 * **cluster-wide rotation** — :meth:`rotate` runs through the shared
   registry, whose pre/post hooks fan out to every shard engine: pages
   about to leave the retained key window are eagerly resealed on
-  whichever shard holds them.
+  whichever shard holds them;
+* **shard failover** — with ``fault_tolerance`` on, a shard whose tick
+  or root-MAC contribution raises is folded out of the cluster: its
+  sessions drain onto surviving shards by secure recompute (a
+  compromised shard's pages are never migrated or trusted), its pool
+  MAC leaves the root compression, and ``shard_failovers`` counts the
+  event.  Page-level faults stay contained inside the shard engine
+  (slot quarantine + recovery) and never escalate to failover.
 
 Works on one host: ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
 gives N CPU devices; with a single device the shards stay logical
@@ -45,6 +52,7 @@ from collections import deque
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import secure_memory as sm
 from repro.obs import audit as audit_mod
@@ -83,7 +91,8 @@ class ClusterEngine(SubmitAPI):
                  keys: Optional[sm.SecureKeys] = None,
                  registry=None, rotate_every: int = 0,
                  defer_interval: int = 16, devices=None,
-                 migrate: bool = True, trace=None, audit=None,
+                 migrate: bool = True, fault_tolerance=None,
+                 trace=None, audit=None,
                  **engine_kw):
         if shards < 1:
             raise ValueError("need at least one shard")
@@ -101,6 +110,16 @@ class ClusterEngine(SubmitAPI):
         self.rotate_every = rotate_every
         self.defer_interval = defer_interval
         self.migrate = migrate
+        # Shard failover mirrors the engine knob: None = strict (an
+        # IntegrityError escapes and aborts the cluster); True or a
+        # RecoveryPolicy also turns on page-level containment inside
+        # every shard engine.
+        self.ft = None
+        if fault_tolerance:
+            from repro.serve.faults import RecoveryPolicy
+            self.ft = (RecoveryPolicy() if fault_tolerance is True
+                       else fault_tolerance)
+        self.failed_shards: set = set()
         if keys is None:
             keys = sm.SecureKeys.derive(0)
         # One chained audit log for the whole cluster: every shard's
@@ -125,6 +144,7 @@ class ClusterEngine(SubmitAPI):
                 shard_id=s, n_shards=shards, device=dev,
                 preempt_hook=self._take_preempted,
                 defer_interval=defer_interval,
+                fault_tolerance=self.ft,
                 trace=bool(trace), audit=self.audit, **engine_kw))
         self.sharded = ShardedKVPool(self.engines)
         self.devices = devices
@@ -280,10 +300,12 @@ class ClusterEngine(SubmitAPI):
             cover = [e.prefix_cache.match_tokens(tenant_index, tokens[:-1])
                      if e.prefix_cache is not None else 0
                      for e in self.engines]
+        for s in self.failed_shards:      # folded-out shards take nothing
+            cover[s] = -1
         top = max(cover)
         best = None
         for s, engine in enumerate(self.engines):
-            if cover[s] < top:
+            if s in self.failed_shards or cover[s] < top:
                 continue
             score = float(self._load(engine))
             if tenant_index is not None and \
@@ -320,7 +342,13 @@ class ClusterEngine(SubmitAPI):
         """One cluster tick: every shard admits, then every shard's
         decode is dispatched, then every shard is collected — one
         multi-device dispatch wave per tick.  Returns finished
-        requests across all shards."""
+        requests across all shards.
+
+        With ``fault_tolerance`` on, a shard whose tick phase raises
+        without page context is failed over (:meth:`_failover`) while
+        the other shards' tick proceeds untouched; raises that carry
+        page context are contained inside that shard (quarantine +
+        recompute) and never escalate to failover."""
         self.tick += 1
         if (self.registry is not None and self.rotate_every
                 and self.tick % self.rotate_every == 0
@@ -329,47 +357,115 @@ class ClusterEngine(SubmitAPI):
             self._rotate_rr += 1
             self.rotate(self.registry.by_index(idx).tenant_id)
         finished: list = []
-        actives = [e._tick_begin(finished) for e in self.engines]
-        pendings = [e._decode_dispatch(a) if a else None
-                    for e, a in zip(self.engines, actives)]
-        for engine, active, pending in zip(self.engines, actives, pendings):
-            if pending is not None:
-                engine._decode_collect(active, pending, finished)
-        for engine in self.engines:
-            engine._tick_end()
-        if self.migrate and len(self.engines) > 1:
+        if self.ft is None:
+            actives = [e._tick_begin(finished) for e in self.engines]
+            pendings = [e._decode_dispatch(a) if a else None
+                        for e, a in zip(self.engines, actives)]
+            for engine, active, pending in zip(self.engines, actives,
+                                               pendings):
+                if pending is not None:
+                    engine._decode_collect(active, pending, finished)
+            for engine in self.engines:
+                engine._tick_end()
+        else:
+            self._step_ft(finished)
+        if self.migrate and self._n_live() > 1:
             self._maybe_migrate()
         self._requeue_orphans()
         if self.defer_interval and self.tick % self.defer_interval == 0:
             self._root_check()
         return finished
 
+    def _step_ft(self, finished: list) -> None:
+        """The guarded tick phases: dispatch-all-before-collect-any is
+        preserved across the surviving shards; a shard that raises is
+        skipped for the rest of the tick and failed over at the end."""
+        live = self._live_engines()
+        failed_now: dict = {}
+
+        def guard(engine, fn, *a):
+            if engine.shard_id in failed_now:
+                return None
+            try:
+                return fn(*a)
+            except IntegrityError as err:
+                if getattr(err, "ctx", None) is not None:
+                    # Engine-raised with fault context: page-level,
+                    # contained in place on that shard.
+                    engine._contain_error(err)
+                else:
+                    failed_now[engine.shard_id] = err
+                return None
+
+        actives = [guard(e, e._tick_begin, finished) for e in live]
+        pendings = [guard(e, e._decode_dispatch, a) if a else None
+                    for e, a in zip(live, actives)]
+        for engine, active, pending in zip(live, actives, pendings):
+            if pending is not None:
+                guard(engine, engine._decode_collect, active, pending,
+                      finished)
+        for engine in live:
+            guard(engine, engine._tick_end)
+        for shard, err in failed_now.items():
+            self._failover(shard, err)
+
     def run(self, max_ticks: int = 100_000) -> RunResult:
-        """Drive cluster ticks until every submitted request finished."""
+        """Drive cluster ticks until every submitted request finished
+        (or, with fault tolerance on, failed for good)."""
         for _ in range(max_ticks):
-            if not self._busy():
+            if self._busy():
+                self.step()
+                continue
+            if self._end_checks():
                 break
-            self.step()
         else:
             raise RuntimeError("run() exceeded max_ticks")
-        for engine in self.engines:
-            if engine.policy.deferred_model_mac:
-                engine._deferred_check()
-            if not engine.verify_every_step and not bool(engine._ok_accum):
-                raise IntegrityError(
-                    "accumulated page-MAC verification failed "
-                    f"(shard {engine.shard_id})")
-        self._root_check()
         result = RunResult({rid: req for rid, req in self.requests.items()
                             if req.state == "finished"})
         result.latency = latency_percentiles(self.requests.values())
         return result
+
+    def _end_checks(self) -> bool:
+        """End-of-run deferred checks across the surviving shards.
+
+        Strict mode raises on any failure; with fault tolerance on, a
+        shard-localizable failure is contained (page quarantine or
+        shard failover — either may requeue work, in which case the
+        run loop keeps ticking).  Returns True once fully drained."""
+        for engine in self._live_engines():
+            if engine.policy.deferred_model_mac:
+                try:
+                    engine._deferred_check()
+                except IntegrityError as err:
+                    if self.ft is None:
+                        raise
+                    engine._contain_error(err)
+            if not engine.verify_every_step and not bool(engine._ok_accum):
+                err = IntegrityError(
+                    "accumulated page-MAC verification failed "
+                    f"(shard {engine.shard_id})")
+                if self.ft is None:
+                    raise err
+                # The accumulator cannot say which tick failed; the
+                # whole shard is suspect and folds out.
+                engine._ok_accum = jnp.asarray(True)
+                self._failover(engine.shard_id, err)
+        self._root_check()
+        self._requeue_orphans()
+        return not self._busy()
 
     def _busy(self) -> bool:
         if self._orphans:
             return True
         return any(e._n_waiting() or any(s is not None for s in e.slots)
                    for e in self.engines)
+
+    def _live_engines(self) -> list:
+        return [e for e in self.engines
+                if e.shard_id not in self.failed_shards]
+
+    def _n_live(self) -> int:
+        return len(self.engines) - len(self.failed_shards)
 
     def rotate(self, tenant_id: str) -> int:
         """Cluster-wide live rotation (fans out to every shard)."""
@@ -379,10 +475,62 @@ class ClusterEngine(SubmitAPI):
 
     def _root_check(self) -> None:
         self.stats["root_checks"] += 1
-        if not self.sharded.deferred_root_check():
-            msg = f"cluster root MAC check failed (tick {self.tick})"
-            self._audit("integrity_error", op="root_check", detail=msg)
+        if self.sharded.deferred_root_check():
+            return
+        msg = f"cluster root MAC check failed (tick {self.tick})"
+        self._audit("integrity_error", op="root_check", detail=msg)
+        if self.ft is None:
             raise IntegrityError(msg)
+        # Localize: a root mismatch means at least one shard's pool MAC
+        # diverged from its incrementally-folded mirror (or its own
+        # deferred identity).  Those shards fold out; their sessions
+        # recompute on survivors.
+        bad = self.sharded.failing_shards()
+        if not bad:
+            raise IntegrityError(msg)   # unlocalizable — do not serve on
+        for shard in bad:
+            self._failover(shard, IntegrityError(msg))
+
+    def _failover(self, shard: int, err=None) -> None:
+        """Fold one failed shard out of the cluster.
+
+        Every session on the shard — running or queued — drains onto
+        the survivors by secure recompute (re-routed by
+        :meth:`_requeue_orphans`, re-prefilled from prompt + emitted
+        tokens at re-admission).  The failed shard's pages are NEVER
+        migrated or trusted, its free list is emptied so nothing can
+        land there, and its pool MAC leaves the cluster root
+        compression.  Raises when no survivor would remain."""
+        if shard in self.failed_shards:
+            return
+        if len(self.failed_shards) + 1 >= len(self.engines):
+            raise IntegrityError(
+                f"shard {shard} failed with no survivor left"
+                + (f": {err}" if err is not None else ""))
+        self.failed_shards.add(shard)
+        engine = self.engines[shard]
+        drained = 0
+        for i, slot in enumerate(engine.slots):
+            if slot is None:
+                continue
+            req = slot.req
+            engine._preempt(i)          # hook hands the req to _orphans
+            req.recovering = True
+            drained += 1
+        if engine.registry is None:
+            while engine.waiting:
+                self._orphans.append(engine.waiting.popleft())
+                drained += 1
+        else:
+            for queue in engine._tenant_waiting.values():
+                while queue:
+                    self._orphans.append(queue.popleft())
+                    drained += 1
+        engine.free_pages = []
+        self.sharded.fold_out(shard)
+        self.stats["shard_failovers"] += 1
+        self._audit("shard_failover", shard=shard, sessions=drained,
+                    detail=str(err) if err is not None else None)
 
     def deferred_check(self) -> bool:
         """Cluster root MAC + every shard's deferred pool MAC."""
@@ -433,7 +581,8 @@ class ClusterEngine(SubmitAPI):
         n = len(slot.pages)
         best = None
         for d, dst in enumerate(self.engines):
-            if d == src or None not in dst.slots:
+            if d == src or d in self.failed_shards or \
+                    None not in dst.slots:
                 continue
             # Headroom: the slot must land AND keep growing a while.
             if len(dst.free_pages) < n + 1:
@@ -450,12 +599,24 @@ class ClusterEngine(SubmitAPI):
 
     def _maybe_migrate(self) -> None:
         for src in range(len(self.engines)):
+            if src in self.failed_shards:
+                continue
             if not self._growth_pressure(self.engines[src]):
                 continue
             pick = self._pick_migration(src)
             if pick is None:
                 continue
-            self._migrate_slot(src, *pick)
+            if self.ft is None:
+                self._migrate_slot(src, *pick)
+                continue
+            try:
+                self._migrate_slot(src, *pick)
+            except IntegrityError as err:
+                # Migration re-verifies the source pages before the
+                # move; a failure is a source-shard page fault and is
+                # contained there (the slot stays put, recovery takes
+                # over).
+                self.engines[src]._contain_error(err)
 
     def _migrate_slot(self, src: int, slot_idx: int, dst: int) -> None:
         """Move one running slot's pages src -> dst, resealing them
@@ -501,7 +662,8 @@ class ClusterEngine(SubmitAPI):
             raise es._integrity_fail(
                 f"secure migration: source shard {src} page verification "
                 f"failed (slot {slot_idx}, scheme={es.scheme})",
-                op="migration", to_shard=dst)
+                op="migration", slot=slot_idx, to_shard=dst,
+                pages=[int(p) for p in slot.pages])
         dst_pages = [ed.free_pages.pop() for _ in range(n)]
         dst_ids = np.full((p,), ed.spec.scratch_page, np.int32)
         dst_ids[:n] = dst_pages
@@ -534,7 +696,7 @@ class ClusterEngine(SubmitAPI):
         # (only their pin is dropped); the private tail is freed.
         if slot.shared_n:
             es.prefix_cache.release(slot.shared_entries)
-        es.free_pages.extend(slot.pages[slot.shared_n:])
+        es._free(slot.pages[slot.shared_n:])
         ed._admit_seq += 1
         slot.pages = dst_pages
         slot.page_epochs = page_epochs

@@ -60,6 +60,22 @@ so the cluster can overlap every shard's decode in one multi-device
 dispatch, and pool updates are observable (``attach_pool_listener``)
 so the cluster can roll per-shard deferred pool MACs into a root MAC.
 
+**Fault containment.**  Constructed with ``fault_tolerance`` (``True``
+or a :class:`repro.serve.faults.RecoveryPolicy`), an integrity failure
+no longer aborts the process: :meth:`step` catches it, localizes the
+failing page(s) by re-reading every resident page through the raw
+verify path, permanently quarantines the condemned physical frames
+(never reallocated; scrubbed from the free list, the prefix cache and
+the deferred pool MAC), and preempts only the affected slot for
+**secure-recompute recovery** — re-admission re-prefills the prompt
+plus all already-emitted tokens, so the recovered stream is
+token-identical to a fault-free run.  A bounded re-read retry
+distinguishes transient faults from persistent tamper; a retry budget
+with exponential backoff bounds how often one session may recover
+before it is declared dead (``sessions_lost``).  Detection stays loud
+(audit events, counters, SLO integration) while the blast radius
+shrinks to one session.
+
 Host-side scheduling state (free list, queues, lengths, page epochs)
 is plain Python; everything that touches tensor data stays inside jit.
 """
@@ -76,6 +92,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mac as mac_mod
 from repro.core import multilevel
 from repro.core import secure_memory as sm
 from repro.core import vn as vn_mod
@@ -102,8 +119,15 @@ class Request:
     prompt: list
     max_new_tokens: int
     generated: list = dataclasses.field(default_factory=list)
-    state: str = "waiting"          # waiting | running | finished
+    state: str = "waiting"          # waiting | running | finished | failed
     n_evictions: int = 0
+    # Fault-containment state: recovering marks a session preempted by
+    # an integrity failure (cleared — and counted — on re-admission);
+    # hold_until delays re-admission for exponential backoff;
+    # integrity_retries counts recoveries against the retry budget.
+    recovering: bool = False
+    hold_until: int = 0
+    integrity_retries: int = 0
     tenant_idx: Optional[int] = None
     submit_tick: int = 0
     first_tick: Optional[int] = None    # tick the first token appeared
@@ -294,6 +318,7 @@ class SecureServingEngine(SubmitAPI):
                  device=None, preempt_hook=None,
                  prefix_cache: bool = False,
                  prefix_cache_pages: Optional[int] = None,
+                 fault_tolerance=None,
                  trace=None, audit=None):
         if arch.kind != "lm":
             raise ValueError("the paged serving engine supports decoder-only "
@@ -329,6 +354,15 @@ class SecureServingEngine(SubmitAPI):
         # the request must NOT be requeued locally — it may be re-routed
         # to a less loaded shard instead.
         self._preempt_hook = preempt_hook
+        # fault_tolerance=None keeps the strict discipline (an
+        # IntegrityError escapes step()/run() and aborts); True or a
+        # RecoveryPolicy turns on quarantine + secure-recompute
+        # recovery (see the module docstring).
+        self.ft = None
+        if fault_tolerance:
+            from repro.serve.faults import RecoveryPolicy
+            self.ft = (RecoveryPolicy() if fault_tolerance is True
+                       else fault_tolerance)
         self.params = (params if device is None
                        else jax.device_put(params, device))
 
@@ -388,6 +422,9 @@ class SecureServingEngine(SubmitAPI):
         self._rotate_rr = 0
         self.slots: list = [None] * max_slots
         self.free_pages: list = list(range(n_pages))
+        # Physical frames permanently retired after a localized
+        # integrity failure: never on the free list, never reallocated.
+        self.quarantined: set = set()
         self.requests: dict = {}
         self._next_rid = 0
         self._admit_seq = 0
@@ -585,9 +622,15 @@ class SecureServingEngine(SubmitAPI):
             self.stats["audit_events"] += 1
 
     def _integrity_fail(self, msg: str, **ctx) -> IntegrityError:
-        """Audit + build (the caller raises) one integrity failure."""
+        """Audit + build (the caller raises) one integrity failure.
+
+        ``ctx`` (op, tenant, slot, page/pages…) rides on the exception
+        as ``err.ctx`` so the fault-containment layer can quarantine
+        the named pages without re-localizing."""
         self._audit("integrity_error", detail=msg, **ctx)
-        return IntegrityError(msg)
+        err = IntegrityError(msg)
+        err.ctx = dict(ctx)
+        return err
 
     def snapshot(self) -> dict:
         """JSON-able metrics snapshot (gauges sampled now)."""
@@ -868,7 +911,7 @@ class SecureServingEngine(SubmitAPI):
         src_entries = src_chain[m:]
         short = pc.free_capacity()
         if short < len(missing):
-            self.free_pages.extend(pc.reclaim(len(missing) - short))
+            self._free(pc.reclaim(len(missing) - short))
         k = min(len(missing), pc.free_capacity(), len(self.free_pages))
         if k == 0:
             return 0
@@ -889,11 +932,12 @@ class SecureServingEngine(SubmitAPI):
             jnp.asarray(role), jnp.full((n,), dst.index, jnp.uint32),
             self._next_epoch())
         if not self.page_io.report_verdict(ok, "prefix_share"):
-            self.free_pages.extend(dst_pages)
+            self._free(dst_pages)
             raise self._integrity_fail(
                 f"reseal-on-share {src.tenant_id!r} -> {dst.tenant_id!r} "
                 f"failed source verification", op="prefix_share",
-                tenant=src.tenant_id, to_tenant=dst.tenant_id)
+                tenant=src.tenant_id, to_tenant=dst.tenant_id,
+                pages=[int(e.page_id) for e in src_entries])
         self.pool = new_pool
         parent = matched_dst[-1] if matched_dst else None
         for (key, n_tok), page_id in zip(missing, dst_pages):
@@ -1007,11 +1051,34 @@ class SecureServingEngine(SubmitAPI):
         blocking on any of them.
         """
         finished: list = []
-        active_idx = self._tick_begin(finished)
-        if active_idx:
-            pending = self._decode_dispatch(active_idx)
-            self._decode_collect(active_idx, pending, finished)
-        self._tick_end()
+        if self.ft is None:
+            active_idx = self._tick_begin(finished)
+            if active_idx:
+                pending = self._decode_dispatch(active_idx)
+                self._decode_collect(active_idx, pending, finished)
+            self._tick_end()
+            return finished
+        # Fault-contained tick: an IntegrityError raised by any phase
+        # (admission reseal/CoW/cache-insert, stale-epoch page-table
+        # checks, the decode MAC gate, the deferred pool check) is
+        # localized and quarantined instead of escaping.  Skipping the
+        # remainder of a phase for one tick is token-invariant: no
+        # slot's bookkeeping advanced for the skipped work.
+        try:
+            active_idx = self._tick_begin(finished)
+        except IntegrityError as err:
+            self._contain_error(err)
+            active_idx = []
+        try:
+            if active_idx:
+                pending = self._decode_dispatch(active_idx)
+                self._decode_collect(active_idx, pending, finished)
+        except IntegrityError as err:
+            self._contain_error(err)
+        try:
+            self._tick_end()
+        except IntegrityError as err:
+            self._contain_error(err)
         return finished
 
     def _tick_begin(self, finished: list) -> list:
@@ -1044,21 +1111,43 @@ class SecureServingEngine(SubmitAPI):
         -token and ticks-per-token) on ``.latency``.
         """
         for _ in range(max_ticks):
-            if not self._n_waiting() and all(s is None for s in self.slots):
+            if self._n_waiting() or any(s is not None for s in self.slots):
+                self.step()
+                continue
+            if self._drained():
                 break
-            self.step()
         else:
             raise RuntimeError("run() exceeded max_ticks")
-        if self.policy.deferred_model_mac:
-            self._deferred_check()
-        if not self.verify_every_step and not self.page_io.report_verdict(
-                self._ok_accum, "decode_accum"):
-            raise self._integrity_fail(
-                "accumulated page-MAC verification failed", op="decode_accum")
         result = RunResult({rid: r for rid, r in self.requests.items()
                             if r.state == "finished"})
         result.latency = self.latency_stats()
         return result
+
+    def _drained(self) -> bool:
+        """End-of-run verification; True when nothing was re-queued.
+
+        Without fault tolerance a failed check raises exactly as
+        before.  With it, a failure is contained — which may re-queue
+        recovering sessions, in which case :meth:`run` keeps ticking.
+        """
+        if self.policy.deferred_model_mac:
+            if self.ft is None:
+                self._deferred_check()
+            else:
+                try:
+                    self._deferred_check()
+                except IntegrityError as err:
+                    self._contain_error(err)
+        if not self.verify_every_step and not self.page_io.report_verdict(
+                self._ok_accum, "decode_accum"):
+            err = self._integrity_fail(
+                "accumulated page-MAC verification failed", op="decode_accum")
+            if self.ft is None:
+                raise err
+            self._contain_error(err)
+            self._ok_accum = jnp.asarray(True)
+        return not (self._n_waiting()
+                    or any(s is not None for s in self.slots))
 
     def latency_stats(self) -> dict:
         """p50/p95/p99 ticks-to-first-token + ticks-per-token (finished)."""
@@ -1176,13 +1265,20 @@ class SecureServingEngine(SubmitAPI):
         return min(len(req.prompt + req.generated) // self.page_tokens + 1,
                    self.pages_per_slot)
 
+    def _held(self, req: Request) -> bool:
+        """Recovery backoff: re-admission is delayed past hold_until."""
+        return req.hold_until > self.tick
+
     def _admit(self, finished: list) -> None:
         if self.registry is None:
-            while self.waiting and None in self.slots:
-                req = self.waiting[0]
-                if len(self.free_pages) < self._admission_pages(req):
+            while None in self.slots:
+                # FCFS over requests not held back by recovery backoff.
+                req = next((r for r in self.waiting
+                            if not self._held(r)), None)
+                if req is None or \
+                        len(self.free_pages) < self._admission_pages(req):
                     break
-                self.waiting.popleft()
+                self.waiting.remove(req)
                 self._admit_one(req, None, finished)
             return
         # Weighted-fair (stride) admission across tenant queues: among
@@ -1193,7 +1289,7 @@ class SecureServingEngine(SubmitAPI):
         while None in self.slots:
             best = None
             for idx, queue in self._tenant_waiting.items():
-                if not queue:
+                if not queue or self._held(queue[0]):
                     continue
                 tenant = self.registry.by_index(idx)
                 n_alloc = self._admission_pages(queue[0])
@@ -1258,6 +1354,7 @@ class SecureServingEngine(SubmitAPI):
         self.slots[slot_idx] = slot
         self.page_table.install(slot_idx, slot)
         req.state = "running"
+        self._note_recovered(req)
         req.generated.append(int(tok[0, 0]))
         if req.first_tick is None:
             req.first_tick = self.tick
@@ -1298,6 +1395,15 @@ class SecureServingEngine(SubmitAPI):
         self.slots[slot_idx] = slot
         self.page_table.install(slot_idx, slot)
         req.state = "running"
+        self._note_recovered(req)
+
+    def _note_recovered(self, req: Request) -> None:
+        """Count a recompute-recovery re-admission (any shard's)."""
+        if req.recovering:
+            req.recovering = False
+            self.stats["sessions_recovered"] += 1
+            self._audit("session_recovered", rid=req.rid,
+                        retries=req.integrity_retries)
 
     def _prefix_insert(self, tenant, seq: list, slot: _Slot) -> None:
         """Seed the cache from a freshly-prefilled slot (full miss only).
@@ -1314,7 +1420,7 @@ class SecureServingEngine(SubmitAPI):
             return              # partial hits never extend the chain here
         short = pc.free_capacity()
         if short < len(missing):
-            self.free_pages.extend(pc.reclaim(len(missing) - short))
+            self._free(pc.reclaim(len(missing) - short))
         k = min(len(missing), pc.free_capacity(), len(self.free_pages))
         if k == 0:
             return
@@ -1340,11 +1446,12 @@ class SecureServingEngine(SubmitAPI):
             jnp.asarray(dst_rows), jnp.asarray(dst_epochs),
             jnp.asarray(owners), self._next_epoch())
         if not self.page_io.report_verdict(ok, "prefix_insert"):
-            self.free_pages.extend(dst_pages)
+            self._free(dst_pages)
             raise self._integrity_fail(
                 f"prefix-cache insert for tenant {tenant.tenant_id!r} "
                 f"failed source verification",
-                op="prefix_insert", tenant=tenant.tenant_id)
+                op="prefix_insert", tenant=tenant.tenant_id,
+                pages=[int(p) for p in slot.pages[:k]])
         self.pool = new_pool
         parent = None
         for (key, n_tok), page_id in zip(missing, dst_pages):
@@ -1419,7 +1526,7 @@ class SecureServingEngine(SubmitAPI):
         while not self.free_pages:
             freed = self.prefix_cache.reclaim(1)
             if freed:
-                self.free_pages.extend(freed)
+                self._free(freed)
                 break
             self._preempt(self._pick_victim(tenant))
             if self.slots[idx] is None:
@@ -1445,7 +1552,7 @@ class SecureServingEngine(SubmitAPI):
             jnp.asarray(dst_rows), jnp.asarray(dst_epochs),
             jnp.asarray(owners), self._next_epoch())
         if not self.page_io.report_verdict(ok, "cow"):
-            self.free_pages.append(dst)
+            self._free([dst])
             raise self._integrity_fail(
                 f"copy-on-write of slot {idx} shared page {pos} failed "
                 f"verification (tenant {tenant.tenant_id!r})",
@@ -1483,7 +1590,7 @@ class SecureServingEngine(SubmitAPI):
     def _preempt(self, idx: int) -> None:
         slot = self.slots[idx]
         self._unpin_shared(slot)
-        self.free_pages.extend(slot.pages)
+        self._free(slot.pages)
         self.slots[idx] = None
         self.page_table.clear(idx)
         slot.req.state = "waiting"
@@ -1499,7 +1606,7 @@ class SecureServingEngine(SubmitAPI):
     def _release(self, idx: int) -> None:
         slot = self.slots[idx]
         self._unpin_shared(slot)
-        self.free_pages.extend(slot.pages)
+        self._free(slot.pages)
         self.slots[idx] = None
         self.page_table.clear(idx)
         slot.req.state = "finished"
@@ -1513,6 +1620,176 @@ class SecureServingEngine(SubmitAPI):
             req.done_tick = self.tick
             self._release(idx)
             finished.append(req)
+
+    # -- fault containment (quarantine + secure-recompute recovery) ----------
+
+    def _free(self, pages) -> None:
+        """Return pages to the free list — minus quarantined frames,
+        which are permanently retired."""
+        self.free_pages.extend(p for p in pages
+                               if int(p) not in self.quarantined)
+
+    def _n_recovering(self) -> int:
+        """Sessions currently preempted for secure-recompute recovery
+        (queued or backing off) — the SLO monitor's degraded signal."""
+        return sum(1 for r in self.requests.values() if r.recovering)
+
+    def _commit_repair(self, new_pool: kvp.PagedKVPool) -> None:
+        """Commit a repaired pool, resyncing listeners wholesale.
+
+        The tamper being repaired bypassed the pool setter (untrusted
+        memory does not announce writes), so folding the repair's
+        *delta* into the cluster mirrors would propagate the attacker's
+        divergence.  Listeners are instead told to re-adopt the
+        repaired pool MAC (``old_pool=None``)."""
+        self._pool = new_pool
+        for listener in self._pool_listeners:
+            listener(None, new_pool)
+
+    def _quarantine_pages(self, pages) -> None:
+        """Permanently retire physical frames after a localized fault.
+
+        The frames leave the free list forever, the prefix cache drops
+        any entry holding them, their MAC/VN metadata rows are scrubbed
+        and the deferred pool MAC is rebuilt from the scrubbed page
+        MACs — the pool's XOR identity holds again without trusting a
+        single tampered byte."""
+        fresh = sorted({int(p) for p in pages} - self.quarantined)
+        if not fresh:
+            return
+        self.quarantined.update(fresh)
+        self.free_pages = [p for p in self.free_pages
+                           if p not in self.quarantined]
+        if self.prefix_cache is not None:
+            self.prefix_cache.evict_pages(fresh)
+        pool = self.pool
+        ids = jnp.asarray(fresh, jnp.int32)
+        page_macs = pool.page_macs.at[ids].set(0)
+        block_macs = tuple(bm.at[ids].set(0) for bm in pool.block_macs)
+        page_vns = pool.page_vns.at[ids].set(0)
+        pool_mac = mac_mod.xor_aggregate(page_macs[: self.spec.n_pages])
+        self._commit_repair(pool._replace(
+            page_macs=page_macs, block_macs=block_macs,
+            page_vns=page_vns, pool_mac=pool_mac))
+        self.stats["integrity_quarantined_pages"] += len(fresh)
+        self._audit("quarantine", pages=fresh)
+
+    def _rebuild_pool_mac(self) -> None:
+        """Recompute the deferred pool MAC from the stored page MACs.
+
+        The containment fallback when localization finds no failing
+        page yet a pool-level check failed: the pool MAC itself — not
+        any page — was hit, and rebuilding it from page MACs that all
+        just re-verified restores the XOR identity.  Free pages' MACs
+        are unverifiable here, but they protect no live data and are
+        overwritten (and freshly MACed) by their next prefill."""
+        pool = self.pool
+        self._commit_repair(pool._replace(
+            pool_mac=mac_mod.xor_aggregate(
+                pool.page_macs[: self.spec.n_pages])))
+        self._audit("pool_mac_rebuild")
+
+    def _probe_page(self, slot_idx: int, pos: int) -> bool:
+        """Re-read one resident page through the raw verify path.
+
+        Retried ``ft.reread_retries`` extra times so a transient fault
+        does not condemn a healthy frame as persistent tamper.  Probe
+        verdicts flow through ``report_verdict`` like any other MAC
+        gate (op ``probe``)."""
+        slot = self.slots[slot_idx]
+        pid = int(slot.pages[pos])
+        ids = jnp.asarray([pid], jnp.int32)
+        attempts = 1 + (self.ft.reread_retries if self.ft is not None else 0)
+        for _ in range(attempts):
+            if self.registry is None:
+                _, ok = self._page_reader(1)(self.pool, ids)
+            else:
+                tenant = slot.tenant
+                epoch = slot.page_epochs[pos]
+                if epoch & kvp.PREFIX_ROLE:
+                    row = self.registry.cache_row(tenant.index)
+                else:
+                    try:
+                        row = self.registry.key_row(tenant.index, epoch)
+                    except KeyError:
+                        return False    # unverifiable == condemned
+                _, ok = self._page_reader(1)(
+                    self.pool, ids, self._bank(),
+                    jnp.asarray([row], jnp.int32),
+                    jnp.asarray([tenant.index], jnp.uint32),
+                    jnp.asarray([np.uint32(epoch)], jnp.uint32))
+            if self.page_io.report_verdict(ok, "probe", slot=slot_idx,
+                                           page=pid):
+                return True
+        return False
+
+    def _localize(self, slot_idxs=None) -> list:
+        """Per-page probe sweep over the given (default: all occupied)
+        slots; returns ``[(slot_idx, pos, page_id), ...]`` for every
+        resident page that persistently fails verification."""
+        idxs = (slot_idxs if slot_idxs is not None
+                else range(self.max_slots))
+        bad = []
+        for i in idxs:
+            slot = self.slots[i]
+            if slot is None:
+                continue
+            for pos in range(len(slot.pages)):
+                if not self._probe_page(i, pos):
+                    bad.append((i, pos, int(slot.pages[pos])))
+        return bad
+
+    def _preempt_recover(self, idx: int) -> None:
+        """Preempt one slot for secure-recompute recovery — or declare
+        its session dead once the retry budget is spent."""
+        slot = self.slots[idx]
+        req = slot.req
+        req.integrity_retries += 1
+        if self.ft is not None and \
+                req.integrity_retries > self.ft.max_retries:
+            self._unpin_shared(slot)
+            self._free(slot.pages)
+            self.slots[idx] = None
+            self.page_table.clear(idx)
+            req.state = "failed"
+            req.recovering = False
+            self.stats["sessions_lost"] += 1
+            self._audit("session_lost", rid=req.rid, slot=idx,
+                        retries=req.integrity_retries)
+            return
+        req.recovering = True
+        if self.ft is not None and self.ft.backoff_ticks:
+            req.hold_until = self.tick + self.ft.backoff_ticks * (
+                1 << (req.integrity_retries - 1))
+        self._audit("session_recovery", rid=req.rid, slot=idx,
+                    retries=req.integrity_retries)
+        self._preempt(idx)
+
+    def _contain_error(self, err: IntegrityError) -> None:
+        """Quarantine + recover after a caught integrity failure.
+
+        Pages named by the error's context are condemned directly;
+        otherwise a full localization sweep re-verifies every resident
+        page.  When nothing persistently fails — a transient fault or
+        a hit on the pool MAC itself — the deferred identity is
+        rebuilt instead, so the next pool-level check passes without
+        laundering any tampered page."""
+        ctx = getattr(err, "ctx", None) or {}
+        pages = [int(p) for p in ctx.get("pages", [])]
+        if "page" in ctx and int(ctx["page"]) not in pages:
+            pages.append(int(ctx["page"]))
+        if not pages:
+            pages = [b[2] for b in self._localize()]
+        self._audit("fault_contained", detail=str(err),
+                    op=ctx.get("op"), pages=pages)
+        if pages:
+            self._quarantine_pages(pages)
+            for i, slot in enumerate(self.slots):
+                if slot is not None and any(
+                        int(p) in self.quarantined for p in slot.pages):
+                    self._preempt_recover(i)
+        else:
+            self._rebuild_pool_mac()
 
     # -- decode --------------------------------------------------------------
 
@@ -1670,15 +1947,16 @@ class SecureServingEngine(SubmitAPI):
         toks, ok = pending
         if self.verify_every_step:
             if not self.page_io.report_verdict(ok, "decode"):
-                raise self._integrity_fail(
-                    f"page MAC verification failed at tick {self.tick} "
-                    f"(scheme={self.scheme}, shard={self.shard_id})",
-                    op="decode")
+                self._decode_failure(active_idx)
         else:
             self._ok_accum = self._ok_accum & ok
         toks = np.asarray(toks)
         for i in active_idx:
             slot = self.slots[i]
+            if slot is None:
+                continue    # quarantined + preempted by _decode_failure:
+                            # its bookkeeping must not advance — recompute
+                            # recovery replays from the last good token.
             if slot.tenant is not None:
                 # The dirty page was just re-encrypted under the
                 # tenant's CURRENT epoch (lazy rotation lands here).
@@ -1697,6 +1975,41 @@ class SecureServingEngine(SubmitAPI):
                 slot.req.first_tick = self.tick
                 self._observe_ttft(slot.req)
             self._maybe_finish(i, finished)
+
+    def _decode_failure(self, active_idx: list) -> None:
+        """The decode-tick MAC gate failed: localize, then contain.
+
+        Localization re-reads every active slot's resident pages and
+        condemns the ones that persistently fail.  Without fault
+        tolerance the strict discipline raises — now with the failing
+        page(s) in the error context.  With it, the condemned frames
+        are quarantined and only their slots preempted for recovery;
+        every other slot's reads verified, so its token and dirty write
+        are bit-identical to a fault-free tick and bookkeeping
+        proceeds.  An empty localization is a transient fault: the
+        tick's tokens came from reads that now re-verify, so nothing is
+        preempted."""
+        bad = self._localize(active_idx)
+        ctx = {}
+        if bad:
+            slot = self.slots[bad[0][0]]
+            ctx = dict(slot=bad[0][0], pages=[b[2] for b in bad])
+            if slot is not None and slot.tenant is not None:
+                ctx["tenant"] = slot.tenant.tenant_id
+        if self.ft is None:
+            raise self._integrity_fail(
+                f"page MAC verification failed at tick {self.tick} "
+                f"(scheme={self.scheme}, shard={self.shard_id})",
+                op="decode", **ctx)
+        if not bad:
+            self._audit("transient_fault", op="decode")
+            return
+        self._audit("fault_contained", op="decode",
+                    pages=[b[2] for b in bad])
+        self._quarantine_pages([b[2] for b in bad])
+        for idx in sorted({b[0] for b in bad}):
+            if self.slots[idx] is not None:
+                self._preempt_recover(idx)
 
     def _deferred_check(self) -> None:
         self.stats["deferred_checks"] += 1

@@ -795,6 +795,11 @@ class PageIO:
         # :meth:`report_verdict` — the observability layer counts and
         # audit-logs them without touching the traced computation.
         self.verdict_hooks: list = []
+        # Fault-injection hooks (repro.serve.faults): each may rewrite
+        # the verdict *before* it fans out to the observers, so an
+        # injected failure is indistinguishable downstream from a real
+        # one.  Empty (zero-cost) outside chaos tests/benchmarks.
+        self.fault_hooks: list = []
 
     def report_verdict(self, ok, op: str, **ctx) -> bool:
         """Fan one host-synced MAC-gate verdict out to the hooks.
@@ -804,6 +809,8 @@ class PageIO:
         with zero extra device syncs.
         """
         ok = bool(ok)
+        for hook in self.fault_hooks:
+            ok = bool(hook(ok, op, ctx))
         for hook in self.verdict_hooks:
             hook(ok, op, ctx)
         return ok
@@ -1393,6 +1400,28 @@ class PrefixCache:
             self._evict(victim)
             freed.append(victim.page_id)
         return freed
+
+    def evict_pages(self, page_ids) -> int:
+        """Drop every entry holding one of ``page_ids`` — plus its
+        descendants, unreachable without their ancestor — from the
+        index regardless of refcounts: the quarantine path.  A page
+        whose physical frame was retired must never satisfy a future
+        match.  Slots already pinned keep their entry objects
+        (:meth:`release` operates on the objects, not the index); the
+        chain simply stops being discoverable.  Returns the number of
+        entries dropped."""
+        bad = {int(p) for p in page_ids}
+        dropped, progress = 0, True
+        while progress:
+            progress = False
+            for e in list(self._entries.values()):
+                orphaned = (e.parent is not None
+                            and e.parent.key not in self._entries)
+                if e.page_id in bad or orphaned:
+                    self._evict(e)
+                    dropped += 1
+                    progress = True
+        return dropped
 
     def flush(self, tenant_index: Optional[int] = None) -> list:
         """Evict every unreferenced entry (optionally one tenant's) —

@@ -80,6 +80,8 @@ class ShardedKVPool:
         # Per-shard pool-MAC mirrors, maintained incrementally.
         self._mirrors = [jnp.zeros((mac.MAC_BYTES,), jnp.uint8)
                          for _ in self.engines]
+        # Shards still contributing to the root (failover folds out).
+        self._active = list(range(len(self.engines)))
         for shard, engine in enumerate(self.engines):
             engine.attach_pool_listener(
                 lambda old, new, s=shard: self._fold(s, old, new))
@@ -89,11 +91,42 @@ class ShardedKVPool:
     # -- root MAC maintenance -----------------------------------------------
 
     def _fold(self, shard: int, old_pool, new_pool) -> None:
-        delta = (new_pool.pool_mac if old_pool is None
-                 else old_pool.pool_mac ^ new_pool.pool_mac)
+        if old_pool is None:
+            # Wholesale (re-)adoption: the initial fold, or a repair
+            # commit after a tamper that bypassed the pool setter — a
+            # delta fold there would propagate the attacker's
+            # divergence into the mirror.
+            self._mirrors[shard] = jnp.asarray(
+                jax.device_put(new_pool.pool_mac, self._root_dev))
+            return
+        delta = old_pool.pool_mac ^ new_pool.pool_mac
         # Async 8-byte hop to the root's device; no host sync.
         self._mirrors[shard] = (self._mirrors[shard]
                                 ^ jax.device_put(delta, self._root_dev))
+
+    def fold_out(self, shard: int) -> None:
+        """Remove one shard from the root compression (failover).
+
+        The shard's pool MAC no longer participates in the root; the
+        compression's length seed and positional chain re-bind the
+        reduced shard set on both the actual and mirrored side."""
+        if shard in self._active:
+            self._active.remove(shard)
+
+    def failing_shards(self) -> list:
+        """Active shards whose pool state cannot be trusted: the pool's
+        own deferred identity fails, or its pool MAC diverged from the
+        incrementally-folded mirror.  Localizes a root-check failure."""
+        from repro.serve import kv_pages as kvp
+        bad = []
+        for s in self._active:
+            engine = self.engines[s]
+            if not bool(kvp.deferred_pool_check(engine.pool, engine.spec)):
+                bad.append(s)
+            elif not np.array_equal(np.asarray(self._mirrors[s]),
+                                    np.asarray(engine.pool.pool_mac)):
+                bad.append(s)
+        return bad
 
     def _compress(self, pool_macs) -> np.ndarray:
         """Keyed CBC-MAC over the ordered (shard, pool MAC) pairs.
@@ -120,8 +153,10 @@ class ShardedKVPool:
     @property
     def root_mac(self) -> jax.Array:
         """The cluster root MAC: the keyed compression of the
-        incrementally-maintained per-shard pool-MAC mirrors."""
-        return jnp.asarray(self._compress(self._mirrors))
+        incrementally-maintained per-shard pool-MAC mirrors (active
+        shards only — failed-over shards are folded out)."""
+        return jnp.asarray(self._compress(
+            [self._mirrors[s] for s in self._active]))
 
     @property
     def n_shards(self) -> int:
@@ -152,11 +187,14 @@ class ShardedKVPool:
         against its page MACs, and the keyed CBC compression of the
         actual ``(shard, pool MAC)`` sequence matches the compression
         of the incrementally-maintained mirrors.  Off the critical path
-        (cluster tick interval / end of run)."""
+        (cluster tick interval / end of run).  Failed-over shards are
+        folded out and no longer checked — nothing may trust them."""
         from repro.serve import kv_pages as kvp
-        for engine in self.engines:
+        for s in self._active:
+            engine = self.engines[s]
             if not bool(kvp.deferred_pool_check(engine.pool, engine.spec)):
                 return False
-        actual = self._compress([e.pool.pool_mac for e in self.engines])
-        mirrored = self._compress(self._mirrors)
+        actual = self._compress([self.engines[s].pool.pool_mac
+                                 for s in self._active])
+        mirrored = self._compress([self._mirrors[s] for s in self._active])
         return bool(np.array_equal(actual, mirrored))

@@ -1,0 +1,343 @@
+"""Chaos suite: deterministic fault injection against the secure engine.
+
+Every fault is scheduled by a seeded :class:`FaultPlan` (no wall-clock,
+no randomness at fire time), so each scenario is exactly reproducible:
+
+  * memory tamper (bitflip / VN bump / page swap) against one slot is
+    quarantined — only that session is preempted, every other session's
+    tokens are bit-identical to a fault-free run, and the recovered
+    session's final tokens match the fault-free run (secure recompute);
+  * ``IntegrityError`` never escapes ``step()`` for contained faults,
+    for every verifying scheme;
+  * a transient verdict glitch is distinguished from persistent tamper
+    by bounded re-read and costs nothing;
+  * a spent retry budget declares the session dead (``sessions_lost``)
+    without touching its neighbours;
+  * quarantined frames never return to the allocator;
+  * killing a shard fails it over: all of its sessions recover on the
+    survivors with ``sessions_lost == 0``, and the cluster root MAC
+    folds the dead shard out.
+
+Without ``fault_tolerance`` the strict discipline is unchanged: the
+same tamper still raises (the seed-era contract).
+"""
+
+import ast
+import inspect
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.secure_exec import SCHEMES
+from repro.models import lm as lm_mod
+from repro.models.layers import init_params
+from repro.obs.audit import AuditLog
+from repro.serve import cluster as cluster_mod
+from repro.serve import engine as engine_mod
+from repro.serve.cluster import ClusterEngine
+from repro.serve.engine import IntegrityError, SecureServingEngine
+from repro.serve.faults import FAULT_KINDS, Fault, FaultPlan, RecoveryPolicy
+
+VERIFYING = [s for s in SCHEMES if SCHEMES[s].verify != "none"]
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    arch = get_arch("minitron-4b")
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    return arch, cfg, params
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(0)
+    # Slot 0's prompt spans two pages at admission (page_tokens=4), so
+    # page_swap has an in-slot partner from the first tick.
+    return [list(map(int, rng.integers(1, 256, n))) for n in (6, 5)]
+
+
+def _engine(smoke, **kw):
+    arch, cfg, params = smoke
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_tokens", 4)
+    kw.setdefault("pages_per_slot", 4)
+    kw.setdefault("n_pages", 12)    # spare frames outlive quarantine
+    kw.setdefault("scheme", "seda")
+    return SecureServingEngine(arch, cfg, params, **kw)
+
+
+def _cluster(smoke, **kw):
+    arch, cfg, params = smoke
+    kw.setdefault("shards", 2)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_tokens", 4)
+    kw.setdefault("pages_per_slot", 4)
+    kw.setdefault("scheme", "seda")
+    return ClusterEngine(arch, cfg, params, **kw)
+
+
+def _serve(eng, prompts, n=4):
+    rids = [eng.submit(prompt=p, max_new_tokens=n) for p in prompts]
+    eng.run()
+    return rids, [list(eng.requests[r].generated) for r in rids]
+
+
+@pytest.fixture(scope="module")
+def baseline(smoke, prompts):
+    """Fault-free reference tokens, computed once per scheme."""
+    cache = {}
+
+    def get(scheme):
+        if scheme not in cache:
+            _, cache[scheme] = _serve(_engine(smoke, scheme=scheme), prompts)
+        return cache[scheme]
+
+    return get
+
+
+class TestPlan:
+    def test_seeded_plans_are_reproducible(self):
+        a = FaultPlan.random(7, n_faults=4, kinds=FAULT_KINDS,
+                             n_shards=2, n_slots=2)
+        b = FaultPlan.random(7, n_faults=4, kinds=FAULT_KINDS,
+                             n_shards=2, n_slots=2)
+        assert [vars(f) for f in a.faults] == [vars(f) for f in b.faults]
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            FaultPlan([Fault(tick=1, kind="meteor_strike")])
+
+
+class TestContainment:
+    @pytest.mark.parametrize("scheme", VERIFYING)
+    def test_bitflip_quarantined_and_recovered(self, smoke, prompts,
+                                               baseline, scheme):
+        want = baseline(scheme)
+        eng = _engine(smoke, scheme=scheme, fault_tolerance=True,
+                      audit=AuditLog())
+        FaultPlan([Fault(tick=3, kind="bitflip", slot=0)]).attach(eng)
+        rids = [eng.submit(prompt=p, max_new_tokens=4) for p in prompts]
+        eng.run()                       # IntegrityError must NOT escape
+        got = [list(eng.requests[r].generated) for r in rids]
+        # Unaffected session bit-identical AND recovered session's
+        # final tokens match the fault-free run (secure recompute).
+        assert got == want
+        assert all(eng.requests[r].state == "finished" for r in rids)
+        assert eng.stats["integrity_quarantined_pages"] >= 1
+        assert eng.stats["sessions_recovered"] >= 1
+        assert eng.stats["sessions_lost"] == 0
+        # Only the tampered session was preempted.
+        victims = [r for r in rids if eng.requests[r].n_evictions]
+        assert len(victims) == 1
+        assert eng.audit.events("quarantine")
+        assert eng.audit.events("session_recovered")
+        assert eng.audit.verify_chain()
+        assert eng.deferred_check()
+
+    @pytest.mark.parametrize("kind", ("vn_bump", "page_swap"))
+    def test_replay_and_splice_tamper_contained(self, smoke, prompts,
+                                                baseline, kind):
+        want = baseline("seda")
+        eng = _engine(smoke, scheme="seda", fault_tolerance=True)
+        plan = FaultPlan([Fault(tick=3, kind=kind, slot=0)]).attach(eng)
+        rids = [eng.submit(prompt=p, max_new_tokens=4) for p in prompts]
+        eng.run()
+        assert plan.fired
+        assert [list(eng.requests[r].generated) for r in rids] == want
+        assert eng.stats["integrity_quarantined_pages"] >= 1
+        assert eng.stats["sessions_recovered"] >= 1
+        assert eng.stats["sessions_lost"] == 0
+        assert eng.deferred_check()
+
+    @pytest.mark.parametrize("kind", ("mac_corrupt", "pool_mac_zap"))
+    def test_metadata_tamper_contained(self, smoke, prompts, baseline,
+                                       kind):
+        """Stored-MAC tamper never changes plaintext, so tokens stay
+        fault-free; containment must repair the deferred identity
+        (quarantine or pool-MAC rebuild) without raising or losing a
+        session."""
+        want = baseline("seda")
+        eng = _engine(smoke, scheme="seda", fault_tolerance=True,
+                      audit=AuditLog())
+        plan = FaultPlan([Fault(tick=3, kind=kind, slot=0)]).attach(eng)
+        rids = [eng.submit(prompt=p, max_new_tokens=4) for p in prompts]
+        eng.run()
+        assert plan.fired
+        assert [list(eng.requests[r].generated) for r in rids] == want
+        assert eng.stats["sessions_lost"] == 0
+        assert (eng.audit.events("fault_contained")
+                or eng.audit.events("pool_mac_rebuild"))
+        assert eng.deferred_check()
+
+    def test_transient_fault_costs_nothing(self, smoke, prompts, baseline):
+        want = baseline("seda")
+        eng = _engine(smoke, scheme="seda", fault_tolerance=True,
+                      audit=AuditLog())
+        plan = FaultPlan([Fault(tick=3, kind="transient")]).attach(eng)
+        rids = [eng.submit(prompt=p, max_new_tokens=4) for p in prompts]
+        eng.run()
+        assert plan.fired
+        assert [list(eng.requests[r].generated) for r in rids] == want
+        # Bounded re-read told it apart from persistent tamper.
+        assert eng.stats["integrity_quarantined_pages"] == 0
+        assert eng.stats["sessions_recovered"] == 0
+        assert eng.stats["sessions_lost"] == 0
+        assert eng.audit.events("transient_fault")
+
+    def test_retry_budget_exhaustion_loses_only_victim(self, smoke,
+                                                       prompts, baseline):
+        want = baseline("seda")
+        eng = _engine(smoke, scheme="seda", audit=AuditLog(),
+                      fault_tolerance=RecoveryPolicy(max_retries=0))
+        FaultPlan([Fault(tick=3, kind="bitflip", slot=0)]).attach(eng)
+        rids = [eng.submit(prompt=p, max_new_tokens=4) for p in prompts]
+        eng.run()                       # still must not raise
+        assert eng.stats["sessions_lost"] == 1
+        lost = [r for r in rids if eng.requests[r].state == "failed"]
+        assert len(lost) == 1
+        for r in rids:
+            if r in lost:
+                continue
+            assert eng.requests[r].state == "finished"
+            assert list(eng.requests[r].generated) == want[rids.index(r)]
+        assert eng.audit.events("session_lost")
+
+    def test_quarantined_frames_never_reallocated(self, smoke, prompts):
+        eng = _engine(smoke, scheme="seda", fault_tolerance=True)
+        FaultPlan([Fault(tick=3, kind="bitflip", slot=0)]).attach(eng)
+        for p in prompts:
+            eng.submit(prompt=p, max_new_tokens=4)
+        eng.run()
+        bad = set(eng.quarantined)
+        assert bad
+        assert not bad & set(eng.free_pages)
+        # Keep serving: the retired frames must never come back.
+        for p in prompts:
+            eng.submit(prompt=p, max_new_tokens=4)
+        eng.run()
+        assert eng.quarantined == bad
+        assert not bad & set(eng.free_pages)
+        resident = {int(p) for s in eng.slots if s is not None
+                    for p in s.pages}
+        assert not bad & resident
+
+    def test_without_fault_tolerance_same_tamper_still_raises(self, smoke,
+                                                              prompts):
+        eng = _engine(smoke, scheme="seda")
+        FaultPlan([Fault(tick=3, kind="bitflip", slot=0)]).attach(eng)
+        for p in prompts:
+            eng.submit(prompt=p, max_new_tokens=4)
+        with pytest.raises(IntegrityError):
+            eng.run()
+
+
+class TestShardFailover:
+    @pytest.mark.parametrize("scheme", ("off", "seda"))
+    def test_shard_kill_recovers_all_sessions(self, smoke, scheme):
+        rng = np.random.default_rng(1)
+        ps = [list(map(int, rng.integers(1, 256, n))) for n in (6, 5, 4)]
+        base = _cluster(smoke, scheme=scheme)
+        rids = [base.submit(prompt=p, max_new_tokens=4) for p in ps]
+        base.run()
+        want = [list(base.requests[r].generated) for r in rids]
+
+        eng = _cluster(smoke, scheme=scheme, fault_tolerance=True)
+        FaultPlan([Fault(tick=3, kind="shard_kill", shard=1)]
+                  ).attach_cluster(eng)
+        rids = [eng.submit(prompt=p, max_new_tokens=4) for p in ps]
+        eng.run()                       # the kill must not escape
+        got = [list(eng.requests[r].generated) for r in rids]
+        assert got == want
+        assert all(eng.requests[r].state == "finished" for r in rids)
+        assert eng.stats["shard_failovers"] == 1
+        assert eng.failed_shards == {1}
+        agg = eng.engine_stats
+        assert agg["sessions_lost"] == 0
+        assert agg["sessions_recovered"] >= 1
+        # The dead shard is folded out of the root compression.
+        assert eng.deferred_check()
+
+    def test_no_survivor_is_fatal(self, smoke, prompts):
+        eng = _cluster(smoke, scheme="off", fault_tolerance=True)
+        FaultPlan([Fault(tick=2, kind="shard_kill", shard=0),
+                   Fault(tick=2, kind="shard_kill", shard=1)]
+                  ).attach_cluster(eng)
+        for p in prompts:
+            eng.submit(prompt=p, max_new_tokens=4)
+        with pytest.raises(IntegrityError):
+            eng.run()
+
+
+class TestSLOIntegration:
+    def test_recovery_reports_degraded_then_ok(self, smoke, prompts):
+        from repro.obs.slo import SLOMonitor
+        eng = _engine(smoke, scheme="seda", fault_tolerance=True)
+        mon = SLOMonitor().attach(eng)
+        FaultPlan([Fault(tick=2, kind="bitflip", slot=0)]).attach(eng)
+        for p in prompts:
+            eng.submit(prompt=p, max_new_tokens=6)
+        seen_degraded = False
+        for _ in range(200):
+            if not (eng._n_waiting()
+                    or any(s is not None for s in eng.slots)):
+                break
+            eng.step()
+            if eng._n_recovering():
+                health = mon.health()
+                assert health["status"] == "degraded"
+                assert health["recovery"]["recovering"] >= 1
+                seen_degraded = True
+        assert seen_degraded
+        assert mon.health()["status"] == "ok"
+        assert not mon.hard_breach
+
+    def test_session_loss_is_hard_breach(self, smoke, prompts):
+        from repro.obs.slo import SLOMonitor, merge_health
+        eng = _engine(smoke, scheme="seda",
+                      fault_tolerance=RecoveryPolicy(max_retries=0))
+        mon = SLOMonitor().attach(eng)
+        FaultPlan([Fault(tick=3, kind="bitflip", slot=0)]).attach(eng)
+        for p in prompts:
+            eng.submit(prompt=p, max_new_tokens=4)
+        eng.run()
+        assert mon.hard_breach
+        health = mon.health()
+        assert health["status"] == "failing"
+        assert health["recovery"]["sessions_lost"] == 1
+        merged = merge_health([health])
+        assert merged["status"] == "failing"
+        assert merged["recovery"]["sessions_lost"] == 1
+
+
+class TestIntegrityFailContext:
+    """Every ``_integrity_fail`` site must say which gate failed (op)
+    and, unless the op is inherently global, name the tenant/slot/page
+    context the containment layer localizes from."""
+
+    EXEMPT_OPS = {"decode_accum", "deferred"}   # pool-global by nature
+    CONTEXT = {"tenant", "slot", "page", "pages", "to_shard", "to_tenant"}
+
+    def test_call_sites_carry_context(self):
+        for mod in (engine_mod, cluster_mod):
+            tree = ast.parse(inspect.getsource(mod))
+            sites = [n for n in ast.walk(tree)
+                     if isinstance(n, ast.Call)
+                     and isinstance(n.func, ast.Attribute)
+                     and n.func.attr == "_integrity_fail"
+                     and n.keywords]
+            assert sites, f"no _integrity_fail sites found in {mod.__name__}"
+            for call in sites:
+                kwargs = {k.arg for k in call.keywords}
+                assert "op" in kwargs or None in kwargs, ast.dump(call)
+                op_kw = next((k for k in call.keywords if k.arg == "op"),
+                             None)
+                op = (op_kw.value.value if op_kw is not None
+                      and isinstance(op_kw.value, ast.Constant) else None)
+                if op in self.EXEMPT_OPS:
+                    continue
+                # A **ctx splat (arg None) forwards caller context.
+                assert kwargs & self.CONTEXT or None in kwargs, \
+                    ast.dump(call)
