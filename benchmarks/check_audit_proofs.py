@@ -1,0 +1,80 @@
+"""CI gate: audit proofs must stay logarithmic and near-free.
+
+Reads a ``bench_audit_proofs.py`` JSON artifact and fails (exit 1)
+unless:
+
+* every **proof** row has ``proof_len <= ceil(log2(n_pages)) + 1`` —
+  the membership proof is O(log n) in the pool size, not O(n) (the
+  ``+ 1`` absorbs the next-power-of-two padding of non-power-of-two
+  pools);
+* every **overhead** row has ``merkle_overhead_pct <= 5`` — the amortized
+  ``_tick_end`` Merkle maintenance costs at most 5% tok/s over the
+  CBC-MAC/XOR fold levels alone;
+* every **overhead** row shows the maintenance actually amortized:
+  ``0 < root_updates < ticks`` (a root recompute every tick means the
+  deferral never engaged; zero means the maintainer never ran).
+
+Usage::
+
+    python benchmarks/check_audit_proofs.py bench-audit-proofs.json
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+MAX_OVERHEAD_PCT = 5.0
+
+
+def check_rows(results: list) -> int:
+    proof_rows = [r for r in results if r.get("mode") == "proof"]
+    over_rows = [r for r in results if r.get("mode") == "overhead"]
+    if not proof_rows or not over_rows:
+        print("[audit] FAIL: need both proof and overhead rows "
+              f"(got {len(proof_rows)}/{len(over_rows)})")
+        return 1
+    ok = True
+
+    def fail(label: str, msg: str) -> None:
+        nonlocal ok
+        print(f"[audit] FAIL: {label}: {msg}")
+        ok = False
+
+    for r in proof_rows:
+        label = r.get("name", "?")
+        bound = math.ceil(math.log2(max(r["n_pages"], 2))) + 1
+        if r["proof_len"] > bound:
+            fail(label, f"proof_len={r['proof_len']} exceeds "
+                        f"ceil(log2({r['n_pages']}))+1={bound} — "
+                        f"membership proofs are no longer O(log n)")
+    for r in over_rows:
+        label = r.get("name", "?")
+        if r["merkle_overhead_pct"] > MAX_OVERHEAD_PCT:
+            fail(label, f"Merkle maintenance costs "
+                        f"{r['merkle_overhead_pct']:.2f}% tok/s "
+                        f"(budget {MAX_OVERHEAD_PCT}%)")
+        if not r.get("root_updates", 0):
+            fail(label, "zero root updates — the maintainer never ran, "
+                        "the overhead number is vacuous")
+        elif r["root_updates"] >= r.get("ticks", 0):
+            fail(label, f"root_updates={r['root_updates']} >= "
+                        f"ticks={r['ticks']} — maintenance ran every "
+                        f"tick, the deferred amortization never engaged")
+    print(f"[audit] {len(proof_rows)} proof + {len(over_rows)} overhead "
+          f"rows checked")
+    return 0 if ok else 1
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        data = json.load(f)
+    rc = check_rows(data.get("results", []))
+    if rc == 0:
+        print("[audit] ok")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1]))

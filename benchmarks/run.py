@@ -12,7 +12,7 @@ import sys
 import traceback
 import types
 
-from benchmarks import (bench_area_power, bench_chaos,
+from benchmarks import (bench_area_power, bench_audit_proofs, bench_chaos,
                         bench_crypt_kernels, bench_memory_traffic,
                         bench_multi_tenant, bench_performance,
                         bench_secure_serving, bench_secure_step,
@@ -31,6 +31,7 @@ SUITES = {
     "multi_tenant_serving": bench_multi_tenant,
     "sharded_serving": bench_sharded_serving,
     "chaos": bench_chaos,
+    "audit_proofs": bench_audit_proofs,
 }
 
 

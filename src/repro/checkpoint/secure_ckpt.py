@@ -81,8 +81,17 @@ def _is_complete(path: str) -> bool:
 def save_checkpoint(directory: str, step: int, tree: Any,
                     keys: sm.SecureKeys, *, block_bytes: int = 512,
                     extra_state: Optional[dict] = None,
-                    mesh_shape: Optional[tuple] = None) -> str:
+                    mesh_shape: Optional[tuple] = None,
+                    audit_proofs: Optional[list] = None) -> str:
     """Protect ``tree`` with SeDA and write atomically.
+
+    ``audit_proofs`` threads serving-side audit evidence into the
+    manifest: a list of :class:`repro.serve.merkle_pool.AuditProof`
+    objects (or their ``to_dict()`` forms) — typically one per live
+    session, from ``Engine.audit_proof`` / ``ClusterEngine.audit_proof``
+    — so a restored session carries a verifiable membership transcript
+    instead of trust-me semantics.  :func:`load_checkpoint` re-verifies
+    each stored proof host-independently before returning.
 
     Returns the final checkpoint path ``<directory>/step_<step>``.
     """
@@ -117,6 +126,8 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         ],
         "mesh_shape": list(mesh_shape) if mesh_shape else None,
         "extra_state": extra_state or {},
+        "audit_proofs": [p if isinstance(p, dict) else p.to_dict()
+                         for p in (audit_proofs or [])],
     }
     # The manifest is written LAST (and fsynced): its presence is the
     # commit record for the whole directory.
@@ -180,7 +191,34 @@ def load_checkpoint(path: str, template: Any, keys: sm.SecureKeys,
         raise CheckpointError(
             f"integrity verification FAILED for checkpoint {path} "
             f"(tampered or wrong key)")
+    _verify_manifest_proofs(path, manifest)
     return tree, manifest
+
+
+def _verify_manifest_proofs(path: str, manifest: dict) -> None:
+    """Re-verify any serving audit proofs riding in the manifest.
+
+    Each stored proof must still be internally consistent — leaf MAC
+    hashes to the committed leaf, sibling path folds to the stated
+    shard root, shard root binds into the stated cluster root.  A
+    tampered transcript fails the restore loudly, exactly like a
+    tampered weight leaf.  (Root *freshness* is the tenant's check at
+    audit time, against the live root — a manifest can only attest the
+    roots that were current at save time.)
+    """
+    stored = manifest.get("audit_proofs") or []
+    if not stored:
+        return
+    # jax-free on purpose: proofs verify with hashlib alone.
+    from repro.serve import merkle_pool as mkp
+    for i, entry in enumerate(stored):
+        try:
+            mkp.verify_proof(mkp.proof_from_dict(entry))
+        except mkp.ProofError as err:
+            raise CheckpointError(
+                f"audit proof {i} in checkpoint {path} failed verification "
+                f"({type(err).__name__}: {err}) — session transcript "
+                f"tampered") from err
 
 
 def latest_step(directory: str) -> Optional[int]:

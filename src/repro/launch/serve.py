@@ -163,6 +163,12 @@ def main(argv=None) -> dict:
                     help="write a metrics snapshot (JSON) after the run")
     ap.add_argument("--metrics-prom", default=None, metavar="PATH",
                     help="write Prometheus text exposition after the run")
+    ap.add_argument("--audit-proof-out", default=None, metavar="PATH",
+                    help="capture one Merkle membership proof per live "
+                         "session after the first tick, verify each "
+                         "host-independently, and write the bundle plus "
+                         "the final (cluster) root here as JSON "
+                         "(--engine paged only)")
     ap.add_argument("--audit-out", default=None, metavar="PATH",
                     help="enable the hash-chained audit log; dump it "
                          "here as JSON lines (--engine paged only)")
@@ -193,11 +199,13 @@ def main(argv=None) -> dict:
                          "tenant keys to rotate otherwise)")
     if args.engine != "paged" and (args.trace_out or args.metrics_json
                                    or args.metrics_prom or args.audit_out
+                                   or args.audit_proof_out
                                    or args.slo_ttft_ms or args.slo_p99_ticks
                                    or args.http_port or args.profile_json
                                    or args.fault_tolerance):
         raise SystemExit("--trace-out/--metrics-json/--metrics-prom/"
-                         "--audit-out/--slo-*/--http-port/--profile-json/"
+                         "--audit-out/--audit-proof-out/--slo-*/"
+                         "--http-port/--profile-json/"
                          "--fault-tolerance need --engine paged (the "
                          "simple loop has no observability surface)")
 
@@ -309,6 +317,17 @@ def _serve_paged(arch, cfg, params, args) -> dict:
         session = sessions[i % len(sessions)] if sessions else None
         rids.append(eng.submit(prompt=prompt, max_new_tokens=args.gen_len,
                                session=session))
+    proof_bundle = None
+    if args.audit_proof_out:
+        # One tick admits the batch; every session is then resident and
+        # can prove membership against the live Merkle root — the
+        # verification below is exactly what a tenant runs, keyless.
+        eng.step()
+        proof_bundle = _capture_audit_proofs(eng, sessions,
+                                             bool(args.shards))
+        _log("audit-proof", f"[serve] {proof_bundle['verified']} session "
+             f"proofs captured + verified at tick {proof_bundle['tick']}",
+             tick=proof_bundle["tick"], proofs=proof_bundle["verified"])
     t0 = time.perf_counter()
     done, sig = _run_graceful(eng, is_cluster=bool(args.shards))
     dt = time.perf_counter() - t0
@@ -347,6 +366,8 @@ def _serve_paged(arch, cfg, params, args) -> dict:
     for m in monitors:
         m.check_stalled()
     _dump_obs(eng, args)
+    if args.audit_proof_out:
+        _dump_audit_proofs(eng, args, proof_bundle)
     if monitors:
         from repro.obs.slo import merge_health
         health = merge_health([m.health() for m in monitors])
@@ -457,6 +478,38 @@ def _start_http(port: int, monitors: list, eng):
     server = ThreadingHTTPServer(("127.0.0.1", port), Handler)
     threading.Thread(target=server.serve_forever, daemon=True).start()
     return server
+
+
+def _capture_audit_proofs(eng, sessions, is_cluster: bool) -> dict:
+    """Audit proofs for every live session, tenant-verified in place."""
+    from repro.serve import merkle_pool as mkp
+    proofs = []
+    for session in (sessions or [None]):
+        got = eng.audit_proof(session)
+        proofs.extend(got if is_cluster else [got])
+    for p in proofs:
+        mkp.verify_proof(p, expected_root=p.root, tenant=p.tenant)
+    return {"tick": eng.tick, "verified": len(proofs),
+            "proofs": [p.to_dict() for p in proofs]}
+
+
+def _dump_audit_proofs(eng, args, bundle) -> None:
+    """Write the captured proof bundle + the final attested root(s)."""
+    from repro.serve import merkle_pool as mkp
+    if args.shards:
+        pairs = eng.sharded.merkle_roots()
+        final = {"cluster_root": mkp.compress_roots(pairs).hex(),
+                 "shard_roots": [[s, r.hex()] for s, r in pairs]}
+    else:
+        final = {"root": eng.merkle.root_hex()}
+    payload = dict(bundle or {"tick": eng.tick, "verified": 0,
+                              "proofs": []})
+    payload["final"] = final
+    with open(args.audit_proof_out, "w") as f:
+        json.dump(payload, f, indent=1)
+    _log("audit-proof", f"[serve] audit-proof bundle "
+         f"({len(payload['proofs'])} proofs) -> {args.audit_proof_out}",
+         path=args.audit_proof_out, proofs=len(payload["proofs"]))
 
 
 def _dump_obs(eng, args) -> None:

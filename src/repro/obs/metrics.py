@@ -64,6 +64,14 @@ ENGINE_COUNTERS = {
     "sessions_lost": "sessions declared dead after exhausting the "
                      "integrity-recovery retry budget",
     "audit_events": "records appended to the security audit log",
+    "merkle_root_updates": "amortized Merkle root recomputes (batched "
+                           "dirty-path maintenance at the deferred "
+                           "cadence)",
+    "merkle_leaf_updates": "Merkle leaves rehashed by incremental "
+                           "maintenance (dirty pages, ownership changes, "
+                           "quarantine exclusions)",
+    "audit_proofs": "per-tenant membership proofs issued against the "
+                    "shard Merkle root",
     "slo_ttft_breaches": "requests whose wall-clock ttft missed the "
                          "per-tenant SLO target",
     "slo_tick_p99_breaches": "ok->breach transitions of the rolling p99 "

@@ -120,6 +120,10 @@ class ClusterEngine(SubmitAPI):
             self.ft = (RecoveryPolicy() if fault_tolerance is True
                        else fault_tolerance)
         self.failed_shards: set = set()
+        # Per-migration audit hand-offs: {"rid", "from_shard",
+        # "to_shard", "src_root", "proof"} — the destination-side proof
+        # taken the moment the slot landed (see ``_migrate_slot``).
+        self.migration_proofs: list = []
         if keys is None:
             keys = sm.SecureKeys.derive(0)
         # One chained audit log for the whole cluster: every shard's
@@ -536,6 +540,34 @@ class ClusterEngine(SubmitAPI):
         """Cluster root MAC + every shard's deferred pool MAC."""
         return self.sharded.deferred_root_check()
 
+    def audit_proof(self, session=None, *, rid: Optional[int] = None) -> list:
+        """Cluster-wide audit proofs for one session (or one request).
+
+        One :class:`repro.serve.merkle_pool.AuditProof` per active
+        shard holding the session's frames, each carrying the ordered
+        active shard-root set and the cluster root they compress to —
+        so the tenant verifies leaf -> shard root -> cluster root
+        entirely host-independently (``verify_proof``), with no keys
+        and no pool access.  Failed-over shards are folded out of the
+        root set exactly as they are from the pool-MAC compression.
+        """
+        import dataclasses as _dc
+
+        from repro.serve import merkle_pool as mkp
+        pairs = self.sharded.merkle_roots()
+        cluster = {"shard_roots": [(s, r.hex()) for s, r in pairs],
+                   "root": mkp.compress_roots(pairs).hex()}
+        proofs = []
+        for shard in self.sharded._active:
+            engine = self.engines[shard]
+            try:
+                p = engine.audit_proof(session, rid=rid)
+            except KeyError:
+                continue            # rid not resident on this shard
+            if p.pages:
+                proofs.append(_dc.replace(p, cluster=cluster))
+        return proofs
+
     @property
     def engine_stats(self) -> dict:
         """Per-shard engine stats, summed — except ``rotations``:
@@ -705,6 +737,21 @@ class ClusterEngine(SubmitAPI):
         slot.admit_seq = ed._admit_seq
         ed.slots[dst_slot] = slot
         ed.page_table.install(dst_slot, slot)
+        # Thread the audit trail through the move: the migrated session
+        # immediately re-proves membership against the destination
+        # shard's root, and the hand-off (old root -> new proof) is
+        # recorded so a tenant can audit that its transcript survived
+        # the migration rather than trusting it did.
+        src_root = dst_root = None
+        if es.merkle is not None and ed.merkle is not None:
+            es._merkle_sync()
+            src_root = es.merkle.root_hex()
+            proof = ed.audit_proof(rid=slot.req.rid)
+            dst_root = proof.root
+            self.migration_proofs.append(
+                {"rid": slot.req.rid, "from_shard": src, "to_shard": dst,
+                 "src_root": src_root, "proof": proof.to_dict()})
         self.stats["migrations"] += 1
         self._audit("migration", from_shard=src, to_shard=dst, pages=n,
-                    tenant=tenant.tenant_id if tenant is not None else None)
+                    tenant=tenant.tenant_id if tenant is not None else None,
+                    src_root=src_root, dst_root=dst_root)

@@ -103,7 +103,10 @@ from repro.obs import metrics as metrics_mod
 from repro.obs import profiler as profiler_mod
 from repro.obs import trace as trace_mod
 from repro.serve import kv_pages as kvp
+from repro.serve import merkle_pool as mkp
 from repro.serve.serve_step import greedy_sample
+
+assert mkp.MAC_BYTES == mac_mod.MAC_BYTES  # jax-free module, own literal
 
 __all__ = ["IntegrityError", "Request", "RunResult", "SecureServingEngine",
            "SubmitAPI", "SubmitRequest", "latency_percentiles"]
@@ -319,6 +322,7 @@ class SecureServingEngine(SubmitAPI):
                  prefix_cache: bool = False,
                  prefix_cache_pages: Optional[int] = None,
                  fault_tolerance=None,
+                 merkle: bool = True,
                  trace=None, audit=None):
         if arch.kind != "lm":
             raise ValueError("the paged serving engine supports decoder-only "
@@ -432,6 +436,20 @@ class SecureServingEngine(SubmitAPI):
         self.tick = 0
         self._prefill_shapes: set = set()
         self._init_obs(trace, audit)
+
+        # Auditable Merkle level over the page MACs: listener-driven,
+        # O(1) on the hot path, batched into ``_tick_end``.  ``merkle=
+        # False`` keeps only the verifier-side folds (the bench uses it
+        # to price the maintenance against the plain CBC-MAC root).
+        self.merkle = None
+        if merkle:
+            self.merkle = mkp.MerklePagePool(
+                self.n_pages, shard=shard_id,
+                leaf_fn=lambda pool: kvp.merkle_leaf_macs(pool, self.spec),
+                owners_fn=self._page_owners,
+                quarantined_fn=lambda: self.quarantined)
+            self.attach_pool_listener(self.merkle.on_pool_update)
+            self.merkle.on_pool_update(None, self.pool)
 
         # Two-level page table: the slot directory (level 1) feeds pow2
         # page-count-bucketed decode windows (level 2); the decode step
@@ -882,6 +900,69 @@ class SecureServingEngine(SubmitAPI):
             raise ValueError("rotate() needs a tenant registry")
         return self.registry.rotate(tenant_id)
 
+    def _page_owners(self) -> np.ndarray:
+        """Per-frame owning tenant index (-1 = free / unowned).
+
+        Fed into the Merkle leaves at sync time so every membership
+        proof is tenant-bound; frames of two tenants can never swap
+        proofs even with byte-identical MACs.  Same-tenant prefix
+        sharing keeps a single owner, and cross-tenant sharing reseals
+        into the destination's own frames, so the map is single-valued
+        by construction.
+        """
+        owners = np.full(self.n_pages, -1, np.int64)
+        for s in self.slots:
+            if s is None or s.tenant is None:
+                continue
+            for p in s.pages:
+                owners[p] = s.tenant.index
+        return owners
+
+    def audit_proof(self, session=None, *, rid: Optional[int] = None):
+        """O(log n) membership proof for a session's resident frames.
+
+        Returns a :class:`repro.serve.merkle_pool.AuditProof` — leaf
+        MACs, sibling paths, shard id and the current shard Merkle root
+        — which the tenant verifies host-independently with
+        :func:`repro.serve.merkle_pool.verify_proof`.  On a
+        multi-tenant engine the proof covers every resident frame of
+        the session's tenant (narrow with ``rid=``); on a single-tenant
+        engine it covers every resident frame.
+        """
+        if self.merkle is None:
+            raise ValueError("audit_proof() needs the Merkle level "
+                             "(engine built with merkle=False)")
+        tenant = None
+        if rid is not None:
+            slot = next((s for s in self.slots
+                         if s is not None and s.req.rid == rid), None)
+            if slot is None:
+                raise KeyError(f"request {rid} has no resident slot")
+            tenant = slot.tenant
+        elif self.registry is not None:
+            if session is None:
+                raise PermissionError("multi-tenant engine: audit_proof() "
+                                      "needs a session handle")
+            tenant = self.registry.validate(session)
+        pages: list = []
+        for s in self.slots:
+            if s is None:
+                continue
+            if rid is not None and s.req.rid != rid:
+                continue
+            if tenant is not None and (s.tenant is None
+                                       or s.tenant.index != tenant.index):
+                continue
+            pages.extend(s.pages)
+        self._merkle_sync()
+        proof = self.merkle.audit_proof(
+            pages, tenant=None if tenant is None else tenant.index)
+        self.stats["audit_proofs"] += 1
+        self._audit("audit_proof",
+                    tenant=None if tenant is None else tenant.tenant_id,
+                    pages=len(proof.pages), root=proof.root)
+        return proof
+
     def share_prefix(self, tokens, *, from_session, to_session) -> int:
         """Explicitly reseal one tenant's cached prefix for another.
 
@@ -1102,6 +1183,17 @@ class SecureServingEngine(SubmitAPI):
         if (self.policy.deferred_model_mac and self.defer_interval
                 and self.tick % self.defer_interval == 0):
             self._deferred_check()
+        # Merkle maintenance shares the deferred cadence but not the
+        # scheme gate: audit proofs exist for every scheme (the page-MAC
+        # table is part of the pool under all of them).
+        if (self.merkle is not None and self.defer_interval
+                and self.tick % self.defer_interval == 0):
+            self._merkle_sync()
+
+    def _merkle_sync(self) -> None:
+        roots, leaves = self.merkle.sync()
+        self.stats["merkle_root_updates"] += roots
+        self.stats["merkle_leaf_updates"] += leaves
 
     def run(self, max_ticks: int = 100_000) -> RunResult:
         """Drive ticks until every submitted request finished.

@@ -1192,6 +1192,22 @@ def deferred_pool_check(pool: PagedKVPool, spec: PageSpec) -> jax.Array:
                    == pool.pool_mac)
 
 
+def merkle_leaf_macs(pool: PagedKVPool, spec: PageSpec) -> np.ndarray:
+    """Host copy of the real-page MAC rows — the Merkle leaf material.
+
+    This is the single point where the auditable Merkle level
+    (:mod:`repro.serve.merkle_pool`, which is deliberately jax-free)
+    touches pool state: the scratch row is excluded (it is not part of
+    any integrity fold), and quarantined frames are excluded later by
+    the maintainer itself, which hashes them to a distinguished
+    *retired* leaf regardless of the scrubbed MAC bytes this returns.
+    The pull is a tiny ``n_pages x MAC_BYTES`` transfer, only ever run
+    at the amortized ``_tick_end`` cadence or on an explicit proof
+    request — never on the decode dispatch path.
+    """
+    return np.asarray(pool.page_macs[: spec.n_pages], np.uint8)
+
+
 # ---------------------------------------------------------------------------
 # PrefixCache: content-addressed index over cache-bound shared pages.
 # ---------------------------------------------------------------------------

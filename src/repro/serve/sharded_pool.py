@@ -29,7 +29,16 @@ cache with
   shard pool MACs against the compression of the mirrors.  A shard
   silently swapping its whole pool state (a cross-shard variant of the
   splicing attack the pool MAC defeats within one device) fails the
-  root.
+  root;
+* **an auditable cluster root** — the same fold-in/fold-out shard set,
+  compressed one more way: each shard engine's listener-maintained
+  Merkle tree (:mod:`repro.serve.merkle_pool`) publishes a root, and
+  :attr:`ShardedKVPool.merkle_root` hash-compresses the ordered
+  ``(shard, Merkle root)`` pairs so a tenant can chain a page-level
+  membership proof up to the cluster root with no keys and no pool
+  access.  ``deferred_root_check`` additionally verifies every active
+  shard's tree against a from-scratch rebuild, so a listener-bypass
+  swap fails the auditable level exactly as it fails the mirrors.
 
 Cross-device replay is defeated one level down (shard-id binding in
 :mod:`kv_pages`); this module's job is aggregate bookkeeping and the
@@ -115,8 +124,10 @@ class ShardedKVPool:
 
     def failing_shards(self) -> list:
         """Active shards whose pool state cannot be trusted: the pool's
-        own deferred identity fails, or its pool MAC diverged from the
-        incrementally-folded mirror.  Localizes a root-check failure."""
+        own deferred identity fails, its pool MAC diverged from the
+        incrementally-folded mirror, or its Merkle tree no longer
+        matches a from-scratch rebuild over the actual page MACs.
+        Localizes a root-check failure."""
         from repro.serve import kv_pages as kvp
         bad = []
         for s in self._active:
@@ -126,7 +137,21 @@ class ShardedKVPool:
             elif not np.array_equal(np.asarray(self._mirrors[s]),
                                     np.asarray(engine.pool.pool_mac)):
                 bad.append(s)
+            elif not self._merkle_ok(engine):
+                bad.append(s)
         return bad
+
+    @staticmethod
+    def _merkle_ok(engine) -> bool:
+        """One shard's listener-maintained Merkle tree vs. a rebuild
+        over the pool's actual MAC table — the auditable-level analogue
+        of the mirror check (a pool swapped in around the listener
+        diverges here even if its XOR identity was patched up)."""
+        if engine.merkle is None:
+            return True
+        from repro.serve import kv_pages as kvp
+        return engine.merkle.verify_against(
+            kvp.merkle_leaf_macs(engine.pool, engine.spec))
 
     def _compress(self, pool_macs) -> np.ndarray:
         """Keyed CBC-MAC over the ordered (shard, pool MAC) pairs.
@@ -157,6 +182,33 @@ class ShardedKVPool:
         shards only — failed-over shards are folded out)."""
         return jnp.asarray(self._compress(
             [self._mirrors[s] for s in self._active]))
+
+    # -- auditable Merkle level ---------------------------------------------
+
+    def merkle_roots(self) -> list:
+        """Ordered ``(shard, root)`` pairs of the active shards' Merkle
+        roots (syncing each maintainer's pending pool state first).
+        Failed-over shards are folded out exactly as they are from the
+        pool-MAC compression."""
+        pairs = []
+        for s in self._active:
+            engine = self.engines[s]
+            if engine.merkle is None:
+                raise ValueError(f"shard {s} was built with merkle=False — "
+                                 "no auditable root to compress")
+            pairs.append((s, engine.merkle.root()))
+        return pairs
+
+    @property
+    def merkle_root(self) -> bytes:
+        """The auditable cluster root: a hash compression over the
+        ordered active ``(shard, Merkle root)`` pairs, seeded with the
+        shard count (:func:`repro.serve.merkle_pool.compress_roots`).
+        Unlike :attr:`root_mac` this is host-independently recomputable
+        by a tenant holding the published shard roots, so cluster audit
+        proofs chain leaf -> shard root -> cluster root with no key."""
+        from repro.serve import merkle_pool as mkp
+        return mkp.compress_roots(self.merkle_roots())
 
     @property
     def n_shards(self) -> int:
@@ -197,4 +249,6 @@ class ShardedKVPool:
         actual = self._compress([self.engines[s].pool.pool_mac
                                  for s in self._active])
         mirrored = self._compress([self._mirrors[s] for s in self._active])
-        return bool(np.array_equal(actual, mirrored))
+        if not np.array_equal(actual, mirrored):
+            return False
+        return all(self._merkle_ok(self.engines[s]) for s in self._active)

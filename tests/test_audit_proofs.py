@@ -1,0 +1,539 @@
+"""Merkle pool integrity: maintenance equivalence + adversarial proofs.
+
+Three layers of evidence for the auditable integrity level
+(:mod:`repro.serve.merkle_pool`):
+
+* **equivalence** — the incrementally-maintained tree is node-for-node
+  identical to a from-scratch rebuild, property-tested over synthetic
+  op streams (hypothesis when available, seeded streams always) and
+  over *real* engine schedules (admit / decode / preempt / rotate /
+  quarantine) across every scheme and shard count {1, 2};
+* **forgery** — each of the five forgery classes in the threat model
+  (flipped leaf MAC, swapped sibling, truncated/extended path,
+  stale-root replay, cross-tenant reuse) fails ``verify_proof`` with
+  its own distinct error type;
+* **interaction** — quarantine (`_commit_repair`) excludes retired
+  frames from the rebuilt tree and rotates the root out from under
+  pre-repair proofs without disturbing anyone else's; migration and
+  checkpoint restore carry verifiable transcripts.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.secure_exec import SCHEMES
+from repro.models import lm as lm_mod
+from repro.models.layers import init_params
+from repro.serve import kv_pages as kvp
+from repro.serve import merkle_pool as mkp
+from repro.serve.cluster import ClusterEngine
+from repro.serve.engine import SecureServingEngine
+from repro.serve.faults import Fault, FaultPlan
+from repro.tenancy import KeyHierarchy, TenantRegistry
+
+from tests._hyp import HAVE_HYPOTHESIS, given, settings, st
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    arch = get_arch("minitron-4b")
+    cfg = arch.make_smoke_config()
+    params = init_params(lm_mod.lm_specs(cfg), jax.random.PRNGKey(0))
+    return arch, cfg, params
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(0)
+    return [list(map(int, rng.integers(1, 256, n))) for n in (6, 5, 7)]
+
+
+def _engine(smoke, **kw):
+    arch, cfg, params = smoke
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_tokens", 4)
+    kw.setdefault("pages_per_slot", 4)
+    kw.setdefault("n_pages", 12)
+    kw.setdefault("scheme", "seda")
+    kw.setdefault("defer_interval", 2)
+    return SecureServingEngine(arch, cfg, params, **kw)
+
+
+def _cluster(smoke, **kw):
+    arch, cfg, params = smoke
+    kw.setdefault("shards", 2)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_tokens", 4)
+    kw.setdefault("pages_per_slot", 4)
+    kw.setdefault("scheme", "seda")
+    kw.setdefault("defer_interval", 2)
+    return ClusterEngine(arch, cfg, params, **kw)
+
+
+def _two_tenants(seed=5):
+    reg = TenantRegistry(KeyHierarchy(seed), max_tenants=4)
+    reg.register("a")
+    reg.register("b")
+    return reg, reg.open_session("a"), reg.open_session("b")
+
+
+def _assert_node_for_node(maintainer, pool, spec):
+    """The incremental tree equals a from-scratch rebuild, every node."""
+    snap = maintainer.snapshot()
+    rebuilt = mkp.build_tree(kvp.merkle_leaf_macs(pool, spec),
+                             maintainer._owners, maintainer._quar,
+                             shard=maintainer.shard)
+    assert len(snap) == len(rebuilt)
+    for level, (got, want) in enumerate(zip(snap, rebuilt)):
+        assert got == want, f"tree level {level} diverged from rebuild"
+
+
+# -- pure-tree unit + property layer -------------------------------------
+
+
+class _FakePool:
+    """Stand-in pool object for driving the maintainer without jax."""
+
+    def __init__(self, macs):
+        self.macs = macs
+
+
+def _drive(ops, n_pages=11, shard=1):
+    """Apply an op stream both incrementally and per-step-rebuilt.
+
+    Each op mutates (macs, owners, quarantined); after every op the
+    maintainer syncs and must match ``build_tree`` node for node.
+    """
+    rngless = {"macs": np.zeros((n_pages, mkp.MAC_BYTES), np.uint8),
+               "owners": np.full(n_pages, -1, np.int64),
+               "quar": set()}
+    m = mkp.MerklePagePool(
+        n_pages, shard=shard, leaf_fn=lambda p: p.macs,
+        owners_fn=lambda: rngless["owners"],
+        quarantined_fn=lambda: rngless["quar"])
+    pool = _FakePool(rngless["macs"].copy())
+    m.on_pool_update(None, pool)
+    m.sync()
+    for kind, page, payload in ops:
+        page = page % n_pages
+        if kind == "mac":
+            new = _FakePool(pool.macs.copy())
+            new.macs[page] = np.frombuffer(
+                payload.to_bytes(mkp.MAC_BYTES, "big"), np.uint8)
+            m.on_pool_update(pool, new)
+            pool = new
+        elif kind == "owner":
+            rngless["owners"][page] = payload % 7 - 1
+        elif kind == "quarantine":
+            rngless["quar"].add(page)
+        elif kind == "resync":
+            m.on_pool_update(None, pool)
+        m.sync()
+        quar = np.zeros(n_pages, bool)
+        quar[sorted(rngless["quar"])] = True
+        want = mkp.build_tree(pool.macs, rngless["owners"], quar,
+                              shard=shard)
+        assert m.snapshot() == want
+    return m
+
+
+class TestMerkleUnit:
+    def test_depth_and_proof_length(self):
+        for n in (1, 2, 3, 6, 8, 11, 16, 33):
+            d = mkp.tree_depth(n)
+            assert (1 << d) >= n and (d == 0 or (1 << (d - 1)) < n)
+            macs = np.zeros((n, mkp.MAC_BYTES), np.uint8)
+            m = mkp.MerklePagePool(n, leaf_fn=lambda p: p.macs)
+            m.on_pool_update(None, _FakePool(macs))
+            assert len(m.page_proof(0).path) == d
+
+    def test_seeded_op_streams_match_rebuild_node_for_node(self):
+        rng = np.random.default_rng(7)
+        kinds = ("mac", "owner", "quarantine", "resync")
+        for _ in range(6):
+            ops = [(kinds[rng.integers(len(kinds))],
+                    int(rng.integers(0, 64)),
+                    int(rng.integers(0, 2**63)))
+                   for _ in range(40)]
+            _drive(ops)
+
+    def test_dirty_path_update_is_logarithmic(self):
+        """One dirty page rehashes one leaf; sync never walks clean
+        subtrees (the amortization claim of the tentpole)."""
+        n = 64
+        m = mkp.MerklePagePool(n, leaf_fn=lambda p: p.macs)
+        pool = _FakePool(np.zeros((n, mkp.MAC_BYTES), np.uint8))
+        m.on_pool_update(None, pool)
+        m.sync()
+        new = _FakePool(pool.macs.copy())
+        new.macs[17] ^= 0xA5
+        m.on_pool_update(pool, new)
+        roots, leaves = m.sync()
+        assert (roots, leaves) == (1, 1)
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(
+        st.sampled_from(("mac", "owner", "quarantine", "resync")),
+        st.integers(min_value=0, max_value=63),
+        st.integers(min_value=0, max_value=2**63 - 1)),
+        max_size=30))
+    def test_property_op_streams_match_rebuild(self, ops):
+        _drive(ops)
+
+    def test_retired_leaf_is_not_the_zero_mac_leaf(self):
+        """Quarantine exclusion is a distinguished leaf, not a data
+        leaf over the scrubbed zero MAC — so 'retired' and 'contains
+        zeros' are cryptographically different statements."""
+        zero = mkp.leaf_hash(0, 3, -1, bytes(mkp.MAC_BYTES))
+        assert mkp.retired_leaf(0, 3) != zero
+        assert mkp.empty_leaf(0, 3) != zero
+
+    def test_compress_roots_binds_order_and_count(self):
+        r = [(0, bytes(range(32))), (1, bytes(range(1, 33)))]
+        assert mkp.compress_roots(r) != mkp.compress_roots(r[::-1])
+        assert mkp.compress_roots(r) != mkp.compress_roots(
+            r + [(2, bytes(32))])
+
+
+# -- engine-schedule equivalence across SCHEMES x shards -----------------
+
+
+class TestScheduleEquivalence:
+    """Randomized admit/decode/preempt/rotate/quarantine schedules keep
+    the incremental tree node-for-node identical to a rebuild — the
+    engine-level form of the property above, for every scheme."""
+
+    @pytest.mark.parametrize("scheme", sorted(SCHEMES))
+    def test_single_shard_schedule(self, smoke, scheme):
+        reg, sa, sb = _two_tenants(seed=11)
+        eng = _engine(smoke, scheme=scheme, registry=reg, max_slots=2,
+                      n_pages=14, rotate_every=3)
+        rng = np.random.default_rng(hash(scheme) % 2**31)
+        sessions = [sa, sb]
+        free_probe = []
+        for step_no in range(10):
+            op = rng.integers(0, 4)
+            if op == 0 and len(eng.requests) < 6:       # admit
+                prompt = list(map(int, rng.integers(1, 256,
+                                                    rng.integers(4, 9))))
+                eng.submit(prompt=prompt, max_new_tokens=4,
+                           session=sessions[int(rng.integers(2))])
+            elif op == 1:                               # rotate (live)
+                eng.rotate(("a", "b")[int(rng.integers(2))])
+            elif op == 2 and eng.free_pages:            # quarantine a
+                free_probe.append(eng.free_pages[-1])   # free frame
+                eng._quarantine_pages([free_probe[-1]])
+            eng.step()                                  # decode tick
+        eng.run()
+        _assert_node_for_node(eng.merkle, eng.pool, eng.spec)
+        for page in free_probe:
+            assert eng.merkle.snapshot()[0][page] == mkp.retired_leaf(
+                eng.shard_id, page)
+
+    @pytest.mark.parametrize("scheme", sorted(SCHEMES))
+    def test_two_shard_schedule(self, smoke, scheme):
+        cl = _cluster(smoke, scheme=scheme, n_pages=8)
+        rng = np.random.default_rng(hash(scheme) % 2**31 + 1)
+        for step_no in range(8):
+            op = rng.integers(0, 3)
+            if op == 0 and len(cl.requests) < 5:
+                prompt = list(map(int, rng.integers(1, 256,
+                                                    rng.integers(4, 9))))
+                cl.submit(prompt=prompt, max_new_tokens=4)
+            elif op == 1:
+                shard = cl.engines[int(rng.integers(2))]
+                if shard.free_pages:
+                    shard._quarantine_pages([shard.free_pages[-1]])
+            cl.step()
+        cl.run()
+        for eng in cl.engines:
+            _assert_node_for_node(eng.merkle, eng.pool, eng.spec)
+        assert cl.deferred_check()
+
+    def test_preemption_keeps_equivalence(self, smoke, prompts):
+        # Overcommitted pool: growth preempts the youngest slot; the
+        # ownership churn (frames freed, re-admitted) must flow through
+        # the owner diff into the tree.
+        eng = _engine(smoke, max_slots=2, pages_per_slot=4, n_pages=5)
+        rids = [eng.submit(prompt=p, max_new_tokens=8) for p in prompts]
+        eng.run()
+        assert eng.stats["preemptions"] > 0
+        _assert_node_for_node(eng.merkle, eng.pool, eng.spec)
+
+
+# -- adversarial proof forgery -------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def forged(smoke):
+    """A live 2-tenant engine + a valid proof for tenant a, shared by
+    every forgery case (mutations below never touch the engine)."""
+    reg, sa, sb = _two_tenants(seed=23)
+    eng = _engine(smoke, registry=reg, max_slots=2, n_pages=14)
+    rng = np.random.default_rng(3)
+    for session in (sa, sb):
+        eng.submit(prompt=list(map(int, rng.integers(1, 256, 6))),
+                   max_new_tokens=8, session=session)
+    eng.step()
+    eng.step()
+    proof = eng.audit_proof(sa)
+    assert mkp.verify_proof(proof, expected_root=eng.merkle.root_hex(),
+                            tenant=proof.tenant)
+    return eng, sa, sb, proof
+
+
+class TestProofForgery:
+    def test_flipped_leaf_mac_rejected(self, forged):
+        eng, sa, sb, proof = forged
+        page = proof.pages[0]
+        mac = bytearray(bytes.fromhex(page.mac))
+        mac[0] ^= 0x01
+        bad = dataclasses.replace(
+            proof, pages=(dataclasses.replace(page, mac=bytes(mac).hex()),)
+            + proof.pages[1:])
+        with pytest.raises(mkp.LeafMacError):
+            mkp.verify_proof(bad, expected_root=proof.root)
+
+    def test_swapped_sibling_rejected(self, forged):
+        eng, sa, sb, proof = forged
+        page = proof.pages[0]
+        other = eng.merkle.page_proof(
+            next(p for p in range(eng.n_pages)
+                 if p != page.page and (p >> 1) != (page.page >> 1)))
+        path = (other.path[0],) + page.path[1:]
+        bad = dataclasses.replace(
+            proof, pages=(dataclasses.replace(page, path=path),)
+            + proof.pages[1:])
+        with pytest.raises(mkp.SiblingPathError):
+            mkp.verify_proof(bad, expected_root=proof.root)
+
+    def test_truncated_path_rejected(self, forged):
+        eng, sa, sb, proof = forged
+        page = proof.pages[0]
+        bad = dataclasses.replace(
+            proof,
+            pages=(dataclasses.replace(page, path=page.path[:-1]),))
+        with pytest.raises(mkp.PathLengthError):
+            mkp.verify_proof(bad, expected_root=proof.root)
+
+    def test_extended_path_rejected(self, forged):
+        eng, sa, sb, proof = forged
+        page = proof.pages[0]
+        bad = dataclasses.replace(
+            proof,
+            pages=(dataclasses.replace(page,
+                                       path=page.path + (page.path[-1],)),))
+        with pytest.raises(mkp.PathLengthError):
+            mkp.verify_proof(bad, expected_root=proof.root)
+
+    def test_stale_root_replay_rejected(self, forged):
+        eng, sa, sb, proof = forged
+        old_root = proof.root
+        for _ in range(4):          # decode on: MACs move, root rotates
+            eng.step()
+        current = eng.merkle.root_hex()
+        assert current != old_root
+        # Internally the old proof still folds (it was valid once)...
+        assert mkp.verify_proof(proof, tenant=proof.tenant)
+        # ...but replaying it against the attested current root fails.
+        with pytest.raises(mkp.StaleRootError):
+            mkp.verify_proof(proof, expected_root=current)
+
+    def test_cross_tenant_proof_reuse_rejected(self, forged):
+        eng, sa, sb, proof = forged
+        tenant_b = eng.registry.validate(sb).index
+        # Tenant b presenting tenant a's proof as its own:
+        with pytest.raises(mkp.TenantMismatchError):
+            mkp.verify_proof(proof, tenant=tenant_b)
+        # ...and relabeling the tenant field breaks the leaf binding
+        # instead (the owner is folded into every leaf hash).
+        relabeled = dataclasses.replace(
+            proof, tenant=tenant_b,
+            pages=tuple(dataclasses.replace(p, owner=tenant_b)
+                        for p in proof.pages))
+        with pytest.raises(mkp.LeafMacError):
+            mkp.verify_proof(relabeled, tenant=tenant_b)
+
+    def test_issuing_cross_tenant_proof_refused_at_source(self, forged):
+        eng, sa, sb, proof = forged
+        b_idx = eng.registry.validate(sb).index
+        with pytest.raises(ValueError):
+            eng.merkle.audit_proof([p.page for p in proof.pages],
+                                   tenant=b_idx)
+
+    def test_forged_errors_are_distinct_classes(self):
+        errs = (mkp.LeafMacError, mkp.SiblingPathError,
+                mkp.PathLengthError, mkp.StaleRootError,
+                mkp.TenantMismatchError)
+        for i, a in enumerate(errs):
+            for b in errs[i + 1:]:
+                assert not issubclass(a, b) and not issubclass(b, a)
+
+
+# -- quarantine x Merkle regression --------------------------------------
+
+
+class TestQuarantineMerkle:
+    def test_commit_repair_excludes_retired_frames(self, smoke, prompts):
+        """PR 9's `_commit_repair` path: a contained bit-flip retires
+        the victim frame; the rebuilt tree hashes it as a *retired*
+        leaf, pre-repair proofs stop verifying against the new root,
+        and the unaffected session's fresh proof still verifies."""
+        eng = _engine(smoke, fault_tolerance=True)
+        FaultPlan([Fault(tick=3, kind="bitflip", slot=0)]).attach(eng)
+        rids = [eng.submit(prompt=p, max_new_tokens=4)
+                for p in prompts[:2]]
+        eng.step()
+        pre = eng.audit_proof()                   # pre-repair transcript
+        pre_root = pre.root
+        eng.run()                                 # fault fires, contained
+        assert eng.stats["integrity_quarantined_pages"] >= 1
+        assert eng.quarantined
+        snap = eng.merkle.snapshot()
+        for page in eng.quarantined:
+            assert snap[0][page] == mkp.retired_leaf(eng.shard_id, page)
+            with pytest.raises(ValueError):
+                eng.merkle.page_proof(page)
+        _assert_node_for_node(eng.merkle, eng.pool, eng.spec)
+        # The repair rotated the root: the pre-repair proof is stale.
+        new_root = eng.merkle.root_hex()
+        assert new_root != pre_root
+        with pytest.raises(mkp.StaleRootError):
+            mkp.verify_proof(pre, expected_root=new_root)
+
+    def test_unaffected_sessions_proofs_still_verify(self, smoke):
+        reg, sa, sb = _two_tenants(seed=31)
+        eng = _engine(smoke, registry=reg, fault_tolerance=True,
+                      max_slots=2, n_pages=14)
+        rng = np.random.default_rng(9)
+        eng.submit(prompt=list(map(int, rng.integers(1, 256, 6))),
+                   max_new_tokens=8, session=sa)
+        eng.submit(prompt=list(map(int, rng.integers(1, 256, 5))),
+                   max_new_tokens=8, session=sb)
+        eng.step()
+        # Retire a free frame (metadata repair, no session involved).
+        victim = eng.free_pages[-1]
+        eng._quarantine_pages([victim])
+        for session in (sa, sb):
+            p = eng.audit_proof(session)
+            assert p.pages
+            assert mkp.verify_proof(p, expected_root=eng.merkle.root_hex(),
+                                    tenant=p.tenant)
+        assert victim not in [pp.page for s in (sa, sb)
+                              for pp in eng.audit_proof(s).pages]
+
+    def test_listener_bypass_page_swap_fails_merkle_level(self, smoke,
+                                                          prompts):
+        """A pool swapped in around the listener with a *consistent*
+        XOR identity (page MACs + pool MAC + mirror all patched) passes
+        the fold levels but fails the Merkle rebuild comparison — the
+        new level catches what the mirrors alone cannot."""
+        import jax.numpy as jnp
+        from repro.core import mac as mac_mod
+        cl = _cluster(smoke)
+        for p in prompts:
+            cl.submit(prompt=p, max_new_tokens=4)
+        cl.step()
+        assert cl.deferred_check()
+        e0 = cl.engines[0]
+        macs = np.asarray(e0.pool.page_macs).copy()
+        macs[0] ^= 0x5A                           # swap page state...
+        pool_mac = mac_mod.xor_aggregate(
+            jnp.asarray(macs[: e0.spec.n_pages]))
+        e0._pool = e0.pool._replace(               # ...bypassing the
+            page_macs=jnp.asarray(macs),           # listener, with the
+            pool_mac=pool_mac)                     # XOR identity patched
+        cl.sharded._mirrors[0] = jnp.asarray(pool_mac)  # and the mirror
+        assert not cl.deferred_check()
+        assert 0 in cl.sharded.failing_shards()
+
+
+# -- cluster proofs, migration, checkpoint threading ---------------------
+
+
+class TestClusterProofs:
+    def test_cluster_proof_chains_to_cluster_root(self, smoke):
+        reg, sa, sb = _two_tenants(seed=41)
+        cl = _cluster(smoke, registry=reg, n_pages=8)
+        rng = np.random.default_rng(13)
+        for session in (sa, sb, sa):
+            cl.submit(prompt=list(map(int, rng.integers(1, 256, 5))),
+                      max_new_tokens=6, session=session)
+        cl.step()
+        cl.step()
+        proofs = cl.audit_proof(sa)
+        assert proofs
+        cluster_root = cl.sharded.merkle_root.hex()
+        for p in proofs:
+            assert p.cluster["root"] == cluster_root
+            assert mkp.verify_proof(p, tenant=p.tenant)
+        # Tampering the shard-root set breaks the cluster binding.
+        p = proofs[0]
+        forged_roots = [(s, ("0" * 64 if s != p.shard else r))
+                        for s, r in p.cluster["shard_roots"]]
+        bad = dataclasses.replace(p, cluster={
+            "shard_roots": forged_roots, "root": p.cluster["root"]})
+        with pytest.raises(mkp.ClusterRootError):
+            mkp.verify_proof(bad)
+
+    def test_failed_shard_folds_out_of_cluster_root(self, smoke, prompts):
+        cl = _cluster(smoke)
+        for p in prompts:
+            cl.submit(prompt=p, max_new_tokens=4)
+        cl.step()
+        with_both = cl.sharded.merkle_root
+        cl.sharded.fold_out(1)
+        assert cl.sharded.merkle_root != with_both
+        assert [s for s, _ in cl.sharded.merkle_roots()] == [0]
+
+    def test_migration_carries_verifiable_transcript(self, smoke,
+                                                     prompts):
+        cl = _cluster(smoke, shards=2, max_slots=2, pages_per_slot=8,
+                      n_pages=8)
+        cl.submit(prompt=prompts[0], max_new_tokens=20)
+        cl.submit(prompt=prompts[1], max_new_tokens=2)
+        cl.submit(prompt=prompts[2], max_new_tokens=20)
+        cl.run()
+        assert cl.stats["migrations"] > 0
+        assert cl.migration_proofs
+        for entry in cl.migration_proofs:
+            proof = mkp.proof_from_dict(entry["proof"])
+            assert proof.shard == entry["to_shard"]
+            assert mkp.verify_proof(proof)     # dst-side, post-landing
+            assert entry["src_root"] != proof.root
+        assert cl.deferred_check()
+
+    def test_checkpoint_threads_and_reverifies_proofs(self, smoke,
+                                                      tmp_path, keys):
+        from repro.checkpoint.secure_ckpt import (CheckpointError,
+                                                  load_checkpoint,
+                                                  save_checkpoint)
+        eng = _engine(smoke)
+        rng = np.random.default_rng(17)
+        eng.submit(prompt=list(map(int, rng.integers(1, 256, 6))),
+                   max_new_tokens=8)
+        eng.step()
+        proof = eng.audit_proof()
+        tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8)}
+        path = save_checkpoint(str(tmp_path), 1, tree, keys,
+                               audit_proofs=[proof])
+        restored, manifest = load_checkpoint(path, tree, keys)
+        assert manifest["audit_proofs"]
+        stored = mkp.proof_from_dict(manifest["audit_proofs"][0])
+        assert mkp.verify_proof(stored, expected_root=proof.root)
+        # A tampered stored transcript fails the restore loudly.
+        import json
+        import os
+        mpath = os.path.join(path, "manifest.json")
+        with open(mpath) as f:
+            doc = json.load(f)
+        doc["audit_proofs"][0]["pages"][0]["mac"] = "00" * mkp.MAC_BYTES
+        with open(mpath, "w") as f:
+            json.dump(doc, f)
+        with pytest.raises(CheckpointError):
+            load_checkpoint(path, tree, keys)
